@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: timing, CSV output, workload sizes.
+
+All benchmarks print ``name,us_per_call,derived`` CSV rows (plus richer
+columns where a paper table needs them).  Sizes are scaled down by
+default so ``python -m benchmarks.run`` finishes on a 1-core CPU
+container; ``--full`` restores paper-scale batches.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall seconds per call (after warmup, block_until_ready aware)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        _block(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        _block(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _block(r):
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(r):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

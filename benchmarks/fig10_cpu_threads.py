@@ -1,0 +1,49 @@
+"""Paper Fig. 10: multicore-CPU baseline — thread-parallel vs sequential.
+
+The paper patched GLPK to be thread safe and ran one LP per OpenMP
+thread.  Stand-in: the NumPy oracle under a thread pool (NumPy releases
+the GIL inside BLAS; on this 1-core container the speedup ceiling is 1.0
+— the table still reports the paper's metric and scales on real hosts).
+"""
+
+from __future__ import annotations
+
+import os
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from repro.core import lp, oracle
+
+from .common import emit, time_fn
+
+
+def _threaded_solve(a, b, c, workers: int):
+    def one(i):
+        return oracle.solve_lp(a[i], b[i], c[i])
+
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        return list(pool.map(one, range(a.shape[0])))
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(10)
+    workers = os.cpu_count() or 1
+    cases = [(10, 400), (50, 200), (100, 100)] + ([(200, 100)] if full else [])
+    print(f"# fig10: name,us_per_call,dim,n_lps,workers,speedup_vs_seq  (host cores={workers})")
+    for n, cnt in cases:
+        lpb = lp.random_lp_batch(rng, cnt, n, n, True, dtype=np.float32)
+        a = np.asarray(lpb.a, np.float64)
+        b = np.asarray(lpb.b, np.float64)
+        c = np.asarray(lpb.c, np.float64)
+        t_seq = time_fn(lambda: oracle.solve_batch(a, b, c), warmup=0, iters=1)
+        t_par = time_fn(lambda: _threaded_solve(a, b, c, workers), warmup=0, iters=1)
+        emit(
+            f"fig10_threads_d{n}_n{cnt}",
+            t_par,
+            f"{n},{cnt},{workers},{t_seq / t_par:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

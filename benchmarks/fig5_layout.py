@@ -1,0 +1,98 @@
+"""Paper Fig. 5: memory-layout ablation (coalesced vs non-coalesced).
+
+GPU version: column-major vs row-major tableau -> 8.7-15.7x.
+TPU/XLA analogue: the lane-contiguity of the innermost axis.  We compare
+the batch-major tableau layout (B, m+1, q) — batch on the outermost axis,
+the layout the whole library uses, where every per-LP tableau op
+vectorizes across q on the minor axis — against a batch-minor layout
+(m+1, q, B) enforced per iteration via explicit transposes, which is what
+a mechanical port of the paper's "one block per LP" data layout would
+cost on an XLA backend.  Also times the Pallas whole-solve-in-VMEM kernel
+(interpret mode — functional check; its TPU benefit is argued in the
+roofline, EXPERIMENTS.md Sec. Perf-LP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lp, simplex
+
+from .common import emit, time_fn
+
+
+def _solve_batch_minor(a, b, c, max_iters: int):
+    """Reference simplex but with the tableau stored batch-minor."""
+    tab, basis, phase = lp.build_tableau(a, b, c)
+    tab = jnp.transpose(tab, (1, 2, 0))  # (m+1, q, B)
+
+    bsz = a.shape[0]
+    m = a.shape[1]
+    n = a.shape[2]
+    tol = 1e-5
+
+    def body(state):
+        tab, basis, status, it = state
+        tb = jnp.transpose(tab, (2, 0, 1))  # back to batch-major per step
+        obj = tb[:, m, :]
+        elig = jnp.zeros((tab.shape[1],), bool).at[1 : 1 + n + m].set(True)
+        cand = jnp.where(elig[None], obj, -jnp.inf)
+        e = jnp.argmax(cand, axis=-1)
+        max_c = jnp.take_along_axis(cand, e[:, None], -1)[:, 0]
+        col = jnp.take_along_axis(tb[:, :m, :], e[:, None, None], -1)[..., 0]
+        ratios = jnp.where(col > tol, tb[:, :m, 0] / jnp.maximum(col, tol), 1e30)
+        l = jnp.argmin(ratios, -1)
+        pr = jnp.take_along_axis(tb, l[:, None, None], 1)[:, 0, :]
+        pe = jnp.take_along_axis(pr, e[:, None], -1)
+        npr = pr / jnp.where(jnp.abs(pe) > tol, pe, 1.0)
+        fc = jnp.take_along_axis(tb, e[:, None, None], -1)[..., 0]
+        upd = tb - fc[:, :, None] * npr[:, None, :]
+        sel = (jnp.arange(m + 1)[None, :] == l[:, None])[:, :, None]
+        upd = jnp.where(sel, npr[:, None, :], upd)
+        active = (status == 0) & (max_c > tol)
+        tb = jnp.where(active[:, None, None], upd, tb)
+        status = jnp.where((status == 0) & (max_c <= tol), 1, status)
+        return jnp.transpose(tb, (1, 2, 0)), basis, status, it + 1
+
+    def cond(state):
+        _, _, status, it = state
+        return (it < max_iters) & jnp.any(status == 0)
+
+    status0 = jnp.zeros((bsz,), jnp.int32)
+    tab, _, status, _ = jax.lax.while_loop(
+        cond, body, (tab, basis, status0, jnp.int32(0))
+    )
+    return -tab[m, 0, :]
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(5)
+    dims = [10, 50, 100] + ([200] if full else [])
+    bsz = 1000 if full else 200
+    print("# fig5: name,us_per_call,dim,batch,layout,speedup_vs_batch_minor")
+    for n in dims:
+        lpb = lp.random_lp_batch(rng, bsz, n, n, feasible_start=True, dtype=np.float32)
+        max_iters = 50 * 2 * n
+
+        t_major = time_fn(
+            lambda: simplex.solve_batched(lpb.a, lpb.b, lpb.c, max_iters=max_iters)
+        )
+        minor = jax.jit(lambda a, b, c: _solve_batch_minor(a, b, c, max_iters))
+        t_minor = time_fn(lambda: minor(lpb.a, lpb.b, lpb.c))
+        emit(f"fig5_layout_d{n}_batch_major", t_major, f"{n},{bsz},batch-major,{t_minor / t_major:.2f}")
+        emit(f"fig5_layout_d{n}_batch_minor", t_minor, f"{n},{bsz},batch-minor,1.00")
+
+        if n <= 50:  # Pallas kernel (interpret) — correctness-grade timing
+            from repro.kernels import ops as kops
+
+            small = lp.LPBatch(lpb.a[:16], lpb.b[:16], lpb.c[:16])
+            t_pallas = time_fn(
+                lambda: kops.simplex_solve(small.a, small.b, small.c), iters=1
+            )
+            emit(f"fig5_layout_d{n}_pallas_interpret", t_pallas, f"{n},16,vmem-resident,")
+
+
+if __name__ == "__main__":
+    run()

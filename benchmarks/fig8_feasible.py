@@ -1,0 +1,58 @@
+"""Paper Fig. 8: batched LP solve time vs batch size, feasible start.
+
+Batched JAX (XLA-CPU) solver vs sequential NumPy oracle (the GLPK
+stand-in), LPC pivot rule; also reports RPC and the lockstep-overhead
+ratio (max batch iterations / mean iterations) that the masked SIMD
+formulation pays relative to per-LP early exit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import lp, oracle, simplex
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    dims = [5, 28, 50, 100] + ([200, 300] if full else [])
+    batches = [100, 1000, 10000] if full else [50, 200, 1000]
+    rng = np.random.default_rng(42)
+    print("# fig8: name,us_per_call,batch,dim,speedup_vs_seq,lockstep_overhead,rule")
+    for n in dims:
+        for bsz in batches:
+            lpb = lp.random_lp_batch(rng, bsz, n, n, feasible_start=True, dtype=np.float32)
+            a64 = np.asarray(lpb.a, np.float64)
+            b64 = np.asarray(lpb.b, np.float64)
+            c64 = np.asarray(lpb.c, np.float64)
+
+            t_batched = time_fn(
+                lambda: simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=simplex.LPC)
+            )
+            # sequential baseline: time a slice and extrapolate for big batches
+            probe = min(bsz, 200)
+            t_probe = time_fn(
+                lambda: oracle.solve_batch(a64[:probe], b64[:probe], c64[:probe]),
+                warmup=0, iters=1,
+            )
+            t_seq = t_probe * bsz / probe
+            sol = simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+            iters = np.asarray(sol.iterations)
+            overhead = float(iters.max() / max(iters.mean(), 1.0))
+            emit(
+                f"fig8_feasible_d{n}_b{bsz}",
+                t_batched,
+                f"{bsz},{n},{t_seq / t_batched:.2f},{overhead:.2f},lpc",
+            )
+        # RPC comparison at one batch size per dim (paper Sec. 4.6)
+        bsz = batches[-1]
+        lpb = lp.random_lp_batch(rng, bsz, n, n, feasible_start=True, dtype=np.float32)
+        t_rpc = time_fn(
+            lambda: simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=simplex.RPC)
+        )
+        emit(f"fig8_feasible_d{n}_b{bsz}_rpc", t_rpc, f"{bsz},{n},,,rpc")
+
+
+if __name__ == "__main__":
+    run()

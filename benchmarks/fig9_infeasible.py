@@ -1,0 +1,41 @@
+"""Paper Fig. 9: two-phase (infeasible initial basis) batched LP sweep."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import lp, oracle, simplex
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    dims = [5, 10, 25] + ([50, 100] if full else [])
+    batches = [100, 1000, 10000] if full else [50, 200, 1000]
+    rng = np.random.default_rng(43)
+    print("# fig9: name,us_per_call,batch,dim,speedup_vs_seq,phase1_share")
+    for n in dims:
+        m = 2 * n + 4  # box rows + extras (generator requirement m >= 2n)
+        for bsz in batches:
+            lpb = lp.random_lp_batch(rng, bsz, m, n, feasible_start=False, dtype=np.float32)
+            a64 = np.asarray(lpb.a, np.float64)
+            b64 = np.asarray(lpb.b, np.float64)
+            c64 = np.asarray(lpb.c, np.float64)
+            t_batched = time_fn(
+                lambda: simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+            )
+            probe = min(bsz, 200)
+            t_probe = time_fn(
+                lambda: oracle.solve_batch(a64[:probe], b64[:probe], c64[:probe]),
+                warmup=0, iters=1,
+            )
+            t_seq = t_probe * bsz / probe
+            emit(
+                f"fig9_infeasible_d{n}_b{bsz}",
+                t_batched,
+                f"{bsz},{n},{t_seq / t_batched:.2f},two-phase",
+            )
+
+
+if __name__ == "__main__":
+    run()

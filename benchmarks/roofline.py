@@ -1,0 +1,124 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+Per (arch x shape x mesh):
+    compute term    = dot_FLOPs / peak_FLOP/s          (per chip, bf16)
+    memory term     = traffic_bytes / HBM_bw           (per chip)
+    collective term = collective_bytes / link_bw       (per chip wire bytes)
+with TPU v5e constants (197 TF, 819 GB/s, 50 GB/s/link).  All inputs are
+per-device numbers from the loop-aware HLO analysis (hlo_stats.py) — the
+formula ``global_bytes / (chips x bw)`` reduces to per-chip / bw.
+
+Also reports MODEL_FLOPS = 6*N(_active)*tokens (x3 for train fwd+bwd
+already folded into the 6; decode counts 2*N per token) against the HLO
+dot flops — the useful-compute ratio that catches remat/padding waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    """Analytic useful flops per device per executed step."""
+    n_active = rec["active_param_count"]
+    chips = rec["n_chips"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * rec["global_batch"] / chips
+
+
+def load_records(results_dir: Optional[str] = None) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir or RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    t_comp = rec["hlo_dot_flops_per_device"] / PEAK
+    t_mem = rec["hlo_traffic_bytes_per_device"] / HBM
+    t_coll = rec["collective_bytes_per_device"]["total"] / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / rec["hlo_dot_flops_per_device"] if rec["hlo_dot_flops_per_device"] else 0.0
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_ratio": useful,
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "hbm_gb": rec["memory"]["temp_size_in_bytes"] / 1e9
+        + rec["memory"]["argument_size_in_bytes"] / 1e9,
+    }
+
+
+def run(full: bool = False, results_dir: Optional[str] = None):
+    print("# roofline: name,us_per_call,mesh,compute_s,memory_s,collective_s,"
+          "bottleneck,model_flops_ratio,roofline_frac")
+    rows = []
+    for rec in load_records(results_dir):
+        a = analyze_record(rec)
+        if a is None:
+            continue
+        rows.append(a)
+        bound = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+        print(
+            f"roofline_{a['arch']}_{a['shape']}_{a['mesh']},{bound * 1e6:.1f},"
+            f"{a['mesh']},{a['t_compute_s']:.4g},{a['t_memory_s']:.4g},"
+            f"{a['t_collective_s']:.4g},{a['bottleneck']},"
+            f"{a['model_flops_ratio']:.3f},{a['roofline_fraction']:.3f}"
+        )
+    if not rows:
+        print("roofline_no_records,0,run launch/dryrun first")
+    return rows
+
+
+def markdown_table(results_dir: Optional[str] = None) -> str:
+    """EXPERIMENTS.md-ready table."""
+    rows = []
+    for rec in load_records(results_dir):
+        a = analyze_record(rec)
+        if a is None:
+            mesh = "2x16x16" if rec.get("multi_pod") else "16x16"
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {mesh} | — | — | — | "
+                f"{rec.get('status','?')} | — | — |"
+            )
+            continue
+        rows.append(
+            "| {arch} | {shape} | {mesh} | {t_compute_s:.4f} | {t_memory_s:.4f} | "
+            "{t_collective_s:.4f} | {bottleneck} | {model_flops_ratio:.2f} | "
+            "{roofline_fraction:.2f} |".format(**a)
+        )
+    head = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | 6ND/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Table 1: hyperbox LP solver vs the general sequential solver.
+
+Five-dim model and 28-dim helicopter-controller direction workloads;
+closed-form batched solver (XLA) vs sequential NumPy simplex on the
+equivalent box polytope (the GLPK stand-in), plus the Pallas streaming
+kernel in interpret mode for functional parity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import lp, oracle
+from repro.core.hyperbox import support
+from repro.core.support import Box, box_to_polytope
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(11)
+    cases = [("five_dim", 5, 100_050), ("helicopter", 28, 56_056)]
+    if full:
+        cases += [("five_dim", 5, 2_001_000), ("helicopter", 28, 2_002_000)]
+    print("# table1: name,us_per_call,dim,n_lps,speedup_vs_seq_simplex,lps_per_sec")
+    for tag, dim, n_lps in cases:
+        lo = rng.uniform(-1, 0, dim).astype(np.float32)
+        hi = (lo + rng.uniform(0.5, 2, dim)).astype(np.float32)
+        dirs = rng.normal(size=(n_lps, dim)).astype(np.float32)
+
+        t_box = time_fn(lambda: support(lo, hi, dirs))
+
+        # sequential general-simplex baseline, extrapolated from a probe
+        poly = box_to_polytope(Box(lo, hi))
+        probe = 200
+        a = np.broadcast_to(np.concatenate([poly.a, -poly.a], 1), (probe, 2 * dim, 2 * dim)).astype(np.float64)
+        b = np.broadcast_to(poly.b, (probe, 2 * dim)).astype(np.float64)
+        c = np.concatenate([dirs[:probe], -dirs[:probe]], 1).astype(np.float64)
+        t_probe = time_fn(lambda: oracle.solve_batch(a, b, c), warmup=0, iters=1)
+        t_seq = t_probe * n_lps / probe
+        emit(
+            f"table1_hyperbox_{tag}_n{n_lps}",
+            t_box,
+            f"{dim},{n_lps},{t_seq / t_box:.1f},{n_lps / t_box:.0f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

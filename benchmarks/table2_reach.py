@@ -1,0 +1,59 @@
+"""Paper Table 2: XSpeed-style reachability end-to-end with batched LPs.
+
+Times the support-function reachability run (5-dim model + 28-dim
+helicopter stand-in) with (a) the batched hyperbox path, (b) the batched
+general-simplex path, and (c) the sequential NumPy baseline — the paper's
+Par(GPU) / Seq / SpaceEx triple.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import oracle, reach
+from repro.core.solver import BatchedLPSolver
+from repro.core.support import box_to_polytope, template_directions
+
+from .common import emit, time_fn
+
+
+def _seq_baseline_time(sys_, dirs, steps):
+    """Sequential solve of the same support LPs with the NumPy oracle."""
+    import scipy.linalg
+
+    poly = box_to_polytope(sys_.x0)
+    phi = scipy.linalg.expm(sys_.a * 0.02)
+    flat = reach._direction_tableau(phi, dirs.astype(np.float64), steps).reshape(-1, sys_.dim)
+    probe = min(200, flat.shape[0])
+    a = np.broadcast_to(
+        np.concatenate([poly.a, -poly.a], 1), (probe, poly.a.shape[0], 2 * sys_.dim)
+    )
+    b = np.broadcast_to(poly.b, (probe, poly.b.shape[0]))
+    c = np.concatenate([flat[:probe], -flat[:probe]], 1)
+    t = time_fn(lambda: oracle.solve_batch(a, b, c), warmup=0, iters=1)
+    return t * flat.shape[0] / probe
+
+
+def run(full: bool = False):
+    steps = 200 if full else 50
+    print("# table2: name,us_per_call,model,n_lps,path,speedup_vs_seq")
+    for tag, sys_ in (("five_dim", reach.five_dim_model()), ("helicopter", reach.helicopter_model())):
+        dirs = template_directions(sys_.dim, "oct" if sys_.dim <= 8 else "box")
+        n_lps = reach.count_lps(steps, len(dirs), point_input=True)
+
+        t_box = time_fn(
+            lambda: reach.reach_supports(sys_, 0.02, steps, directions=dirs), iters=1
+        )
+        t_gen = time_fn(
+            lambda: reach.reach_supports(
+                sys_, 0.02, steps, directions=dirs, use_hyperbox=False
+            ),
+            iters=1,
+        )
+        t_seq = _seq_baseline_time(sys_, dirs, steps)
+        emit(f"table2_reach_{tag}_hyperbox", t_box, f"{tag},{n_lps},hyperbox,{t_seq / t_box:.1f}")
+        emit(f"table2_reach_{tag}_simplex", t_gen, f"{tag},{n_lps},simplex,{t_seq / t_gen:.1f}")
+
+
+if __name__ == "__main__":
+    run()

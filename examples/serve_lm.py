@@ -1,0 +1,47 @@
+"""Batched LM serving example: prefill + greedy decode with a KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b --steps 16
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.steps
+    engine = Engine(model, params, max_len=max_len,
+                    enc_len=args.prompt_len if cfg.family == "encdec" else 0)
+
+    rng = np.random.default_rng(0)
+    inputs = {"tokens": rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)}
+    if cfg.family == "encdec":
+        inputs["frames"] = rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
+
+    t0 = time.perf_counter()
+    out = engine.generate(inputs, steps=args.steps)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.steps
+    print(f"{args.arch} (reduced): generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print("sample continuation ids:", np.asarray(out[0][:12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: batched linear-program solving as a first-class accelerator workload.
+
+JAX reproduction + TPU adaptation of
+"Solving Batched Linear Programs on GPU and Multicore CPU" (Gurung & Ray, 2016),
+embedded in a production-grade multi-pod training/serving framework.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,186 @@
+"""Sharded checkpointing: npz payload + JSON manifest, async, elastic.
+
+Layout (one directory per step):
+    <dir>/step_000120/manifest.json   tree structure, shapes, dtypes
+    <dir>/step_000120/arrays.npz      flat leaf arrays (host-gathered)
+    <dir>/LATEST                      atomic pointer to the newest step
+
+Elastic restore: arrays are saved layout-free and re-placed with
+``jax.device_put`` against whatever shardings the *restoring* job asks
+for — a checkpoint taken on a 512-chip mesh restores onto any mesh
+(including 1-device CPU) as long as the tree structure matches.
+
+Fault tolerance: writes go to a temp dir then ``os.rename`` (atomic on
+POSIX); LATEST is updated last, so a job killed mid-write never corrupts
+the restore path.  The async writer runs on a daemon thread; ``wait()``
+drains it (called before intentional exit and by tests).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot store ml_dtypes (bfloat16, fp8) — persist as bit-equal uint views.
+_BITCAST = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _to_storable(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _BITCAST:
+        return arr.view(_BITCAST[name][0]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _BITCAST:
+        return arr.view(_BITCAST[dtype_name][1])
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous checkpoint write. Returns the step directory."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    final = os.path.join(directory, name)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    meta = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        stored, dtype_name = _to_storable(arr)
+        arrays[f"a{i}"] = stored
+        meta.append({"shape": list(arr.shape), "dtype": dtype_name})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    # Tree structure is re-supplied by the restoring job (`like`), which is
+    # what makes restores elastic; the manifest only carries leaf metadata.
+    manifest = {"step": step, "num_leaves": len(leaves), "leaves": meta}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):  # re-save of the same step (e.g. resume tail)
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+    os.rename(latest_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    path = os.path.join(directory, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (pytree of arrays or SDS).
+
+    shardings: optional matching pytree of shardings for elastic re-placement.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(final, "arrays.npz"))
+    leaves_like, treedef = _flatten(like)
+    assert len(leaves_like) == len(manifest["leaves"]), "tree structure mismatch"
+    sh_leaves = (
+        jax.tree_util.tree_flatten(shardings, is_leaf=lambda x: x is None)[0]
+        if shardings is not None
+        else [None] * len(leaves_like)
+    )
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves_like, sh_leaves)):
+        arr = _from_storable(data[f"a{i}"], manifest["leaves"][i]["dtype"])
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape, i)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Daemon-thread writer; keeps at most ``keep`` checkpoints."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            step, tree = item
+            try:
+                save(self.directory, step, tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next submit/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            d for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    def submit(self, step: int, tree: Any):
+        if self._err:
+            raise self._err
+        # device_get NOW so the step can donate/overwrite buffers safely.
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=10)
+        if self._err:
+            raise self._err

@@ -1,0 +1,150 @@
+"""Architecture + workload registry.
+
+``get_config(arch_id, reduced=False)`` returns a ModelConfig for any of
+the ten assigned architectures; ``SHAPES`` defines the assigned
+input-shape set; ``input_specs(cfg, shape)`` builds ShapeDtypeStruct
+stand-ins for the dry-run (no allocation).  LP workloads (the paper's own
+benchmark set) are registered alongside under ``lp_*``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "mamba2-130m": "mamba2_130m",
+    "gemma2-2b": "gemma2_2b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "qwen1.5-4b": "qwen15_4b",
+    "internlm2-20b": "internlm2_20b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = tuple(SHAPES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f".{_ARCH_MODULES[arch]}", __package__)
+    return (mod.reduced() if reduced else mod.config()).validate()
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: Shape) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return "skip(full-attn)"  # noted in DESIGN.md
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *, sharding_fn=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    sharding_fn(shape_tuple, logical_axes) -> sharding | None lets the
+    dry-run attach shardings; defaults to none (smoke tests).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    mk = _mk_factory(sharding_fn)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            specs["frames"] = mk((b, s, cfg.d_model), cfg.dtype, ("batch", None, None))
+            specs["tokens"] = mk((b, s), "int32", ("batch", None))
+            specs["labels"] = mk((b, s), "int32", ("batch", None))
+        else:
+            specs["tokens"] = mk((b, s), "int32", ("batch", None))
+            specs["labels"] = mk((b, s), "int32", ("batch", None))
+            if cfg.frontend == "vision":
+                specs["patch_embeds"] = mk(
+                    (b, cfg.num_patches, cfg.d_model), cfg.dtype, ("batch", None, None)
+                )
+                specs["positions"] = mk((b, s, 3), "int32", ("batch", None, None))
+    elif shape.kind == "prefill":
+        if cfg.family == "encdec":
+            specs["frames"] = mk((b, s, cfg.d_model), cfg.dtype, ("batch", None, None))
+            specs["tokens"] = mk((b, s), "int32", ("batch", None))
+        else:
+            specs["tokens"] = mk((b, s), "int32", ("batch", None))
+            if cfg.frontend == "vision":
+                specs["patch_embeds"] = mk(
+                    (b, cfg.num_patches, cfg.d_model), cfg.dtype, ("batch", None, None)
+                )
+                specs["positions"] = mk((b, s, 3), "int32", ("batch", None, None))
+    elif shape.kind == "decode":
+        specs["tokens"] = mk((b, 1), "int32", ("batch", None))
+        if cfg.mrope_sections:
+            specs["positions"] = mk((b, 1, 3), "int32", ("batch", None, None))
+    return specs
+
+
+def _mk_factory(sharding_fn):
+    def mk(shape, dtype, axes):
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+        sh = sharding_fn(shape, axes)
+        if sh is None:
+            return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sh)
+
+    return mk
+
+
+def make_inputs(cfg: ModelConfig, shape: Shape, seed: int = 0):
+    """Concrete random inputs matching input_specs (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, sds in input_specs(cfg, shape).items():
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            if k == "positions":
+                base = np.arange(sds.shape[1])[None, :, None]
+                out[k] = jnp.asarray(
+                    np.broadcast_to(base, sds.shape).astype(np.int32)
+                )
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, size=sds.shape, dtype=np.int32)
+                )
+        else:
+            out[k] = jnp.asarray(rng.normal(size=sds.shape), sds.dtype)
+    return out
+
+
+# --- LP workloads (the paper's own benchmark set) ---------------------------
+
+LP_WORKLOADS = {
+    # name: (batch, m, n, feasible_start)
+    "lp_small_feasible": (10000, 28, 28, True),
+    "lp_100_feasible": (20000, 100, 100, True),
+    "lp_200_infeasible": (10000, 40, 20, False),
+    "lp_hyperbox_5d": (4_001_000, 5, 5, True),
+    "lp_hyperbox_28d": (6_003_000, 28, 28, True),
+}

@@ -1,0 +1,37 @@
+"""Core library: the paper's contribution — batched LP solving."""
+
+from .lp import (
+    INFEASIBLE,
+    ITER_LIMIT,
+    LPBatch,
+    LPSolution,
+    OPTIMAL,
+    RUNNING,
+    STATUS_NAMES,
+    UNBOUNDED,
+    build_tableau,
+    random_hyperbox_batch,
+    random_lp_batch,
+)
+from .simplex import BLAND, LPC, RPC, solve_batched
+from . import hyperbox, oracle
+
+__all__ = [
+    "LPBatch",
+    "LPSolution",
+    "OPTIMAL",
+    "UNBOUNDED",
+    "INFEASIBLE",
+    "ITER_LIMIT",
+    "RUNNING",
+    "STATUS_NAMES",
+    "build_tableau",
+    "random_lp_batch",
+    "random_hyperbox_batch",
+    "solve_batched",
+    "LPC",
+    "RPC",
+    "BLAND",
+    "hyperbox",
+    "oracle",
+]

@@ -1,0 +1,216 @@
+"""Batched LP containers and tableau construction.
+
+An LP batch is a struct-of-arrays over B independent LPs of identical shape:
+
+    maximize    c . x
+    subject to  A x <= b,   x >= 0
+
+with ``A: (B, m, n)``, ``b: (B, m)``, ``c: (B, n)``.
+
+The simplex tableau layout follows the paper (Sec. 3.1), with the two
+auxiliary columns folded in:
+
+    column 0                : b_i (bound column); objective row stores -z0
+    columns 1 .. n          : original variables x_j
+    columns n+1 .. n+m      : slack variables s_i
+    columns n+m+1 .. n+2m   : artificial variables a_i
+    row m (last)            : objective row (reduced costs; entering rule
+                              picks the max positive coefficient)
+
+Rows with b_i < 0 are negated so the RHS is non-negative and an artificial
+variable becomes basic there (two-phase start); rows with b_i >= 0 start
+with their slack basic.  Tableau construction happens device-side in jnp —
+only (A, b, c) cross host->device, which transfers O(m n) bytes per LP
+instead of the paper's O(m (n + 2m)) full-tableau copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Status codes shared by every solver in the library.
+RUNNING = 0
+OPTIMAL = 1
+UNBOUNDED = 2
+INFEASIBLE = 3
+ITER_LIMIT = 4
+
+STATUS_NAMES = {
+    RUNNING: "running",
+    OPTIMAL: "optimal",
+    UNBOUNDED: "unbounded",
+    INFEASIBLE: "infeasible",
+    ITER_LIMIT: "iter_limit",
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LPBatch:
+    """A batch of B identical-shape LPs: max c.x s.t. Ax <= b, x >= 0."""
+
+    a: jnp.ndarray  # (B, m, n)
+    b: jnp.ndarray  # (B, m)
+    c: jnp.ndarray  # (B, n)
+
+    @property
+    def batch(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.a.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[2]
+
+    def astype(self, dtype) -> "LPBatch":
+        return LPBatch(self.a.astype(dtype), self.b.astype(dtype), self.c.astype(dtype))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LPSolution:
+    """Result batch: objective, primal point, status, iterations used."""
+
+    objective: jnp.ndarray  # (B,)
+    x: jnp.ndarray  # (B, n)
+    status: jnp.ndarray  # (B,) int32, see STATUS_* above
+    iterations: jnp.ndarray  # (B,) int32
+
+
+def num_cols(m: int, n: int) -> int:
+    """Total tableau columns: b column + n vars + m slacks + m artificials."""
+    return 1 + n + 2 * m
+
+
+def build_tableau(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
+    """Construct the batched two-phase simplex tableau (device-side, jit-able).
+
+    Returns:
+      tab:    (B, m+1, q) tableau, q = 1 + n + 2m.  Objective row is the
+              phase-I reduced-cost row for LPs with any b_i < 0, else the
+              phase-II row (coefficients of c).
+      basis:  (B, m) int32 — column index of the basic variable per row.
+      phase:  (B,) int32 — 1 where phase I is required, else 2.
+    """
+    bsz, m, n = a.shape
+    q = num_cols(m, n)
+    dtype = a.dtype
+
+    neg = b < 0  # (B, m) rows needing an artificial
+    sgn = jnp.where(neg, -1.0, 1.0).astype(dtype)  # (B, m)
+
+    tab = jnp.zeros((bsz, m + 1, q), dtype)
+    # b column (made non-negative by row negation).
+    tab = tab.at[:, :m, 0].set(b * sgn)
+    # Original variable coefficients (negated rows flip sign).
+    tab = tab.at[:, :m, 1 : 1 + n].set(a * sgn[:, :, None])
+    # Slack columns: +1 normally, -1 on negated rows.
+    row_idx = jnp.arange(m)
+    tab = tab.at[:, row_idx, 1 + n + row_idx].set(sgn)
+    # Artificial columns: +1 only on negated rows.
+    tab = tab.at[:, row_idx, 1 + n + m + row_idx].set(jnp.where(neg, 1.0, 0.0).astype(dtype))
+
+    need_phase1 = jnp.any(neg, axis=1)  # (B,)
+
+    # Phase-II objective row: reduced costs = c (slack basis has cost 0).
+    obj2 = jnp.zeros((bsz, q), dtype).at[:, 1 : 1 + n].set(c)
+    # Phase-I objective row (maximize -sum of artificials): price out the
+    # basic artificials => obj1_j = sum over artificial rows of tab[i, j];
+    # column 0 then holds sum of RHS = -z0 >= 0, exactly the -z0 convention.
+    obj1 = jnp.sum(tab[:, :m, :] * neg[:, :, None].astype(dtype), axis=1)
+    # Artificial columns must never be entering; their own reduced cost
+    # after pricing is 0 at start, eligibility mask handles the rest.
+    obj = jnp.where(need_phase1[:, None], obj1, obj2)
+    tab = tab.at[:, m, :].set(obj)
+
+    # Initial basis: slack on normal rows, artificial on negated rows.
+    basis = jnp.where(neg, 1 + n + m + row_idx[None, :], 1 + n + row_idx[None, :])
+    basis = basis.astype(jnp.int32)
+    phase = jnp.where(need_phase1, 1, 2).astype(jnp.int32)
+    return tab, basis, phase
+
+
+def random_lp_batch(
+    rng: np.random.Generator,
+    batch: int,
+    m: int,
+    n: int,
+    feasible_start: bool = True,
+    dtype=np.float32,
+) -> LPBatch:
+    """Generate random bounded LPs in the style of the paper's benchmarks.
+
+    feasible_start=True  -> all b >= 0 (origin feasible; single-phase).
+    feasible_start=False -> a subset of constraints has b < 0 with row
+                            coefficients arranged so the LP stays feasible
+                            (x >= lo element-wise with box upper bounds),
+                            forcing the two-phase path like the paper's
+                            "infeasible initial basic solution" class.
+    """
+    if feasible_start:
+        a = rng.uniform(-1.0, 1.0, size=(batch, m, n))
+        # Diagonal-ish strengthening keeps the region bounded.
+        for j in range(min(m, n)):
+            a[:, j, j] = np.abs(a[:, j, j]) + 1.0
+        row_caps = rng.uniform(1.0, 10.0, size=(batch, m))
+        b = row_caps
+        c = rng.uniform(0.1, 1.0, size=(batch, n))
+        return LPBatch(
+            jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype)
+        )
+    # Infeasible start: box  lo <= x <= hi  with 0 < lo < hi, written as
+    #   x <= hi        (b >= 0)
+    #  -x <= -lo       (b < 0)   -> needs artificials
+    # plus random extra cover constraints to vary the active set.
+    n_eff = n
+    lo = rng.uniform(0.5, 1.0, size=(batch, n_eff))
+    hi = lo + rng.uniform(0.5, 2.0, size=(batch, n_eff))
+    extra = m - 2 * n_eff
+    if extra < 0:
+        raise ValueError(f"need m >= 2n for infeasible-start generator, got m={m} n={n}")
+    a = np.zeros((batch, m, n_eff))
+    b = np.zeros((batch, m))
+    eye = np.eye(n_eff)
+    a[:, :n_eff, :] = eye[None]
+    b[:, :n_eff] = hi
+    a[:, n_eff : 2 * n_eff, :] = -eye[None]
+    b[:, n_eff : 2 * n_eff] = -lo
+    if extra > 0:
+        w = np.abs(rng.uniform(0.1, 1.0, size=(batch, extra, n_eff)))
+        # Keep extras loose enough to preserve feasibility: w.hi + slack.
+        a[:, 2 * n_eff :, :] = w
+        b[:, 2 * n_eff :] = np.einsum("bkn,bn->bk", w, hi) + rng.uniform(
+            0.1, 1.0, size=(batch, extra)
+        )
+    c = rng.uniform(0.1, 1.0, size=(batch, n_eff))
+    return LPBatch(jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype))
+
+
+def random_hyperbox_batch(
+    rng: np.random.Generator,
+    batch: int,
+    n: int,
+    dtype=np.float32,
+):
+    """Random box bounds and direction vectors for the hyperbox solver.
+
+    Returns (lo, hi, directions) with lo <= hi, shapes (batch, n) each for
+    lo/hi broadcastable — the paper's Table 1 setup uses ONE box and many
+    directions; we allow both but default to per-LP boxes.
+    """
+    lo = rng.uniform(-2.0, 0.0, size=(batch, n))
+    hi = lo + rng.uniform(0.5, 3.0, size=(batch, n))
+    directions = rng.normal(size=(batch, n))
+    return (
+        jnp.asarray(lo, dtype),
+        jnp.asarray(hi, dtype),
+        jnp.asarray(directions, dtype),
+    )

@@ -1,0 +1,206 @@
+"""Public batched-LP solver API: chunking, device sharding, double-buffering.
+
+This is the library entry point an application uses (paper Sec. 4):
+
+    solver = BatchedLPSolver(rule="lpc")
+    sol = solver.solve(LPBatch(a, b, c))           # general simplex path
+    sup = solver.solve_hyperbox(lo, hi, dirs)      # closed-form path
+
+Responsibilities mirrored from the paper's CUDA library:
+  * split a megabatch into device-sized chunks (the paper's global-memory
+    capacity bound, eq. 5) — here the bound is chosen chunk_size;
+  * overlap host->device staging of chunk k+1 with the solve of chunk k
+    (the paper's CUDA streams; here: JAX async dispatch + early device_put);
+  * shard the batch dimension across a mesh's data axes when a mesh is
+    supplied (one LP never spans devices — same invariant as one LP per
+    CUDA block).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hyperbox as _hyperbox
+from . import simplex as _simplex
+from .lp import LPBatch, LPSolution
+
+
+def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
+    return LPSolution(
+        objective=jnp.concatenate([p.objective for p in parts]),
+        x=jnp.concatenate([p.x for p in parts]),
+        status=jnp.concatenate([p.status for p in parts]),
+        iterations=jnp.concatenate([p.iterations for p in parts]),
+    )
+
+
+class BatchedLPSolver:
+    """Batched LP solver with chunked, overlapped, mesh-aware dispatch."""
+
+    def __init__(
+        self,
+        rule: str = _simplex.LPC,
+        max_iters: int = 0,
+        chunk_size: Optional[int] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        batch_axes: Sequence[str] = ("data",),
+        backend: str = "xla",
+        unroll: int = 1,
+    ):
+        self.rule = rule
+        self.max_iters = max_iters
+        self.chunk_size = chunk_size
+        self.mesh = mesh
+        self.batch_axes = tuple(ax for ax in batch_axes if mesh and ax in mesh.axis_names)
+        self.backend = backend
+        self.unroll = unroll
+
+    # -- sharding helpers ---------------------------------------------------
+
+    def _batch_sharding(self, ndim: int):
+        if not self.mesh or not self.batch_axes:
+            return None
+        spec = [None] * ndim
+        spec[0] = self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(*spec)
+        )
+
+    def _stage(self, arr: jnp.ndarray) -> jnp.ndarray:
+        sh = self._batch_sharding(arr.ndim)
+        if sh is None:
+            return jax.device_put(arr)
+        return jax.device_put(arr, sh)
+
+    def _pad_batch(self, batch: LPBatch, multiple: int):
+        bsz = batch.batch
+        padded = math.ceil(bsz / multiple) * multiple
+        if padded == bsz:
+            return batch, bsz
+        pad = padded - bsz
+
+        def p(x):
+            widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+            return jnp.pad(x, widths, mode="edge")
+
+        return LPBatch(p(batch.a), p(batch.b), p(batch.c)), bsz
+
+    # -- general simplex path ----------------------------------------------
+
+    def solve(self, batch: LPBatch, seed: int = 0) -> LPSolution:
+        mesh_div = 1
+        if self.mesh and self.batch_axes:
+            mesh_div = int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+        batch, true_bsz = self._pad_batch(batch, max(mesh_div, 1))
+
+        if self.backend == "pallas":
+            from ..kernels import ops as kernel_ops
+
+            solve_fn = lambda a, b, c: kernel_ops.simplex_solve(
+                a, b, c, max_iters=self.max_iters
+            )
+        else:
+            solve_fn = lambda a, b, c: _simplex.solve_batched(
+                a,
+                b,
+                c,
+                rule=self.rule,
+                max_iters=self.max_iters,
+                seed=seed,
+                unroll=self.unroll,
+            )
+
+        bsz = batch.batch
+        chunk = self.chunk_size or bsz
+        chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
+        parts = []
+        # Stage chunk 0, then for each chunk: kick off the solve (async under
+        # XLA) and immediately stage chunk k+1 so transfer overlaps compute —
+        # the CUDA-streams discipline from paper Sec. 4.4.
+        staged = None
+        for lo in range(0, bsz, chunk):
+            hi = min(lo + chunk, bsz)
+            cur = staged or LPBatch(
+                self._stage(batch.a[lo:hi]),
+                self._stage(batch.b[lo:hi]),
+                self._stage(batch.c[lo:hi]),
+            )
+            out = solve_fn(cur.a, cur.b, cur.c)
+            nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
+            staged = (
+                LPBatch(
+                    self._stage(batch.a[nxt_lo:nxt_hi]),
+                    self._stage(batch.b[nxt_lo:nxt_hi]),
+                    self._stage(batch.c[nxt_lo:nxt_hi]),
+                )
+                if nxt_lo < bsz
+                else None
+            )
+            parts.append(out)
+        sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
+        if true_bsz != bsz:
+            sol = LPSolution(
+                objective=sol.objective[:true_bsz],
+                x=sol.x[:true_bsz],
+                status=sol.status[:true_bsz],
+                iterations=sol.iterations[:true_bsz],
+            )
+        return sol
+
+    def solve_adaptive(self, batch: LPBatch, first_cap: int = 0, seed: int = 0) -> LPSolution:
+        """Two-pass lockstep solve: early-exit analogue for SIMD batching.
+
+        A CUDA block retires as soon as its LP converges; lockstep batching
+        instead drags every LP to the slowest one's iteration count.  Pass 1
+        caps iterations at ~2x the *median* need (first_cap, default
+        8*(m+n)); the few LPs hitting ITER_LIMIT are compacted into a small
+        second batch and re-solved with the full cap.  Bounded re-work,
+        most of the batch stops early — EXPERIMENTS.md §Perf-LP.
+        """
+        m, n = batch.m, batch.n
+        if first_cap <= 0:
+            first_cap = 8 * (m + n)
+        # pass 1 (respect chunking/backend via a capped clone of self)
+        capped = BatchedLPSolver(
+            rule=self.rule, max_iters=first_cap, chunk_size=self.chunk_size,
+            mesh=self.mesh, batch_axes=self.batch_axes, backend=self.backend,
+            unroll=self.unroll,
+        )
+        sol1 = capped.solve(batch, seed=seed)
+        status = np.asarray(sol1.status)
+        unfinished = np.nonzero(status == 4)[0]  # ITER_LIMIT
+        if unfinished.size == 0:
+            return sol1
+        idx = jnp.asarray(unfinished)
+        sub = LPBatch(batch.a[idx], batch.b[idx], batch.c[idx])
+        sol2 = self.solve(sub, seed=seed)
+        return LPSolution(
+            objective=sol1.objective.at[idx].set(sol2.objective),
+            x=sol1.x.at[idx].set(sol2.x),
+            status=sol1.status.at[idx].set(sol2.status),
+            iterations=sol1.iterations.at[idx].set(sol2.iterations + first_cap),
+        )
+
+    # -- hyperbox path -------------------------------------------------------
+
+    def solve_hyperbox(self, lo, hi, directions) -> LPSolution:
+        if self.backend == "pallas":
+            from ..kernels import ops as kernel_ops
+
+            obj = kernel_ops.hyperbox_support(lo, hi, directions)
+            bsz = obj.shape[0]
+            pick = jnp.where(directions < 0, lo, hi)
+            return LPSolution(
+                objective=obj,
+                x=pick,
+                status=jnp.full((bsz,), 1, jnp.int32),
+                iterations=jnp.zeros((bsz,), jnp.int32),
+            )
+        return _hyperbox.solve_batched(
+            self._stage(lo), self._stage(hi), self._stage(directions)
+        )

@@ -1,0 +1,110 @@
+"""Support-function sampling of convex sets (paper Sec. 7).
+
+A support function of a convex set Omega takes a direction l and returns
+max_{x in Omega} l.x.  Converting a support-function representation to a
+polytope representation means sampling it in K template directions — each
+sample is a small LP.  Reachability tools (SpaceEx / XSpeed) issue millions
+of these; this module turns them into LPBatches for the batched solver.
+
+Sets here may contain points with negative coordinates, so the general
+path splits x = x+ - x- (doubling variables) to reach the solver's
+standard form (x >= 0).  Boxes bypass the simplex entirely (paper Sec. 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hyperbox as _hyperbox
+from .lp import LPBatch
+from .solver import BatchedLPSolver
+
+
+@dataclasses.dataclass(frozen=True)
+class Box:
+    lo: np.ndarray  # (n,)
+    hi: np.ndarray  # (n,)
+
+    @property
+    def dim(self) -> int:
+        return int(np.asarray(self.lo).shape[-1])
+
+    def support(self, directions, solver: Optional[BatchedLPSolver] = None):
+        """rho_B(l) for each row of directions: (K, n) -> (K,)."""
+        directions = jnp.asarray(directions)
+        lo = jnp.broadcast_to(jnp.asarray(self.lo), directions.shape)
+        hi = jnp.broadcast_to(jnp.asarray(self.hi), directions.shape)
+        if solver is not None and solver.backend == "pallas":
+            return solver.solve_hyperbox(lo, hi, directions).objective
+        return _hyperbox.support(lo, hi, directions)
+
+
+@dataclasses.dataclass(frozen=True)
+class Polytope:
+    """{x : Ax <= b} with x free (not sign-restricted)."""
+
+    a: np.ndarray  # (m, n)
+    b: np.ndarray  # (m,)
+
+    @property
+    def dim(self) -> int:
+        return int(np.asarray(self.a).shape[-1])
+
+    def to_lp_batch(self, directions) -> LPBatch:
+        """One LP per direction via the x = x+ - x- split."""
+        directions = np.asarray(directions)
+        k, n = directions.shape
+        a = np.asarray(self.a)
+        b = np.asarray(self.b)
+        a_split = np.concatenate([a, -a], axis=1)  # (m, 2n)
+        a_b = np.broadcast_to(a_split, (k, *a_split.shape))
+        b_b = np.broadcast_to(b, (k, b.shape[0]))
+        c_b = np.concatenate([directions, -directions], axis=1)  # (k, 2n)
+        dtype = directions.dtype
+        return LPBatch(
+            jnp.asarray(a_b, dtype), jnp.asarray(b_b, dtype), jnp.asarray(c_b, dtype)
+        )
+
+    def support(self, directions, solver: Optional[BatchedLPSolver] = None):
+        solver = solver or BatchedLPSolver()
+        sol = solver.solve(self.to_lp_batch(directions))
+        return sol.objective
+
+
+def box_to_polytope(box: Box) -> Polytope:
+    n = box.dim
+    eye = np.eye(n)
+    a = np.concatenate([eye, -eye], axis=0)
+    b = np.concatenate([np.asarray(box.hi), -np.asarray(box.lo)])
+    return Polytope(a, b)
+
+
+def template_directions(dim: int, kind: str = "box") -> np.ndarray:
+    """Template direction sets used by reachability tools.
+
+    kind: "box" (2d axis directions), "oct" (octagonal: axes + pairwise
+    +-ei +-ej combinations), or "uniform:<K>" (K pseudo-random unit dirs).
+    """
+    eye = np.eye(dim)
+    if kind == "box":
+        return np.concatenate([eye, -eye], axis=0)
+    if kind == "oct":
+        dirs = [eye, -eye]
+        for i in range(dim):
+            for j in range(i + 1, dim):
+                for si in (1.0, -1.0):
+                    for sj in (1.0, -1.0):
+                        v = np.zeros(dim)
+                        v[i], v[j] = si, sj
+                        dirs.append(v[None])
+        return np.concatenate(dirs, axis=0)
+    if kind.startswith("uniform:"):
+        k = int(kind.split(":", 1)[1])
+        rng = np.random.default_rng(7)
+        d = rng.normal(size=(k, dim))
+        return d / np.linalg.norm(d, axis=1, keepdims=True)
+    raise ValueError(f"unknown template kind {kind!r}")

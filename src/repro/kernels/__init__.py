@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+simplex_pallas: whole-solve-in-VMEM batched two-phase simplex.
+hyperbox_pallas: streaming box-LP support kernel.
+ops: jitted wrappers (padding/tiling/interpret fallback).
+ref: pure-jnp oracles.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

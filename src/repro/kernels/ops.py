@@ -1,0 +1,118 @@
+"""Jitted wrappers for the Pallas kernels: padding, tiling, CPU fallback.
+
+``interpret`` defaults to True off-TPU so the kernels execute (and are
+tested) on CPU; on a TPU backend the same calls compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.lp import LPSolution, build_tableau, num_cols
+from .hyperbox_pallas import hyperbox_pallas
+from .simplex_pallas import simplex_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "tile_b", "interpret")
+)
+def simplex_solve(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    max_iters: int = 0,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+) -> LPSolution:
+    """Solve a batch of LPs with the VMEM-resident Pallas kernel.
+
+    a: (B, m, n), b: (B, m), c: (B, n); returns LPSolution like the core
+    solver.  Batch is padded to a tile multiple; tableau columns pad to the
+    128-lane boundary; rows pad to the 8-sublane boundary.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, m, n = a.shape
+    if max_iters <= 0:
+        max_iters = 50 * (m + n)
+    q = num_cols(m, n)
+    dtype = a.dtype
+
+    tab, basis, phase = build_tableau(a, b, c)
+
+    qp = _round_up(q, 128)
+    m1p = _round_up(m + 1, 8)
+    mp = _round_up(m, 8)
+    np_pad = _round_up(n, 128)
+    bp = _round_up(bsz, tile_b)
+
+    tab_p = jnp.zeros((bp, m1p, qp), dtype)
+    # Keep the objective row at index m (kernel uses static m); padding rows
+    # sit AFTER it and stay zero (never selected: their pivot column is 0).
+    tab_p = tab_p.at[:bsz, : m + 1, :q].set(tab)
+    basis_p = jnp.zeros((bp, mp), jnp.int32).at[:bsz, :m].set(basis)
+    # Padded batch entries: trivially optimal empty LPs (phase 2, zero obj).
+    phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(phase)
+    c_ext = jnp.zeros((bp, qp), dtype).at[:bsz, 1 : 1 + n].set(c)
+
+    obj, x, status, iters = simplex_pallas(
+        tab_p,
+        basis_p,
+        phase_p,
+        c_ext,
+        m=m,
+        n=n,
+        q=q,
+        n_padded=np_pad,
+        max_iters=max_iters,
+        tile_b=tile_b,
+        tol=1e-9 if dtype == jnp.float64 else 1e-5,
+        interpret=interpret,
+    )
+    neg_inf = jnp.asarray(-jnp.inf, dtype)
+    objective = jnp.where(status[:bsz] == 1, obj[:bsz], neg_inf)
+    return LPSolution(
+        objective=objective,
+        x=x[:bsz, :n],
+        status=status[:bsz],
+        iterations=iters[:bsz],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def hyperbox_support(
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    directions: jnp.ndarray,
+    tile_b: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Box support values via the streaming Pallas kernel. (B, n) -> (B,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, n = directions.shape
+    lo = jnp.broadcast_to(lo, directions.shape)
+    hi = jnp.broadcast_to(hi, directions.shape)
+    np_pad = _round_up(n, 128)
+    tile = min(tile_b, _round_up(bsz, 8))
+    bp = _round_up(bsz, tile)
+
+    def pad(x):
+        return jnp.zeros((bp, np_pad), x.dtype).at[:bsz, :n].set(x)
+
+    out = hyperbox_pallas(
+        pad(lo), pad(hi), pad(directions), n=n, tile_b=tile, interpret=interpret
+    )
+    return out[:bsz]

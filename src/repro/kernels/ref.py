@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each kernel's reference implements the same math with plain jax.numpy so
+the kernels can be validated with assert_allclose in interpret mode (and
+on real TPUs).  The simplex reference reuses the lockstep core solver —
+identical pivot rule (LPC), masking, and two-phase handling — so agreement
+is expected to float-determinism levels, not just qualitatively.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import simplex as _simplex
+from ..core.lp import LPSolution
+
+
+def simplex_ref(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, max_iters: int = 0) -> LPSolution:
+    """Reference batched simplex (LPC rule) on (B,m,n)/(B,m)/(B,n)."""
+    return _simplex.solve_batched(a, b, c, rule=_simplex.LPC, max_iters=max_iters)
+
+
+def hyperbox_ref(lo: jnp.ndarray, hi: jnp.ndarray, directions: jnp.ndarray) -> jnp.ndarray:
+    """Reference box support: sum_i d_i * (lo_i if d_i < 0 else hi_i)."""
+    pick = jnp.where(directions < 0, lo, hi)
+    return jnp.sum(directions * pick, axis=-1)

@@ -1,0 +1,203 @@
+"""Pallas TPU kernel: whole-solve-in-VMEM batched simplex.
+
+TPU adaptation of the paper's memory-coalescing design (Sec. 4.3).  On the
+GPU the tableau streams from global memory every iteration and the win is
+*coalescing* those accesses.  On TPU the same algorithm is memory-bound at
+~0.5 FLOP/byte if the tableau lives in HBM, so the kernel goes one step
+further: a tile of TB complete tableaus is mapped into VMEM via BlockSpec
+and the ENTIRE two-phase simplex loop runs inside the kernel — per-
+iteration HBM traffic is zero, and the effective roofline moves from HBM
+bandwidth (819 GB/s) to VMEM bandwidth (~an order of magnitude higher).
+
+Layout: (TB, m+1, q_padded) per block with q padded to the 128-lane
+boundary — the batch dim is the paper's "column-major" axis reborn: every
+element-wise tableau op is contiguous across lanes.
+
+All per-LP control flow (pivot choice, phase switch, termination) is
+branch-free and masked, mirroring the paper's INT_MAX trick for the
+min-ratio reduction; gathers are expressed as one-hot multiply-reductions,
+which lower to VPU-friendly selects on Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.lp import INFEASIBLE, ITER_LIMIT, OPTIMAL, RUNNING, UNBOUNDED
+
+_BIG = 1e30
+
+
+def _kernel(
+    tab_ref,  # (TB, M1p, Qp) f32 VMEM — prebuilt tableau (padded)
+    basis_ref,  # (TB, Mp) i32 VMEM
+    phase_ref,  # (TB,) i32 VMEM
+    cext_ref,  # (TB, Qp) f32 VMEM — phase-II costs
+    obj_ref,  # out (TB,) f32
+    x_ref,  # out (TB, Np) f32
+    status_ref,  # out (TB,) i32
+    iters_ref,  # out (TB,) i32
+    *,
+    m: int,
+    n: int,
+    q: int,
+    max_iters: int,
+    tol: float,
+):
+    tb = tab_ref.shape[0]
+    qp = tab_ref.shape[2]
+
+    tab = tab_ref[...]
+    basis = basis_ref[...][:, :m]
+    phase = phase_ref[...]
+    c_ext = cext_ref[...]
+
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (1, qp), 1)  # (1, Qp)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)  # (1, m)
+    elig = (col_ids >= 1) & (col_ids < 1 + n + m)  # (1, Qp) — b/artificial cols never enter
+
+    b_scale = jnp.maximum(1.0, jnp.max(tab[:, :m, 0], axis=-1))  # (TB,)
+    feas_tol = 1e-5 * b_scale
+
+    def body(state):
+        tab, basis, phase, status, iters, step = state
+        active = status == RUNNING
+
+        obj_row = tab[:, m, :]  # (TB, Qp)
+        cand = jnp.where(elig, obj_row, -_BIG)
+        e = jnp.argmax(cand, axis=-1).astype(jnp.int32)  # (TB,)
+        max_c = jnp.max(cand, axis=-1)
+        at_opt = max_c <= tol
+
+        # ---- phase bookkeeping (branch-free) -----------------------------
+        p1_done = active & at_opt & (phase == 1)
+        feasible = tab[:, m, 0] <= feas_tol
+        to_phase2 = p1_done & feasible
+        status = jnp.where(p1_done & ~feasible, INFEASIBLE, status)
+        status = jnp.where(active & at_opt & (phase == 2), OPTIMAL, status)
+
+        # Phase-II objective rewrite: cb = c_ext[basis] via one-hot reduce.
+        basis_oh = (
+            basis[:, :, None] == col_ids[None, :, :]
+        )  # (TB, m, Qp) bool
+        cb = jnp.sum(jnp.where(basis_oh, c_ext[:, None, :], 0.0), axis=-1)  # (TB, m)
+        priced = jax.lax.dot_general(
+            cb[:, None, :],
+            tab[:, :m, :],
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )[:, 0, :]  # (TB, Qp)
+        new_obj = c_ext - priced
+        tab = tab.at[:, m, :].set(
+            jnp.where(to_phase2[:, None], new_obj, tab[:, m, :])
+        )
+        phase = jnp.where(to_phase2, 2, phase)
+
+        # ---- pivot selection ---------------------------------------------
+        pivoting = active & ~at_opt
+        e_oh = col_ids == e[:, None]  # (TB, Qp)
+        full_col = jnp.sum(jnp.where(e_oh[:, None, :], tab, 0.0), axis=-1)  # (TB, M1p)
+        col = full_col[:, :m]
+        rhs = tab[:, :m, 0]
+        ratios = jnp.where(col > tol, rhs / jnp.where(col > tol, col, 1.0), _BIG)
+        l = jnp.argmin(ratios, axis=-1).astype(jnp.int32)  # (TB,)
+        min_ratio = jnp.min(ratios, axis=-1)
+        unbounded = pivoting & (min_ratio >= _BIG / 2)
+        status = jnp.where(unbounded, UNBOUNDED, status)
+        do_pivot = pivoting & ~unbounded
+
+        # ---- rank-1 pivot update ------------------------------------------
+        l_oh_rows = row_ids == l[:, None]  # (TB, m)
+        pr = jnp.sum(
+            jnp.where(l_oh_rows[:, :, None], tab[:, :m, :], 0.0), axis=1
+        )  # (TB, Qp)
+        pe = jnp.sum(jnp.where(e_oh, pr, 0.0), axis=-1)  # (TB,)
+        npr = pr / jnp.where(jnp.abs(pe) > tol, pe, 1.0)[:, None]
+        updated = tab - full_col[:, :, None] * npr[:, None, :]
+        m1p = tab.shape[1]
+        row_ids_full = jax.lax.broadcasted_iota(jnp.int32, (1, m1p), 1)
+        l_row_sel = (row_ids_full == l[:, None])[:, :, None]  # (TB, M1p, 1)
+        updated = jnp.where(l_row_sel, npr[:, None, :], updated)
+        tab = jnp.where(do_pivot[:, None, None], updated, tab)
+        basis = jnp.where(
+            do_pivot[:, None] & l_oh_rows, e[:, None], basis
+        )
+        iters = iters + do_pivot.astype(jnp.int32)
+        return tab, basis, phase, status, iters, step + 1
+
+    def cond(state):
+        _, _, _, status, _, step = state
+        return jnp.logical_and(step < max_iters, jnp.any(status == RUNNING))
+
+    status0 = jnp.full((tb,), RUNNING, jnp.int32)
+    iters0 = jnp.zeros((tb,), jnp.int32)
+    tab, basis, phase, status, iters, _ = jax.lax.while_loop(
+        cond, body, (tab, basis, phase, status0, iters0, jnp.int32(0))
+    )
+    status = jnp.where(status == RUNNING, ITER_LIMIT, status)
+
+    # ---- solution extraction (one-hot scatter of rhs into x) -------------
+    objective = jnp.where(status == OPTIMAL, -tab[:, m, 0], -_BIG)
+    rhs = tab[:, :m, 0]  # (TB, m)
+    np_ = x_ref.shape[1]
+    var_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, np_), 2)  # cols of x
+    hit = basis[:, :, None] == (var_ids + 1)  # basis col j+1 <-> x_j
+    x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)  # (TB, Np)
+    x = jnp.where((status == OPTIMAL)[:, None], x, 0.0)
+
+    obj_ref[...] = objective
+    x_ref[...] = x
+    status_ref[...] = status
+    iters_ref[...] = iters
+
+
+def simplex_pallas(
+    tab: jnp.ndarray,  # (B, M1p, Qp) padded tableau
+    basis: jnp.ndarray,  # (B, Mp) int32 padded
+    phase: jnp.ndarray,  # (B,) int32
+    c_ext: jnp.ndarray,  # (B, Qp)
+    *,
+    m: int,
+    n: int,
+    q: int,
+    n_padded: int,
+    max_iters: int,
+    tile_b: int = 8,
+    tol: float = 1e-5,
+    interpret: bool = False,
+):
+    """Launch the VMEM-resident simplex kernel over batch tiles."""
+    bsz, m1p, qp = tab.shape
+    assert bsz % tile_b == 0, (bsz, tile_b)
+    grid = (bsz // tile_b,)
+
+    kernel = functools.partial(
+        _kernel, m=m, n=n, q=q, max_iters=max_iters, tol=tol
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, m1p, qp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, basis.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b, qp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b, n_padded), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), tab.dtype),
+            jax.ShapeDtypeStruct((bsz, n_padded), tab.dtype),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tab, basis, phase, c_ext)

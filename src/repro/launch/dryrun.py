@@ -1,0 +1,227 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script jits the real step function (train_step /
+prefill / decode_step) against ShapeDtypeStruct inputs carrying the
+production shardings, compiles it for the 16x16 pod mesh (and the
+2x16x16 multi-pod mesh with --multi-pod), prints
+``compiled.memory_analysis()`` / ``compiled.cost_analysis()``, extracts
+per-chip collective wire bytes from the HLO, and records everything under
+``results/dryrun/*.json`` for the roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, SHAPES, Shape, cell_is_applicable, get_config, input_specs
+from ..models.model import Model
+from ..sharding import partition, rules as prules
+from ..train import optimizer as opt_mod
+from ..train.train_step import make_train_step
+from .hlo_stats import analyze as hlo_analyze
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _abstract_opt_state(param_specs):
+    """ShapeDtypeStructs for the AdamW state matching the param specs."""
+    def f32(s: prules.ParamSpec):
+        return prules.ParamSpec(s.shape, s.axes, "float32", "zeros")
+
+    as_f32 = jax.tree_util.tree_map(
+        f32, param_specs, is_leaf=lambda x: isinstance(x, prules.ParamSpec)
+    )
+    m = prules.shape_structs(as_f32)
+    v = prules.shape_structs(as_f32)
+    master = prules.shape_structs(as_f32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return opt_mod.OptState(step, m, v, master)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    accum: int = 1,
+    donate: bool = True,
+    cfg_override=None,
+    rules_override=None,
+):
+    """Lower + compile one cell. Returns (record, compiled)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_is_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": skip}, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    t0 = time.perf_counter()
+    with partition.activate(mesh, rules_override):
+        pspecs = model.abstract_params()
+        params_sds = prules.shape_structs(pspecs)
+
+        def shard_fn(shp, axes):
+            return partition.named_sharding(shp, axes)
+
+        inputs_sds = input_specs(cfg, shape, sharding_fn=shard_fn)
+
+        if shape.kind == "train":
+            opt_sds = _abstract_opt_state(pspecs)
+            step_fn = make_train_step(model, opt_mod.OptConfig(), accum=accum, remat=True)
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_sds, opt_sds, inputs_sds)
+        elif shape.kind == "prefill":
+            cache_specs = model.cache_specs(
+                shape.global_batch, shape.seq_len,
+                enc_len=shape.seq_len if cfg.family == "encdec" else 0,
+            )
+            cache_sds = prules.shape_structs(cache_specs)
+            jitted = jax.jit(model.prefill, donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_sds, inputs_sds, cache_sds)
+        else:  # decode
+            cache_specs = model.cache_specs(
+                shape.global_batch, shape.seq_len,
+                enc_len=shape.seq_len if cfg.family == "encdec" else 0,
+            )
+            cache_sds = prules.shape_structs(cache_specs)
+            idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(model.decode_step, donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_sds, inputs_sds, cache_sds, idx_sds)
+
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(f"[{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}]")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis: flops=%.3e bytes=%.3e" % (
+            cost.get("flops", -1), cost.get("bytes accessed", -1)))
+
+        hlo = compiled.as_text()
+        stats = hlo_analyze(hlo)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        # loop-aware HLO stats (cost_analysis counts while bodies once):
+        "hlo_dot_flops_per_device": stats["dot_flops"],
+        "hlo_traffic_bytes_per_device": stats["traffic_bytes"],
+        "collective_bytes_per_device": {
+            **stats["collectives"], "total": stats["collective_total"],
+        },
+        "memory": {
+            k: getattr(mem, k, None)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "accum": accum,
+    }
+    return record, compiled
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> str:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    safe = arch.replace("/", "_").replace(".", "_")
+    return os.path.join(out_dir, f"{safe}__{shape_name}__{mesh_tag}.json")
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False, accum=1):
+    os.makedirs(out_dir, exist_ok=True)
+    path = cell_path(arch, shape_name, multi_pod, out_dir)
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok" or rec.get("status", "").startswith("skip"):
+            print(f"[skip existing] {path}")
+            return rec
+    try:
+        rec, _ = lower_cell(arch, shape_name, multi_pod, accum=accum)
+    except Exception as e:  # record the failure — it's a bug to fix
+        traceback.print_exc()
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": f"FAIL: {type(e).__name__}: {e}"}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"-> {path}: {rec['status']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, args.out, args.skip_existing, args.accum)
+        st = rec["status"]
+        if st == "ok":
+            n_ok += 1
+        elif st.startswith("skip"):
+            n_skip += 1
+        else:
+            n_fail += 1
+    print(f"\ndry-run complete: ok={n_ok} skip={n_skip} FAIL={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""HLO-text analysis: flops / HBM traffic / collective bytes with loop counts.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while``
+body ONCE, but layer stacks / grad-accumulation / flash-attention KV
+chunks are all scans — so flops and bytes are undercounted by the trip
+count (verified experimentally: a 10-iteration scanned matmul reports 1
+matmul of flops).  This module parses the post-SPMD HLO text, builds the
+computation call graph (while/call/fusion/conditional edges), recovers
+trip counts from loop-condition comparison constants, and accumulates:
+
+* ``dot_flops``      — 2*M*N*K for every dot (+ convolutions), x trips.
+* ``traffic_bytes``  — an HBM-traffic model: for every top-level
+  instruction of every non-fusion-body computation, bytes written
+  (output) + bytes read (inline operand shapes).  Fusion internals are
+  skipped — a fusion's traffic is its boundary, matching how XLA fuses
+  elementwise chains.  x trips.
+* ``collectives``    — per-kind wire bytes (ring-algorithm model), x trips:
+    all-gather ~ out, all-reduce ~ 2*out, reduce-scatter ~ in,
+    all-to-all ~ out, collective-permute ~ out.
+
+All numbers are per-device (the partitioned module).  This is a static
+model — it is the dry-run "profile" that stands in for a real trace, per
+the roofline methodology in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]"
+)
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OPLINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\]{},: ]+?)\s+([\w\-]+)\(")
+_CALL_ATTR_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_COMPARE_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call",
+}
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _shape_bytes(text: str) -> int:
+    return _shape_elems_bytes(text)[1]
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str], set]:
+    """name -> instruction lines; entry name; names that are fusion bodies."""
+    comps: Dict[str, List[str]] = {}
+    fusion_bodies: set = set()
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    # Header: "%name (params...) -> type {" — params may contain
+    # /*index=N*/ comments, so the only reliable signature is
+    # name followed by "(" (instructions have "name = " instead).
+    head = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{"):
+                m = head.match(s)
+                if m and " = " not in s.split("(", 1)[0]:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if s == "}" or s.startswith("}, ") or s.startswith("} "):
+            cur = None
+            continue
+        comps[cur].append(line)
+    # fusion bodies: computations referenced via calls= on fusion ops
+    for name, lines in comps.items():
+        for line in lines:
+            if " fusion(" in line:
+                for callee in _CALL_ATTR_RE.findall(line):
+                    fusion_bodies.add(callee)
+    return comps, entry, fusion_bodies
+
+
+def _operand_bytes(paren: str, symtab: Dict[str, str]) -> int:
+    """Bytes read: inline shapes if present, else symbol-table lookup."""
+    inline = _shape_bytes(paren)
+    if inline:
+        return inline
+    total = 0
+    for name in _OPERAND_RE.findall(paren):
+        total += _shape_bytes(symtab.get(name, ""))
+    return total
+
+
+def _operand_dims(paren: str, symtab: Dict[str, str], idx: int) -> Optional[List[int]]:
+    """Dims of the idx-th operand (inline shape or symbol table)."""
+    names = _OPERAND_RE.findall(paren)
+    inline = _SHAPE_RE.findall(paren)
+    if inline and len(inline) > idx:
+        dims = inline[idx][1]
+        return [int(d) for d in dims.split(",") if d] if dims else []
+    if len(names) > idx:
+        return _first_shape_dims(symtab.get(names[idx], ""))
+    return None
+
+
+def _line_stats(line: str, symtab: Dict[str, str]) -> Tuple[float, float, Dict[str, float]]:
+    """(dot_flops, traffic_bytes, collective_bytes_by_kind) for one line."""
+    m = _OPLINE_RE.match(line)
+    if not m:
+        return 0.0, 0.0, {}
+    _, out_shape_txt, op = m.group(1), m.group(2), m.group(3)
+    base_op = op
+    for suffix in ("-start", "-done"):
+        if base_op.endswith(suffix):
+            base_op = base_op[: -len(suffix)]
+
+    args_txt = line[m.end():]
+    paren = args_txt.split(")")[0]
+
+    flops = 0.0
+    if op == "dot":
+        out_dims = _first_shape_dims(out_shape_txt) or []
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        lhs_dims = _operand_dims(paren, symtab, 0) or []
+        cm = _CONTRACT_RE.search(line)
+        k = 1
+        if cm and lhs_dims:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        flops = 2.0 * out_elems * k
+    elif op == "convolution":
+        out_dims = _first_shape_dims(out_shape_txt) or []
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        kdims = _operand_dims(paren, symtab, 1) or []
+        kernel_elems = 1
+        for d in kdims:
+            kernel_elems *= d
+        gm = _GROUPS_RE.search(line)
+        groups = int(gm.group(1)) if gm else 1
+        flops = 2.0 * out_elems * max(kernel_elems // max(groups, 1), 1)
+
+    coll: Dict[str, float] = {}
+    if base_op in _COLLECTIVES:
+        if op.endswith("-done"):
+            return 0.0, 0.0, {}
+        out_b = _shape_bytes(out_shape_txt)
+        if base_op == "reduce-scatter":
+            wire = float(_operand_bytes(paren, symtab) or out_b)
+        elif base_op == "all-reduce":
+            wire = 2.0 * out_b
+        else:
+            wire = float(out_b)
+        if op.endswith("-start") and out_shape_txt.strip().startswith("("):
+            wire /= 2.0
+        coll[base_op] = wire
+
+    traffic = 0.0
+    if op not in _SKIP_TRAFFIC_OPS:
+        traffic = float(_shape_bytes(out_shape_txt) + _operand_bytes(paren, symtab))
+    return flops, traffic, coll
+
+
+def analyze(hlo: str) -> Dict[str, object]:
+    comps, entry, fusion_bodies = _split_computations(hlo)
+
+    # symbol tables: instruction name -> output shape text (per computation,
+    # flattened globally — HLO names are unique within a module dump)
+    symtab: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _OPLINE_RE.match(line)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+
+    # per-computation direct stats
+    direct: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+    for name, lines in comps.items():
+        f = t = 0.0
+        c: Dict[str, float] = {}
+        in_fusion_body = name in fusion_bodies
+        for line in lines:
+            lf, lt, lc = _line_stats(line, symtab)
+            f += lf  # dot flops count even inside fusion bodies
+            if not in_fusion_body:
+                t += lt
+            for k, v in lc.items():
+                c[k] = c.get(k, 0.0) + v
+        direct[name] = (f, t, c)
+
+    # call edges and while trip counts
+    edges: Dict[str, Dict[str, float]] = {name: {} for name in comps}
+    trip: Dict[str, float] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            names = _CALL_ATTR_RE.findall(line)
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                names += [n.strip().lstrip("%") for n in bm.group(1).split(",") if n.strip()]
+            if " while(" in line and "condition=" in line:
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                if mc and mb:
+                    tc = _TRIP_RE.search(line)  # XLA's own annotation wins
+                    if tc:
+                        trip[mb.group(1)] = float(tc.group(1))
+                    else:
+                        cond_lines = comps.get(mc.group(1), [])
+                        consts = [
+                            int(x)
+                            for l in cond_lines
+                            for x in _COMPARE_CONST_RE.findall(l)
+                        ]
+                        trip[mb.group(1)] = float(max(consts)) if consts else 1.0
+            for n in names:
+                if n in comps and n != name:
+                    edges[name][n] = max(edges[name].get(n, 0.0), 1.0)
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def total(name: str, depth: int = 0):
+        if name in memo:
+            return memo[name]
+        if depth > 128:
+            return (0.0, 0.0, {})
+        f, t, c = direct.get(name, (0.0, 0.0, {}))
+        c = dict(c)
+        for callee, _ in edges.get(name, {}).items():
+            mult = trip.get(callee, 1.0)
+            sf, st, sc = total(callee, depth + 1)
+            f += mult * sf
+            t += mult * st
+            for k, v in sc.items():
+                c[k] = c.get(k, 0.0) + mult * v
+        memo[name] = (f, t, c)
+        return memo[name]
+
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n])) if comps else ""
+    f, t, c = total(entry) if entry else (0.0, 0.0, {})
+    coll = {k: c.get(k, 0.0) for k in _COLLECTIVES}
+    return {
+        "dot_flops": f,
+        "traffic_bytes": t,
+        "collectives": coll,
+        "collective_total": sum(coll.values()),
+        "n_computations": len(comps),
+    }
+
+
+def summarize(hlo: str) -> Dict[str, float]:
+    a = analyze(hlo)
+    out = dict(a["collectives"])
+    out["total"] = a["collective_total"]
+    return out

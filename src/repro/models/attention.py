@@ -1,0 +1,376 @@
+"""Attention: chunked-flash GQA, local/global windows, softcap, MLA.
+
+Design notes
+------------
+* One attention primitive, ``flash_attention``: a ``lax.scan`` over KV
+  chunks with an online-softmax accumulator in f32.  Nothing of shape
+  (Sq, Skv) is ever materialized, which is what lets 32k prefill lower
+  under sequence sharding on the dry-run meshes.
+* GQA never materializes repeated KV heads: q is reshaped to
+  (B, Hkv, G, Sq, hd) and contracted against the raw KV.
+* Sharding: heads go to the ``model`` axis when divisible (head-TP),
+  otherwise q switches to sequence sharding (context parallelism) — exact
+  for this formulation since every q block sees all KV chunks.
+* MLA (DeepSeek-V2): the cache stores the compressed latent
+  (c_kv, k_rope); decode uses the *absorbed* form (W_uk folded into q,
+  W_uv applied after the latent-space attention), so per-token decode cost
+  scales with kv_lora_rank, not with H * head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import ParamSpec, partition
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, rmsnorm, rmsnorm_spec, softcap
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked online softmax)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, Sq, dk)
+    k: jnp.ndarray,  # (B, Hkv, Skv, dk)
+    v: jnp.ndarray,  # (B, Hkv, Skv, dv)
+    *,
+    causal: bool = True,
+    window=None,  # None = full; int or traced scalar = sliding window
+    chunk: int = 512,
+    attn_softcap: float = 0.0,
+    q_offset=0,
+    kv_valid_len: Optional[jnp.ndarray] = None,  # (B,) valid cache length
+) -> jnp.ndarray:
+    b, hq, sq, dk = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = np.float32(1.0 / np.sqrt(dk))
+    chunk = min(chunk, skv)
+    nc = (skv + chunk - 1) // chunk
+    pad = nc * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qg = q.reshape(b, hkv, g, sq, dk)
+    q_pos = q_offset + jnp.arange(sq)  # (Sq,) — q_offset may be traced
+    kc = k.reshape(b, hkv, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    cidx = jnp.arange(nc)
+
+    def step(carry, inp):
+        o, m, l = carry
+        kj, vj, j = inp
+        s = jnp.einsum(
+            "bhgqd,bhcd->bhgqc", qg, kj, preferred_element_type=jnp.float32
+        ) * scale
+        if attn_softcap > 0:
+            s = softcap(s, attn_softcap)
+        k_pos = j * chunk + jnp.arange(chunk)  # (C,)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            # ``window`` may be a traced per-layer scalar (gemma2's
+            # local/global alternation under scan); global layers pass a
+            # huge value, making this mask a no-op.
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if pad or kv_valid_len is None:
+            mask &= (k_pos < skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        if kv_valid_len is not None:
+            vmask = k_pos[None, :] < kv_valid_len[:, None]  # (B, C)
+            s = jnp.where(vmask[:, None, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqc,bhcd->bhgqd", p, vj, preferred_element_type=jnp.float32)
+        o = o * corr[..., None] + pv
+        return (o, m, l), None
+
+    o0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(step, (o0, m0, l0), (kc, vc, cidx))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hq, 1, dk)
+    k: jnp.ndarray,  # (B, Hkv, T, dk)  — cache, seq possibly sharded
+    v: jnp.ndarray,  # (B, Hkv, T, dv)
+    cache_index,
+    *,
+    window=None,
+    attn_softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-pass decode attention over the KV cache.
+
+    The chunk-scanned flash path slices the cache along its *sharded*
+    sequence axis, which SPMD turns into one all-gather per chunk
+    (observed: 4.3 s collective / 20.9 s memory terms on qwen1.5-4b
+    decode_32k).  One einsum over the full cache keeps the contraction
+    local per seq-shard; the softmax reduction costs a tiny (B,H,1)
+    all-reduce.  Scores are (B,H,1,T) — a few MB even at 500k context.
+    """
+    b, hq, sq, dk = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, dk)
+    s = jnp.einsum("bhgqd,bhtd->bhgqt", qg, k, preferred_element_type=jnp.float32)
+    s = s * np.float32(1.0 / np.sqrt(dk))
+    if attn_softcap > 0:
+        s = softcap(s, attn_softcap)
+    pos = jnp.arange(t)
+    mask = pos[None, :] <= cache_index  # (1, T): includes the fresh token
+    if window is not None:
+        mask = mask & (pos[None, :] > cache_index - window)
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqt,bhtd->bhgqd", p.astype(v.dtype), v)
+    return o.reshape(b, hq, sq, -1).astype(q.dtype)
+
+
+def _head_tp(n_heads: int) -> bool:
+    tp = partition.axis_size("heads_tp")
+    return tp > 1 and n_heads % tp == 0
+
+
+def _shard_heads_or_seq(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """Head-TP when divisible, else context-parallel q-seq sharding."""
+    if _head_tp(n_heads):
+        return partition.constrain(x, ("batch", "heads_tp", None, None))
+    return partition.constrain(x, ("batch", None, "seq_tp", None))
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """Repeat KV heads to the full head count (head-TP path).
+
+    Under head-TP the (Hkv, G) grouped layout would split one sharded axis
+    across two dims — SPMD then resorts to full rematerialization in the
+    bwd pass (482 GB/device observed on dbrx).  Repeating KV keeps a
+    single sharded head axis end-to-end; the extra KV read bandwidth is a
+    deliberate baseline trade recorded in EXPERIMENTS.md §Perf.
+    """
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention module
+# ---------------------------------------------------------------------------
+
+
+def gqa_specs(cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    s = {
+        "wq": ParamSpec((d, cfg.num_heads, cfg.head_dim), ("fsdp", "heads_tp", None), dtype=cfg.dtype),
+        "wk": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim), ("fsdp", "heads_tp", None), dtype=cfg.dtype),
+        "wv": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim), ("fsdp", "heads_tp", None), dtype=cfg.dtype),
+        "wo": ParamSpec((cfg.num_heads, cfg.head_dim, d), ("heads_tp", None, "fsdp"), dtype=cfg.dtype),
+    }
+    if cfg.attn_bias:
+        s["bq"] = ParamSpec((cfg.num_heads, cfg.head_dim), (None, None), dtype=cfg.dtype, init="zeros")
+        s["bk"] = ParamSpec((cfg.num_kv_heads, cfg.head_dim), (None, None), dtype=cfg.dtype, init="zeros")
+        s["bv"] = ParamSpec((cfg.num_kv_heads, cfg.head_dim), (None, None), dtype=cfg.dtype, init="zeros")
+    return s
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    x: jnp.ndarray,  # (B, S, D)
+    p,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,  # (B, S) or (B, S, 3) for M-RoPE
+    window=None,
+    cache: Optional[dict] = None,
+    cache_index=None,  # scalar: tokens already in cache
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self-attention.
+
+    * no cache: full causal flash (train).
+    * cache + s > 1: prefill — attend over the fresh k/v only (cheaper than
+      reading the cache) and write them into the cache.
+    * cache + s == 1: decode — append at cache_index, attend over the
+      valid cache prefix (masked flash over the cache).
+    """
+    s = x.shape[1]
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = _shard_heads_or_seq(q, cfg.num_heads)
+    groups = cfg.num_heads // max(cfg.num_kv_heads, 1)
+    head_tp = _head_tp(cfg.num_heads)
+    new_cache = None
+    if cache is not None and s == 1:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_index, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_index, 0))
+        new_cache = {"k": ck, "v": cv}
+        out = decode_attention(
+            q, ck, cv, cache_index,
+            window=window, attn_softcap=cfg.attn_softcap,
+        )
+    else:
+        if head_tp:
+            kk = _expand_kv(k, groups)
+            vv = _expand_kv(v, groups)
+            kk = _shard_heads_or_seq(kk, cfg.num_heads)
+            vv = _shard_heads_or_seq(vv, cfg.num_heads)
+        else:
+            kk = partition.constrain(k, ("batch", None, None, None))
+            vv = partition.constrain(v, ("batch", None, None, None))
+        out = flash_attention(
+            q, kk, vv,
+            causal=True,
+            window=window,
+            chunk=cfg.attn_chunk,
+            attn_softcap=cfg.attn_softcap,
+        )
+        out = _shard_heads_or_seq(out, cfg.num_heads)
+        if cache is not None:  # prefill: fill the cache
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_index, 0))
+            new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+def cross_attention(
+    x: jnp.ndarray,
+    p,
+    cfg: ModelConfig,
+    *,
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cached enc (k, v)
+    enc_out: Optional[jnp.ndarray] = None,  # (B, Senc, D) to project
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Encoder-decoder cross attention (no rope, not causal)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    q = _shard_heads_or_seq(q, cfg.num_heads)
+    if kv is None:
+        k = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bhsk", enc_out, p["wv"])
+        kv = (k, v)
+    k, v = kv
+    out = flash_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"]), kv
+
+
+def encoder_attention(x, p, cfg: ModelConfig, positions):
+    """Bidirectional self-attention (encoder)."""
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    q = _shard_heads_or_seq(q, cfg.num_heads)
+    out = flash_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) attention
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": ParamSpec((d, cfg.num_heads, qk), ("fsdp", "heads_tp", None), dtype=cfg.dtype),
+        "w_dkv": ParamSpec((d, cfg.kv_lora_rank + cfg.qk_rope_dim), ("fsdp", None), dtype=cfg.dtype),
+        "kv_norm": rmsnorm_spec(cfg.kv_lora_rank, cfg.dtype),
+        "w_uk": ParamSpec((cfg.kv_lora_rank, cfg.num_heads, cfg.qk_nope_dim), (None, "heads_tp", None), dtype=cfg.dtype),
+        "w_uv": ParamSpec((cfg.kv_lora_rank, cfg.num_heads, cfg.v_head_dim), (None, "heads_tp", None), dtype=cfg.dtype),
+        "wo": ParamSpec((cfg.num_heads, cfg.v_head_dim, d), ("heads_tp", None, "fsdp"), dtype=cfg.dtype),
+    }
+
+
+def _mla_latents(x, p, cfg: ModelConfig, positions):
+    full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv, k_pe = jnp.split(full, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    pos2d = positions if positions.ndim == 2 else positions[..., 0]
+    k_pe = apply_rope(k_pe[:, None], pos2d, cfg.rope_theta)[:, 0]  # (B,S,rope)
+    return c_kv, k_pe
+
+
+def _mla_q(x, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    q_nope, q_pe = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    pos2d = positions if positions.ndim == 2 else positions[..., 0]
+    q_pe = apply_rope(q_pe, pos2d, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(
+    x: jnp.ndarray,
+    p,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[dict] = None,
+    cache_index=None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    q_nope, q_pe = _mla_q(x, p, cfg, positions)
+    c_kv, k_pe = _mla_latents(x, p, cfg, positions)
+
+    if cache is not None and s == 1:
+        # ---- absorbed decode: attention in latent space -------------------
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+        kpe = jax.lax.dynamic_update_slice(cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, cache_index, 0))
+        new_cache = {"ckv": ckv, "kpe": kpe}
+        q_lat = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["w_uk"])  # (B,H,1,R)
+        s_lat = jnp.einsum("bhsr,btr->bhst", q_lat, ckv, preferred_element_type=jnp.float32)
+        s_pe = jnp.einsum("bhsk,btk->bhst", q_pe, kpe, preferred_element_type=jnp.float32)
+        scores = (s_lat + s_pe) * np.float32(1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim))
+        t_pos = jnp.arange(ckv.shape[1])
+        valid = t_pos[None, :] < (cache_index + 1)
+        scores = jnp.where(valid[:, None, None, :], scores, _NEG)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bhsr", attn.astype(ckv.dtype), ckv)
+        out = jnp.einsum("bhsr,rhv->bhsv", ctx_lat, p["w_uv"])  # (B,H,1,v)
+        y = jnp.einsum("bhsv,hvd->bsd", out, p["wo"])
+        return y, new_cache
+
+    # ---- train / prefill: expand latents, run flash ------------------------
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhv->bhsv", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, None], (b, cfg.num_heads, s, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    q = _shard_heads_or_seq(q, cfg.num_heads)
+    out = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    y = jnp.einsum("bhsv,hvd->bsd", out, p["wo"])
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+        kpe = jax.lax.dynamic_update_slice(cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, cache_index, 0))
+        new_cache = {"ckv": ckv, "kpe": kpe}
+    return y, new_cache

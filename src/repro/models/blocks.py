@@ -1,0 +1,230 @@
+"""Transformer / SSM / hybrid blocks and the per-arch layer plan.
+
+A model is a sequence of *groups*; each group is a homogeneous stack of
+layers scanned with ``lax.scan`` (keeps HLO size O(1) in depth).  Layer
+kinds:
+
+    gqa_dense   attention + gated MLP               (dense archs)
+    gqa_moe     attention + MoE FFN                  (dbrx)
+    mla_dense   MLA attention + gated MLP            (deepseek layer 0)
+    mla_moe     MLA attention + MoE FFN              (deepseek 1..L)
+    mamba       Mamba2 mixer only                    (mamba2, zamba2 core)
+    enc         bidirectional attention + MLP        (seamless encoder)
+    dec_cross   causal self + cross attention + MLP  (seamless decoder)
+
+The zamba2 hybrid additionally owns ONE shared attention block (gqa+MLP)
+applied before every ``shared_attn_every``-th mamba layer; its parameters
+are shared across application sites but each site has its own KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import ParamSpec, partition
+from . import attention as attn
+from . import mamba2 as mb
+from . import moe as moe_mod
+from .config import ModelConfig
+from .layers import mlp, mlp_specs, rmsnorm, rmsnorm_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kind: str
+    count: int
+
+
+def plan(cfg: ModelConfig) -> List[Group]:
+    if cfg.family == "dense":
+        return [Group("gqa_dense", cfg.num_layers)]
+    if cfg.family == "moe":
+        if cfg.use_mla:
+            groups = []
+            if cfg.first_dense_layers:
+                groups.append(Group("mla_dense", cfg.first_dense_layers))
+            groups.append(Group("mla_moe", cfg.num_layers - cfg.first_dense_layers))
+            return groups
+        return [Group("gqa_moe", cfg.num_layers)]
+    if cfg.family == "ssm":
+        return [Group("mamba", cfg.num_layers)]
+    if cfg.family == "hybrid":
+        return [Group("mamba", cfg.num_layers)]  # shared block handled by model
+    if cfg.family == "encdec":
+        return [Group("enc", cfg.enc_layers), Group("dec_cross", cfg.num_layers)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs per block kind
+# ---------------------------------------------------------------------------
+
+
+def block_specs(kind: str, cfg: ModelConfig):
+    d = cfg.d_model
+    if kind in ("gqa_dense", "gqa_moe"):
+        s = {
+            "ln_attn": rmsnorm_spec(d, cfg.dtype),
+            "attn": attn.gqa_specs(cfg),
+            "ln_ffn": rmsnorm_spec(d, cfg.dtype),
+        }
+        if cfg.post_norms:
+            s["ln_attn_post"] = rmsnorm_spec(d, cfg.dtype)
+            s["ln_ffn_post"] = rmsnorm_spec(d, cfg.dtype)
+        s["ffn"] = moe_mod.moe_specs(cfg) if kind == "gqa_moe" else mlp_specs(d, cfg.d_ff, cfg.dtype)
+        return s
+    if kind in ("mla_dense", "mla_moe"):
+        f = cfg.d_ff_dense if kind == "mla_dense" and cfg.d_ff_dense else cfg.d_ff
+        return {
+            "ln_attn": rmsnorm_spec(d, cfg.dtype),
+            "attn": attn.mla_specs(cfg),
+            "ln_ffn": rmsnorm_spec(d, cfg.dtype),
+            "ffn": moe_mod.moe_specs(cfg) if kind == "mla_moe" else mlp_specs(d, f, cfg.dtype),
+        }
+    if kind == "mamba":
+        return {"ln": rmsnorm_spec(d, cfg.dtype), "mixer": mb.mamba_specs(cfg)}
+    if kind == "enc":
+        return {
+            "ln_attn": rmsnorm_spec(d, cfg.dtype),
+            "attn": attn.gqa_specs(cfg),
+            "ln_ffn": rmsnorm_spec(d, cfg.dtype),
+            "ffn": mlp_specs(d, cfg.d_ff, cfg.dtype),
+        }
+    if kind == "dec_cross":
+        return {
+            "ln_attn": rmsnorm_spec(d, cfg.dtype),
+            "attn": attn.gqa_specs(cfg),
+            "ln_cross": rmsnorm_spec(d, cfg.dtype),
+            "cross": attn.gqa_specs(cfg),
+            "ln_ffn": rmsnorm_spec(d, cfg.dtype),
+            "ffn": mlp_specs(d, cfg.d_ff, cfg.dtype),
+        }
+    raise ValueError(kind)
+
+
+def shared_attn_specs(cfg: ModelConfig):
+    """zamba2: one shared (attention + MLP) block."""
+    return {
+        "ln_attn": rmsnorm_spec(cfg.d_model, cfg.dtype),
+        "attn": attn.gqa_specs(cfg),
+        "ln_ffn": rmsnorm_spec(cfg.d_model, cfg.dtype),
+        "ffn": mlp_specs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block forward functions
+# ---------------------------------------------------------------------------
+
+
+def _res(x):
+    return partition.constrain(x, ("batch", "seq_tp", None))
+
+
+def gqa_block(
+    x, p, cfg: ModelConfig, *, kind: str, positions, window=None,
+    cache=None, cache_index=None,
+):
+    h = rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    a, new_cache = attn.gqa_attention(
+        h, p["attn"], cfg, positions=positions, window=window,
+        cache=cache, cache_index=cache_index,
+    )
+    if cfg.post_norms:
+        a = rmsnorm(a, p["ln_attn_post"], cfg.norm_eps)
+    # constrain the row-parallel projection output to seq-shards BEFORE the
+    # residual add: SPMD then reduce-scatters the dot partials instead of
+    # full f32 all-reduce + slice (Megatron-SP pattern; §Perf item 10).
+    x = _res(x + _res(a))
+    h = rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    if kind == "gqa_moe":
+        f = moe_mod.moe_ffn(h, p["ffn"], cfg)
+    else:
+        f = mlp(h, p["ffn"], cfg.act)
+    if cfg.post_norms:
+        f = rmsnorm(f, p["ln_ffn_post"], cfg.norm_eps)
+    return _res(x + _res(f)), new_cache
+
+
+def mla_block(
+    x, p, cfg: ModelConfig, *, kind: str, positions, cache=None, cache_index=None
+):
+    h = rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    a, new_cache = attn.mla_attention(
+        h, p["attn"], cfg, positions=positions, cache=cache, cache_index=cache_index
+    )
+    x = _res(x + _res(a))
+    h = rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    if kind == "mla_moe":
+        f = moe_mod.moe_ffn(h, p["ffn"], cfg)
+    else:
+        f = mlp(h, p["ffn"], cfg.act)
+    return _res(x + _res(f)), new_cache
+
+
+def mamba_block(x, p, cfg: ModelConfig, *, cache=None, cache_index=None):
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    m, new_cache = mb.mamba_mixer(h, p["mixer"], cfg, cache=cache, cache_index=cache_index)
+    return _res(x + _res(m)), new_cache
+
+
+def enc_block(x, p, cfg: ModelConfig, *, positions):
+    h = rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    a = attn.encoder_attention(h, p["attn"], cfg, positions)
+    x = _res(x + a)
+    h = rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    return _res(x + mlp(h, p["ffn"], cfg.act)), None
+
+
+def dec_cross_block(
+    x, p, cfg: ModelConfig, *, positions, enc_out=None,
+    cache=None, cache_index=None,
+):
+    """Decoder block: causal self-attn (cached) + cross-attn + MLP.
+
+    cache (if given) = {"k","v" (self), "ck","cv" (cross, filled at prefill)}.
+    """
+    h = rmsnorm(x, p["ln_attn"], cfg.norm_eps)
+    self_cache = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+    a, new_self = attn.gqa_attention(
+        h, p["attn"], cfg, positions=positions, cache=self_cache, cache_index=cache_index
+    )
+    x = _res(x + a)
+    h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+    if cache is not None and enc_out is None:
+        kv = (cache["ck"], cache["cv"])
+        c, _ = attn.cross_attention(h, p["cross"], cfg, kv=kv)
+        new_cache = {**new_self, "ck": cache["ck"], "cv": cache["cv"]}
+    else:
+        c, kv = attn.cross_attention(h, p["cross"], cfg, enc_out=enc_out)
+        new_cache = None
+        if cache is not None:
+            new_cache = {**new_self, "ck": kv[0].astype(cache["ck"].dtype), "cv": kv[1].astype(cache["cv"].dtype)}
+    x = _res(x + c)
+    h = rmsnorm(x, p["ln_ffn"], cfg.norm_eps)
+    return _res(x + mlp(h, p["ffn"], cfg.act)), new_cache
+
+
+def run_block(kind: str, x, p, cfg: ModelConfig, **kw):
+    if kind in ("gqa_dense", "gqa_moe"):
+        return gqa_block(x, p, cfg, kind=kind, **kw)
+    if kind in ("mla_dense", "mla_moe"):
+        kw.pop("window", None)
+        return mla_block(x, p, cfg, kind=kind, **kw)
+    if kind == "mamba":
+        kw.pop("window", None)
+        kw.pop("positions", None)
+        return mamba_block(x, p, cfg, **kw)
+    if kind == "enc":
+        kw.pop("window", None)
+        kw.pop("cache", None)
+        kw.pop("cache_index", None)
+        return enc_block(x, p, cfg, **kw)
+    if kind == "dec_cross":
+        kw.pop("window", None)
+        return dec_cross_block(x, p, cfg, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,164 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), MLPs, embedding."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import ParamSpec, partition
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, dtype: str) -> ParamSpec:
+    return ParamSpec((d,), (None,), dtype=dtype, init="zeros")  # (1 + w) convention
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm_specs(d: int, dtype: str):
+    return {
+        "scale": ParamSpec((d,), (None,), dtype=dtype, init="ones"),
+        "bias": ParamSpec((d,), (None,), dtype=dtype, init="zeros"),
+    }
+
+
+def layernorm(x: jnp.ndarray, p, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, H, S, hd), positions: (B, S) int. Half-split convention."""
+    b, h, s, hd = x.shape
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    sections: Tuple[int, ...],
+    theta: float,
+) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): positions (B, S, 3) for (t, h, w).
+
+    The head_dim/2 frequency slots are partitioned into ``sections``
+    (sum = hd/2); each section rotates by its own positional coordinate.
+    """
+    b, h, s, hd = x.shape
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)  # (half,)
+    # Build a (B, S, half) position matrix: slot i uses coordinate axis
+    # according to its section.
+    sec_ids = np.concatenate(
+        [np.full(n, i) for i, n in enumerate(sections)]
+    )  # (half,)
+    sec_ids = jnp.asarray(sec_ids, jnp.int32)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids[None, None, :], (b, s, half)),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos[:, None, :, :] * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int) -> jnp.ndarray:
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, f: int, dtype: str):
+    return {
+        "wi": ParamSpec((d, 2 * f), ("fsdp", "embed_tp"), dtype=dtype),
+        "wo": ParamSpec((f, d), ("embed_tp", "fsdp"), dtype=dtype),
+    }
+
+
+def mlp(x: jnp.ndarray, p, act: str = "silu") -> jnp.ndarray:
+    """Gated MLP (SwiGLU / GeGLU)."""
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g, u = jnp.split(h, 2, axis=-1)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = g * u
+    h = partition.constrain(h, ("batch", None, "embed_tp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig):
+    v = cfg.padded_vocab
+    s = {"embedding": ParamSpec((v, cfg.d_model), ("vocab_tp", "fsdp"), dtype=cfg.dtype, scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((v, cfg.d_model), ("vocab_tp", "fsdp"), dtype=cfg.dtype)
+    return s
+
+
+def embed(tokens: jnp.ndarray, p, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return partition.constrain(x, ("batch", None, None))
+
+
+def unembed(x: jnp.ndarray, p, cfg: ModelConfig) -> jnp.ndarray:
+    table = p.get("unembed", p["embedding"])
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad rows AFTER softcap: CE logsumexp and sampling skip them
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(vid < cfg.vocab_size, logits, -1e30)
+    return partition.constrain(logits, ("batch", None, "vocab_tp"))

@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked train/prefill + O(1) decode.
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060):
+intra-chunk quadratic attention-like term + inter-chunk state recurrence
+(a short ``lax.scan`` over chunks).  Decode advances the recurrent state
+one token at a time — constant memory in context length, which is why the
+SSM/hybrid archs run the ``long_500k`` shape.
+
+Sharding: SSM heads are independent, so the head axis takes TP when
+divisible (zamba2: 112 heads / 16 = 7); conv channels shard likewise.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import ParamSpec, partition
+from .config import ModelConfig
+from .layers import rmsnorm, rmsnorm_spec
+
+
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * g * n + h), ("fsdp", "embed_tp"), dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), (None, "embed_tp"), dtype=cfg.dtype, scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), (None,), dtype=cfg.dtype, init="zeros"),
+        "dt_bias": ParamSpec((h,), (None,), dtype="float32", init="zeros"),
+        "a_log": ParamSpec((h,), (None,), dtype="float32", init="zeros"),
+        "d_skip": ParamSpec((h,), (None,), dtype="float32", init="ones"),
+        "norm": rmsnorm_spec(di, cfg.dtype),
+        "out_proj": ParamSpec((di, d), ("embed_tp", "fsdp"), dtype=cfg.dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., q) -> (..., q, q) with out[i,j] = sum_{j<k<=i} x_k, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P) — already dt-free input
+    dt: jnp.ndarray,  # (B, S, H) f32, post-softplus
+    a: jnp.ndarray,  # (H,) f32, negative
+    b_: jnp.ndarray,  # (B, S, G, N)
+    c_: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+):
+    bsz, s, h, p = x.shape
+    g, n = b_.shape[2], b_.shape[3]
+    hg = h // g
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        # Padding tokens have dt=0 -> dA=0 (decay 1) and B=C=0, so they
+        # neither perturb the state nor emit output; y is sliced back.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xdt = (x.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)
+    da = dt * a[None, None, :]  # (B, S, H)
+
+    # chunked views
+    xc = xdt.reshape(bsz, nc, chunk, h, p)
+    dac = da.reshape(bsz, nc, chunk, h)
+    bc = b_.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    cc = c_.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+
+    da_cum = jnp.cumsum(dac, axis=2)  # (B, nc, q, H)
+
+    # ---- intra-chunk (diagonal blocks) -----------------------------------
+    l = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B, nc, H, q, q)
+    lg = l.reshape(bsz, nc, g, hg, chunk, chunk)
+    cb = jnp.einsum("bcigN,bcjgN->bcgij", cc, bc)  # (B, nc, g, q, q)
+    xg = xc.reshape(bsz, nc, chunk, g, hg, p)
+    y_diag = jnp.einsum("bcgij,bcghij,bcjghp->bcighp", cb, lg, xg)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B, nc, q, H)
+    dsg = decay_states.reshape(bsz, nc, chunk, g, hg)
+    states = jnp.einsum("bcjgn,bcjgh,bcjghp->bcghpn", bc, dsg, xg)
+    states = states.reshape(bsz, nc, h, p, n)
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # (B, nc, H)
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state ENTERING this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # ---- state -> output (off-diagonal contribution) ----------------------
+    state_decay_in = jnp.exp(da_cum)  # (B, nc, q, H)
+    sdg = state_decay_in.reshape(bsz, nc, chunk, g, hg)
+    psg = prev_states.reshape(bsz, nc, g, hg, p, n)
+    y_off = jnp.einsum("bcign,bcghpn,bcigh->bcighp", cc, psg, sdg)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def mamba_mixer(
+    x: jnp.ndarray,  # (B, S, D)
+    params,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    cache_index=None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full Mamba2 block body (pre-norm residual handled by caller)."""
+    bsz, s, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    p_ = cfg.ssm_headdim
+    conv_ch = di + 2 * g * n
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + conv_ch], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+
+    decode = cache is not None and s == 1
+    if decode:
+        # ---- conv via rolling buffer -----------------------------------
+        buf = cache["conv"]  # (B, d_conv-1, conv_ch)
+        window = jnp.concatenate([buf, xbc], axis=1)  # (B, d_conv, ch)
+        xbc_c = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32))
+        xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+        new_conv = window[:, 1:]
+    else:
+        xbc_c = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        new_conv = None
+
+    xs, b_, c_ = jnp.split(xbc_c, [di, di + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, h, p_)
+    xs = partition.constrain(xs, ("batch", None, "heads_tp", None))
+    b_ = b_.reshape(bsz, s, g, n)
+    c_ = c_.reshape(bsz, s, g, n)
+    a = -jnp.exp(params["a_log"])  # (H,)
+
+    if decode:
+        state = cache["state"].astype(jnp.float32)  # (B, H, P, N)
+        dt1 = dt[:, 0]  # (B, H)
+        da = jnp.exp(dt1 * a[None, :])
+        bh = jnp.repeat(b_[:, 0], h // g, axis=1)  # (B, H, N)
+        ch = jnp.repeat(c_[:, 0], h // g, axis=1)
+        xt = xs[:, 0].astype(jnp.float32)  # (B, H, P)
+        new_state = state * da[:, :, None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", bh.astype(jnp.float32), xt, dt1
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, ch.astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * xt
+        y = y[:, None].reshape(bsz, 1, di).astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": new_state.astype(cache["state"].dtype)}
+    else:
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = _ssd_chunked(
+            xs, dt, a, b_, c_, min(cfg.ssm_chunk, s), init_state
+        )
+        y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(bsz, s, di).astype(x.dtype)
+        new_cache = None
+        if cache is not None:  # prefill: produce decode-ready cache
+            kconv = cfg.ssm_conv - 1
+            new_cache = {
+                "conv": xbc[:, -kconv:, :] if s >= kconv else jnp.pad(xbc, ((0, 0), (kconv - s, 0), (0, 0))),
+                "state": final_state.astype(cache["state"].dtype),
+            }
+
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, new_cache
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d: x (B, S, C), w (K, C).
+
+    Implemented as K explicit tap shifts instead of conv_general_dilated:
+    the depthwise-conv *wgrad* otherwise lowers to a dense (C, C)
+    cross-channel convolution (observed 4.7e13 flops/layer on
+    mamba2-130m — 1000x the useful work).  K is 4; shift-multiply-add is
+    pure VPU work and differentiates element-wise.
+    """
+    k, ch = w.shape
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    # y[t] = sum_j w[k-1-j] * x[t-j]
+    out = xf * wf[k - 1]
+    for j in range(1, k):
+        shifted = jnp.pad(xf[:, :-j, :], ((0, 0), (j, 0), (0, 0)))
+        out = out + shifted * wf[k - 1 - j]
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int, dtype: str):
+    """Shapes for a single layer's decode cache."""
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": ((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": ((batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), "float32"),
+    }

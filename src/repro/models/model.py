@@ -1,0 +1,381 @@
+"""Model orchestration: init / forward / prefill / decode for every family.
+
+Layer stacks are scanned (``lax.scan`` over stacked params) so HLO size is
+independent of depth; caches thread through the same scans as xs/ys.  The
+zamba2 hybrid interleaves its shared attention block between scanned
+mamba sub-stacks (one python-level group per application site).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import ParamSpec, partition, rules as prules
+from . import attention as attn_mod
+from . import blocks as blk
+from . import mamba2 as mb
+from .config import ModelConfig
+from .layers import embed, rmsnorm, rmsnorm_spec, sinusoidal_positions, unembed
+
+_GLOBAL_WINDOW = 1 << 30  # "no window" sentinel for traced window values
+
+
+def _stack_specs(specs, count: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec(
+            (count,) + s.shape, ("layer",) + s.axes, s.dtype, s.init, s.scale
+        ),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+        self.groups = blk.plan(cfg)
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+
+    def abstract_params(self):
+        cfg = self.cfg
+        from .layers import embed_specs
+
+        params: Dict[str, Any] = {"embed": embed_specs(cfg)}
+        for i, g in enumerate(self.groups):
+            params[f"g{i}"] = _stack_specs(blk.block_specs(g.kind, cfg), g.count)
+        params["final_norm"] = rmsnorm_spec(cfg.d_model, cfg.dtype)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            params["shared_attn"] = blk.shared_attn_specs(cfg)
+        if cfg.family == "encdec":
+            params["enc_norm"] = rmsnorm_spec(cfg.d_model, cfg.dtype)
+        return params
+
+    def init(self, key: jax.Array, dtype_override: Optional[str] = None):
+        return prules.materialize(self.abstract_params(), key, dtype_override)
+
+    def param_shardings(self):
+        return prules.shardings(self.abstract_params())
+
+    # ------------------------------------------------------------------
+    # Caches
+    # ------------------------------------------------------------------
+
+    def _n_shared_sites(self) -> int:
+        cfg = self.cfg
+        if cfg.family != "hybrid" or not cfg.shared_attn_every:
+            return 0
+        return int(np.ceil(cfg.num_layers / cfg.shared_attn_every))
+
+    def cache_specs(self, batch: int, max_len: int, enc_len: int = 0):
+        """ParamSpec tree for the decode cache (init='zeros')."""
+        cfg = self.cfg
+        dt = cfg.dtype
+        out: Dict[str, Any] = {}
+
+        def kv(layers, length):
+            return {
+                "k": ParamSpec((layers, batch, cfg.num_kv_heads, length, cfg.head_dim),
+                               ("layer", "batch", None, "kv_seq_tp", None), dt, "zeros"),
+                "v": ParamSpec((layers, batch, cfg.num_kv_heads, length, cfg.head_dim),
+                               ("layer", "batch", None, "kv_seq_tp", None), dt, "zeros"),
+            }
+
+        for i, g in enumerate(self.groups):
+            if g.kind in ("gqa_dense", "gqa_moe"):
+                out[f"g{i}"] = kv(g.count, max_len)
+            elif g.kind in ("mla_dense", "mla_moe"):
+                out[f"g{i}"] = {
+                    "ckv": ParamSpec((g.count, batch, max_len, cfg.kv_lora_rank),
+                                     ("layer", "batch", "kv_seq_tp", None), dt, "zeros"),
+                    "kpe": ParamSpec((g.count, batch, max_len, cfg.qk_rope_dim),
+                                     ("layer", "batch", "kv_seq_tp", None), dt, "zeros"),
+                }
+            elif g.kind == "mamba":
+                conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                out[f"g{i}"] = {
+                    "conv": ParamSpec((g.count, batch, cfg.ssm_conv - 1, conv_ch),
+                                      ("layer", "batch", None, "embed_tp"), dt, "zeros"),
+                    "state": ParamSpec(
+                        (g.count, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                        ("layer", "batch", "heads_tp", None, None), "float32", "zeros"),
+                }
+            elif g.kind == "enc":
+                continue  # encoder has no decode state
+            elif g.kind == "dec_cross":
+                c = kv(g.count, max_len)
+                c["ck"] = ParamSpec((g.count, batch, cfg.num_heads, enc_len, cfg.head_dim),
+                                    ("layer", "batch", None, "kv_seq_tp", None), dt, "zeros")
+                c["cv"] = ParamSpec((g.count, batch, cfg.num_heads, enc_len, cfg.head_dim),
+                                    ("layer", "batch", None, "kv_seq_tp", None), dt, "zeros")
+                out[f"g{i}"] = c
+        ns = self._n_shared_sites()
+        if ns:
+            out["shared"] = kv(ns, max_len)
+        return out
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        specs = self.cache_specs(batch, max_len, enc_len)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+            specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+
+    # ------------------------------------------------------------------
+    # Embedding-side input handling
+    # ------------------------------------------------------------------
+
+    def _embed_inputs(self, params, inputs: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        tokens = inputs["tokens"]
+        x = embed(tokens, params["embed"], cfg)
+        if cfg.frontend == "vision" and "patch_embeds" in inputs:
+            pe = inputs["patch_embeds"].astype(x.dtype)  # (B, P, D)
+            x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        return x
+
+    def _positions(self, inputs, batch: int, s: int, offset=0):
+        cfg = self.cfg
+        if "positions" in inputs:
+            return inputs["positions"]
+        pos = offset + jnp.arange(s)[None, :]
+        pos = jnp.broadcast_to(pos, (batch, s))
+        if cfg.mrope_sections:
+            return jnp.broadcast_to(pos[..., None], (batch, s, 3))
+        return pos
+
+    def _window_array(self, count: int) -> Optional[jnp.ndarray]:
+        cfg = self.cfg
+        if cfg.local_global_pattern and cfg.sliding_window:
+            w = np.where(
+                np.arange(count) % 2 == 0, cfg.sliding_window, _GLOBAL_WINDOW
+            )
+            return jnp.asarray(w, jnp.int32)
+        if cfg.sliding_window:
+            return jnp.full((count,), cfg.sliding_window, jnp.int32)
+        return None
+
+    # ------------------------------------------------------------------
+    # Group runners (scan over stacked layers)
+    # ------------------------------------------------------------------
+
+    def _run_group(
+        self, kind: str, count: int, x, gparams, *, positions,
+        cache=None, cache_index=None, enc_out=None, remat: bool = False,
+    ):
+        cfg = self.cfg
+        windows = self._window_array(count)
+
+        def body_fn(h, layer_p, win, layer_cache):
+            kw = dict(positions=positions)
+            if windows is not None:
+                kw["window"] = win
+            if enc_out is not None:
+                kw["enc_out"] = enc_out
+            if layer_cache is not None:
+                kw["cache"] = layer_cache
+                kw["cache_index"] = cache_index
+            return blk.run_block(kind, h, layer_p, cfg, **kw)
+
+        if remat:
+            body_fn = jax.checkpoint(
+                body_fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+
+        def scan_body(h, xs):
+            layer_p, win, layer_cache = xs
+            y, new_cache = body_fn(h, layer_p, win, layer_cache)
+            return y, new_cache
+
+        win_xs = windows if windows is not None else jnp.zeros((count,), jnp.int32)
+        xs = (gparams, win_xs, cache)
+        y, new_cache = jax.lax.scan(scan_body, x, xs)
+        return y, new_cache
+
+    # ------------------------------------------------------------------
+    # Forward (train): returns final hidden states (B, S, D)
+    # ------------------------------------------------------------------
+
+    def forward(self, params, inputs: Dict[str, jnp.ndarray], remat: bool = False):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._forward_encdec(params, inputs, remat=remat)
+
+        x = self._embed_inputs(params, inputs)
+        b, s = x.shape[0], x.shape[1]
+        positions = self._positions(inputs, b, s)
+
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            x = self._run_hybrid(params, x, positions, remat=remat)
+        else:
+            for i, g in enumerate(self.groups):
+                x, _ = self._run_group(
+                    g.kind, g.count, x, params[f"g{i}"],
+                    positions=positions, remat=remat,
+                )
+        return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    def _run_hybrid(
+        self, params, x, positions, *, cache=None, cache_index=None, remat=False
+    ):
+        cfg = self.cfg
+        every = cfg.shared_attn_every
+        l = cfg.num_layers
+        gparams = params["g0"]
+        mcache = cache["g0"] if cache is not None else None
+        new_mcache = [] if cache is not None else None
+        new_shared = [] if cache is not None else None
+
+        def shared_block(h, site):
+            scache = None
+            if cache is not None:
+                scache = jax.tree_util.tree_map(lambda a: a[site], cache["shared"])
+            out, sc = blk.gqa_block(
+                h, params["shared_attn"], cfg, kind="gqa_dense",
+                positions=positions, cache=scache, cache_index=cache_index,
+            )
+            return out, sc
+
+        site = 0
+        for lo in range(0, l, every):
+            hi = min(lo + every, l)
+            x, sc = shared_block(x, site)
+            if cache is not None:
+                new_shared.append(sc)
+            sub = jax.tree_util.tree_map(lambda a: a[lo:hi], gparams)
+            subcache = (
+                jax.tree_util.tree_map(lambda a: a[lo:hi], mcache)
+                if mcache is not None
+                else None
+            )
+            x, nc = self._run_group(
+                "mamba", hi - lo, x, sub,
+                positions=positions, cache=subcache, cache_index=cache_index,
+                remat=remat,
+            )
+            if cache is not None:
+                new_mcache.append(nc)
+            site += 1
+
+        if cache is not None:
+            cat = lambda parts: jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *parts
+            )
+            stack = lambda parts: jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=0), *parts
+            )
+            new_cache = {"g0": cat(new_mcache), "shared": stack(new_shared)}
+            return x, new_cache
+        return x
+
+    def _forward_encdec(
+        self, params, inputs, *, remat=False, cache=None, cache_index=None
+    ):
+        cfg = self.cfg
+        frames = inputs["frames"].astype(jnp.dtype(cfg.dtype))  # (B, Senc, D)
+        b, senc, _ = frames.shape
+        pos_table = sinusoidal_positions(senc, cfg.d_model).astype(frames.dtype)
+        xe = partition.constrain(frames + pos_table[None], ("batch", None, None))
+        epos = self._positions({}, b, senc)
+        xe, _ = self._run_group("enc", self.groups[0].count, xe, params["g0"],
+                                positions=epos, remat=remat)
+        enc_out = rmsnorm(xe, params["enc_norm"], cfg.norm_eps)
+
+        tokens = inputs["tokens"]
+        s = tokens.shape[1]
+        xd = embed(tokens, params["embed"], cfg)
+        dpos = self._positions({}, b, s, offset=cache_index or 0)
+        xd, new_cache = self._run_group(
+            "dec_cross", self.groups[1].count, xd, params["g1"],
+            positions=dpos, enc_out=enc_out,
+            cache=cache["g1"] if cache is not None else None,
+            cache_index=cache_index, remat=remat,
+        )
+        hidden = rmsnorm(xd, params["final_norm"], cfg.norm_eps)
+        if cache is not None:
+            return hidden, {"g1": new_cache}
+        return hidden
+
+    # ------------------------------------------------------------------
+    # Serving: prefill + decode
+    # ------------------------------------------------------------------
+
+    def prefill(self, params, inputs, cache):
+        """Run the prompt once, fill the cache; returns (last_logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            hidden, new_cache = self._forward_encdec(
+                params, inputs, cache=cache, cache_index=0
+            )
+        else:
+            x = self._embed_inputs(params, inputs)
+            b, s = x.shape[0], x.shape[1]
+            positions = self._positions(inputs, b, s)
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                x, new_cache = self._run_hybrid(
+                    params, x, positions, cache=cache, cache_index=0
+                )
+            else:
+                new_cache = {}
+                for i, g in enumerate(self.groups):
+                    x, nc = self._run_group(
+                        g.kind, g.count, x, params[f"g{i}"],
+                        positions=positions, cache=cache[f"g{i}"], cache_index=0,
+                    )
+                    new_cache[f"g{i}"] = nc
+            hidden = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(hidden[:, -1:], params["embed"], cfg)
+        return logits, new_cache
+
+    def decode_step(self, params, inputs, cache, cache_index):
+        """One decode step: inputs['tokens'] (B, 1) -> (logits, new cache)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            hidden, new_cache = self._decode_encdec(params, inputs, cache, cache_index)
+            logits = unembed(hidden, params["embed"], cfg)
+            return logits, new_cache
+
+        x = self._embed_inputs(params, {"tokens": inputs["tokens"]})
+        b, s = x.shape[0], x.shape[1]
+        positions = self._positions(inputs, b, s, offset=cache_index)
+        if cfg.family == "hybrid" and cfg.shared_attn_every:
+            x, new_cache = self._run_hybrid(
+                params, x, positions, cache=cache, cache_index=cache_index
+            )
+        else:
+            new_cache = {}
+            for i, g in enumerate(self.groups):
+                x, nc = self._run_group(
+                    g.kind, g.count, x, params[f"g{i}"],
+                    positions=positions, cache=cache[f"g{i}"], cache_index=cache_index,
+                )
+                new_cache[f"g{i}"] = nc
+        hidden = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(hidden, params["embed"], cfg)
+        return logits, new_cache
+
+    def _decode_encdec(self, params, inputs, cache, cache_index):
+        """Decoder-only step against cached cross K/V (no encoder rerun)."""
+        cfg = self.cfg
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        xd = embed(tokens, params["embed"], cfg)
+        dpos = self._positions({}, b, s, offset=cache_index)
+        xd, new_g1 = self._run_group(
+            "dec_cross", self.groups[1].count, xd, params["g1"],
+            positions=dpos, cache=cache["g1"], cache_index=cache_index,
+        )
+        return rmsnorm(xd, params["final_norm"], cfg.norm_eps), {"g1": new_g1}
+
+    # ------------------------------------------------------------------
+
+    def logits(self, params, hidden):
+        return unembed(hidden, params["embed"], self.cfg)

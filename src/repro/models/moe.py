@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP sharding.
+
+Dispatch is sort-based with a static per-expert capacity (GShard-style):
+tokens (flattened to T = B*S) pick top-k experts; assignments are ranked
+within each expert by a stable sort and tokens beyond capacity are
+dropped (their contribution is zero — the residual stream passes them
+through).  The gathered (E, C, D) buffers shard E over the ``model`` axis
+(expert parallelism); SPMD materializes the all-to-alls.
+
+``router="lp"``: LP-balanced routing — the paper's batched simplex solves
+a (G x E)-variable transportation relaxation per call (token groups ->
+experts, maximize affinity under capacity) and the result biases the
+router scores.  This is the in-model integration of the paper's technique
+(DESIGN.md Sec. 5); off by default, exercised by tests/ablations.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import ParamSpec, partition
+from .config import ModelConfig
+from .layers import mlp, mlp_specs
+
+
+def moe_specs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = {
+        "router": ParamSpec((d, e), ("fsdp", None), dtype="float32"),
+        "wi": ParamSpec((e, d, 2 * f), ("expert_tp", "fsdp", None), dtype=cfg.dtype),
+        "wo": ParamSpec((e, f, d), ("expert_tp", None, "fsdp"), dtype=cfg.dtype),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_specs(d, f * cfg.num_shared_experts, cfg.dtype)
+    return s
+
+
+def _capacity(t: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(t * cfg.top_k * cfg.capacity_factor / cfg.num_experts))
+    return max(8, ((c + 7) // 8) * 8)  # sublane-align
+
+
+def _lp_balance_bias(
+    xf: jnp.ndarray, logits: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """LP-balanced routing bias via the batched simplex (see module doc).
+
+    Tokens are hashed into G groups; decision variables y[g,e] = fraction
+    of group g routed to expert e.  LP (in solver standard form, y >= 0):
+        max   sum affinity[g,e] * y[g,e]
+        s.t.  sum_e y[g,e] <= 1         (per group)
+              sum_g s_g y[g,e] <= cap_e (per expert)
+    The optimal y biases the token logits of its group: +log(y + eps).
+    """
+    from ..core import simplex as _simplex  # local import: optional feature
+
+    t, e = logits.shape
+    g = cfg.router_groups
+    groups = jnp.arange(t) % g  # static grouping (cheap, deterministic)
+    onehot = jax.nn.one_hot(groups, g, dtype=logits.dtype)  # (T, G)
+    counts = jnp.sum(onehot, axis=0)  # (G,)
+    affinity = jnp.einsum("tg,te->ge", onehot, jax.nn.softmax(logits, axis=-1))
+    affinity = affinity / jnp.maximum(counts[:, None], 1.0)
+
+    nvar = g * e
+    ncon = g + e
+    a = jnp.zeros((1, ncon, nvar), jnp.float32)
+    row_g = jnp.repeat(jnp.arange(g), e)
+    a = a.at[0, row_g, jnp.arange(nvar)].set(1.0)  # group rows
+    col_e = jnp.tile(jnp.arange(e), g)
+    share = counts[row_g] / t  # weight by group mass
+    a = a.at[0, g + col_e, jnp.arange(nvar)].set(share)
+    cap = jnp.full((e,), cfg.top_k * cfg.capacity_factor / e, jnp.float32)
+    b = jnp.concatenate([jnp.ones((g,)), cap])[None]
+    c = affinity.reshape(1, nvar).astype(jnp.float32)
+    sol = _simplex.solve_batched(a, b, c, max_iters=8 * (nvar + ncon))
+    y = jnp.clip(sol.x.reshape(g, e), 0.0, 1.0)
+    bias = jnp.log(y + 1e-6)  # (G, E)
+    return jnp.einsum("tg,ge->te", onehot, bias).astype(logits.dtype)
+
+
+def route(
+    xf: jnp.ndarray, p, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Router: (T, D) -> (weights (T,k), experts (T,k))."""
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    if cfg.router == "lp":
+        logits = logits + _lp_balance_bias(xf, logits, cfg)
+    weights, experts = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    return weights.astype(xf.dtype), experts
+
+
+def moe_ffn(x: jnp.ndarray, p, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D).
+
+    Group-local dispatch (GShard-style): tokens are split into G groups
+    aligned with the data-parallel shards; argsort/scatter stay *inside* a
+    group (no cross-device sort), and the (G, E) -> (E, G) transpose of
+    the capacity buffers is the EP all-to-all, which SPMD lowers
+    natively.  A global sort would be all-gathered by SPMD — observed as
+    a replicated (T*k, D) gather (51 GB) + 668 GB/device temp on dbrx.
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.top_k
+    e = cfg.num_experts
+
+    g = partition.axis_size("batch")
+    if g <= 1 or t % g != 0:
+        g = 1
+    tl = t // g
+    cap = _capacity(tl, cfg)
+
+    xg = partition.constrain(x.reshape(g, tl, d), ("batch", None, None))
+
+    weights, experts = route(xg.reshape(t, d), p, cfg)  # (T,k), (T,k)
+    flat_e = experts.reshape(g, tl * k)
+    flat_w = weights.reshape(g, tl * k)
+    tok_of = jnp.repeat(jnp.arange(tl), k)[None, :]  # (1, tl*k) token-in-group
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # per-group sort
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(jnp.broadcast_to(tok_of, (g, tl * k)), order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    seg_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)  # (G,E)
+    rank = jnp.arange(tl * k)[None, :] - jnp.take_along_axis(seg_start, se, axis=-1)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)  # overflow -> scratch row
+
+    # Per-group gather into (G, E*C+1, D) buffers (scratch row dropped).
+    toks = jnp.take_along_axis(xg, st[..., None], axis=1)  # (G, tl*k, D)
+    buf = jnp.zeros((g, e * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, sl, tk: bf.at[sl].set(tk))(buf, slot, toks)
+    buf = buf[:, :-1].reshape(g, e, cap, d)
+    # EP all-to-all: (G@data, E, C, D) -> (E@model, G@data, C, D)
+    buf = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+    buf = partition.constrain(buf, ("expert_tp", "batch", None))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    gg, u = jnp.split(h, 2, axis=-1)
+    gg = jax.nn.silu(gg) if cfg.act == "silu" else jax.nn.gelu(gg, approximate=True)
+    h = gg * u
+    h = partition.constrain(h, ("expert_tp", "batch", None))
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    # inverse all-to-all: back to (G@data, E*C, D)
+    out = out.reshape(e, g, cap, d).transpose(1, 0, 2, 3).reshape(g, e * cap, d)
+    out = partition.constrain(out, ("batch", None, None))
+    out = jnp.concatenate([out, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+
+    expert_out = jnp.take_along_axis(out, slot[..., None], axis=1)
+    expert_out = expert_out * (sw * keep)[..., None].astype(x.dtype)
+    y = jnp.zeros((g, tl, d), x.dtype)
+    y = jax.vmap(lambda yy, sl, eo: yy.at[sl].add(eo))(y, st, expert_out)
+    y = partition.constrain(y, ("batch", None, None))
+
+    if cfg.num_shared_experts:
+        y = y + mlp(x, p["shared"], cfg.act).reshape(g, tl, d)
+    return y.reshape(b, s, d)

@@ -1,0 +1,106 @@
+"""Straggler mitigation for batched-LP serving.
+
+At pod scale, a megabatch of LPs is split into work units dispatched to
+device groups (hosts).  A slow/failed group would stall the whole batch —
+the classic straggler problem.  Mitigation: deadline-based re-dispatch —
+any unit that misses ``deadline = alpha * median(done unit times)`` is
+speculatively re-executed on an idle group; first result wins (LP solves
+are deterministic, so duplicated work is safe).
+
+On this 1-core container "groups" are worker threads around the same jit
+executable; on a real pod they are per-host processes.  The scheduler
+logic is identical and tested by injecting artificial delays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class UnitResult:
+    unit: int
+    worker: int
+    elapsed: float
+    speculative: bool
+    value: object = None
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    results: List[UnitResult]
+    respawned: int
+    wall_time: float
+
+
+def run_with_speculation(
+    units: Sequence,
+    solve_fn: Callable[[object, int], object],  # (unit_payload, worker_id)
+    n_workers: int = 4,
+    alpha: float = 3.0,
+    min_done_for_deadline: int = 2,
+    poll: float = 0.01,
+    max_speculative: Optional[int] = None,
+) -> ScheduleReport:
+    """Dispatch units to workers; re-dispatch stragglers past the deadline."""
+    t_start = time.perf_counter()
+    done_times: List[float] = []
+    results: Dict[int, UnitResult] = {}
+    respawned = 0
+    lock = threading.Lock()
+
+    def task(unit_idx: int, payload, worker: int, speculative: bool):
+        t0 = time.perf_counter()
+        value = solve_fn(payload, worker)
+        dt = time.perf_counter() - t0
+        return UnitResult(unit_idx, worker, dt, speculative, value)
+
+    pending: Dict[Future, Tuple[int, float, bool]] = {}
+    # NOTE: no context manager — a straggling original attempt must not
+    # block completion once its speculative twin has delivered the result
+    # (first write wins; LP solves are deterministic so both agree).
+    pool = ThreadPoolExecutor(max_workers=n_workers + 2)
+    try:
+        next_worker = 0
+        for i, payload in enumerate(units):
+            f = pool.submit(task, i, payload, next_worker % n_workers, False)
+            pending[f] = (i, time.perf_counter(), False)
+            next_worker += 1
+
+        while len(results) < len(units):
+            done, _ = wait(list(pending), timeout=poll, return_when=FIRST_COMPLETED)
+            for f in done:
+                unit_idx, t0, spec = pending.pop(f)
+                res = f.result()
+                with lock:
+                    if unit_idx not in results:
+                        results[unit_idx] = res
+                        done_times.append(res.elapsed)
+            # deadline check for stragglers
+            if len(done_times) >= min_done_for_deadline:
+                deadline = alpha * float(np.median(done_times))
+                now = time.perf_counter()
+                for f, (unit_idx, t0, spec) in list(pending.items()):
+                    if spec or unit_idx in results:
+                        continue
+                    if now - t0 > deadline:
+                        if max_speculative is not None and respawned >= max_speculative:
+                            continue
+                        payload = units[unit_idx]
+                        nf = pool.submit(
+                            task, unit_idx, payload, next_worker % n_workers, True
+                        )
+                        pending[nf] = (unit_idx, now, True)
+                        next_worker += 1
+                        respawned += 1
+    finally:
+        pool.shutdown(wait=False)
+
+    ordered = [results[i] for i in range(len(units))]
+    return ScheduleReport(ordered, respawned, time.perf_counter() - t_start)

@@ -1,0 +1,61 @@
+"""Serving engine: batched prefill + greedy decode with a static KV cache.
+
+``generate`` drives the model's prefill/decode_step under jit with donated
+cache buffers (the functional cache update is in-place post-donation).
+The LP-serving path (batched LP requests, straggler re-dispatch) lives in
+``runtime/straggler.py`` and ``launch/serve_lp.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_len: int, enc_len: int = 0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.enc_len = enc_len
+
+        self._prefill = jax.jit(model.prefill)
+        # donate the cache: decode rewrites it in place
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def generate(
+        self,
+        inputs: Dict[str, jnp.ndarray],
+        steps: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> jnp.ndarray:
+        """Greedy (or sampled) continuation of a batch of prompts."""
+        tokens = inputs["tokens"]
+        b, prompt_len = tokens.shape
+        cache = self.model.init_cache(b, self.max_len, enc_len=self.enc_len)
+        logits, cache = self._prefill(self.params, inputs, cache)
+        out = []
+        key = jax.random.PRNGKey(seed)
+        cur = self._sample(logits[:, -1], temperature, key)
+        out.append(cur)
+        for i in range(steps - 1):
+            key, sub = jax.random.split(key)
+            step_in = {"tokens": cur[:, None]}
+            logits, cache = self._decode(
+                self.params, step_in, cache, prompt_len + i
+            )
+            cur = self._sample(logits[:, -1], temperature, sub)
+            out.append(cur)
+        return jnp.stack(out, axis=1)  # (B, steps)
+
+    @staticmethod
+    def _sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,15 @@
+from . import partition, rules
+from .partition import activate, constrain, resolve_spec
+from .rules import ParamSpec, materialize, shape_structs, shardings
+
+__all__ = [
+    "partition",
+    "rules",
+    "activate",
+    "constrain",
+    "resolve_spec",
+    "ParamSpec",
+    "materialize",
+    "shape_structs",
+    "shardings",
+]

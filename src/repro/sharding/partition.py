@@ -1,0 +1,124 @@
+"""Logical-axis partitioning with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+them to physical mesh axes.  The mapping degrades gracefully: any
+(dim, mesh-axes) assignment that does not divide evenly is dropped to
+replication, so the same model code lowers on a 1-device CPU, a 256-chip
+pod and a 512-chip multi-pod mesh without per-arch hand-tuning.
+
+Usage:
+    with partition.activate(mesh, RULES):
+        y = partition.constrain(x, ("batch", "seq_tp", None))
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# Default logical->physical rules for the production meshes.  "fsdp" axes
+# are every data-parallel axis present in the mesh (pod + data).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "seq_tp": ("model",),  # sequence/context parallelism
+    "heads_tp": ("model",),  # tensor parallelism over heads
+    "embed_tp": ("model",),  # tensor parallelism over hidden/ffn
+    "vocab_tp": ("model",),
+    "expert_tp": ("model",),  # expert parallelism
+    "kv_seq_tp": ("model",),  # KV-cache sequence sharding
+    "layer": (),  # scan-stacked layer dim: replicated
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Tuple[str, ...]] = {}
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh], rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes a logical axis maps to (1 if inactive)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return 1
+    axes = [a for a in _CTX.rules.get(logical, ()) if a in mesh.shape]
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def resolve_spec(shape: Sequence[int], logical_axes: Sequence[AxisName]) -> P:
+    """Map logical axes to a PartitionSpec, dropping indivisible assignments."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        names = (name,) if isinstance(name, str) else tuple(name)
+        phys: list = []
+        for ln in names:
+            for ax in _CTX.rules.get(ln, ()):
+                if ax in mesh.shape and ax not in used:
+                    phys.append(ax)
+        if not phys:
+            out.append(None)
+            continue
+        total = int(np.prod([mesh.shape[a] for a in phys]))
+        if dim % total != 0 or dim == 0:
+            # Try dropping trailing axes until divisible.
+            while phys:
+                total = int(np.prod([mesh.shape[a] for a in phys]))
+                if dim % total == 0 and total > 1:
+                    break
+                phys.pop()
+            if not phys:
+                out.append(None)
+                continue
+        used.update(phys)
+        out.append(tuple(phys) if len(phys) > 1 else phys[0])
+    return P(*out)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[AxisName]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], logical_axes: Sequence[AxisName]) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(shape, logical_axes))

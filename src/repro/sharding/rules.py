@@ -1,0 +1,87 @@
+"""Parameter-spec machinery: one source of truth for shapes + shardings.
+
+``abstract_params`` in each model module returns a pytree of ``ParamSpec``
+leaves.  From that single structure we derive
+  * materialized parameters (seeded init, per-leaf folded RNG),
+  * ShapeDtypeStructs for the dry-run (no allocation),
+  * NamedShardings via the logical-axis rules (``partition.resolve_spec``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[partition.AxisName, ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_paths(tree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def materialize(specs, key: jax.Array, dtype_override: Optional[str] = None):
+    """Instantiate parameters from specs with per-path folded RNG."""
+    leaves, treedef = _leaf_paths(specs)
+
+    def make(path, spec: ParamSpec):
+        dt = jnp.dtype(dtype_override or spec.dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        seed = jax.random.fold_in(key, hash(jax.tree_util.keystr(path)) % (2**31))
+        std = spec.scale
+        if spec.init == "normal" and len(spec.shape) >= 2:
+            std = spec.scale / np.sqrt(spec.shape[-2])
+        return (jax.random.normal(seed, spec.shape, jnp.float32) * std).astype(dt)
+
+    made = [make(p, s) for p, s in leaves]
+    return jax.tree_util.tree_unflatten(treedef, made)
+
+
+def shape_structs(specs, dtype_override: Optional[str] = None):
+    """ShapeDtypeStructs (with shardings when a mesh is active) — dry-run."""
+    leaves, treedef = _leaf_paths(specs)
+
+    def make(spec: ParamSpec):
+        sh = partition.named_sharding(spec.shape, spec.axes)
+        dt = jnp.dtype(dtype_override or spec.dtype)
+        if sh is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=sh)
+
+    made = [make(s) for _, s in leaves]
+    return jax.tree_util.tree_unflatten(treedef, made)
+
+
+def shardings(specs):
+    """NamedSharding pytree for jit in_shardings (requires active mesh)."""
+    leaves, treedef = _leaf_paths(specs)
+    made = [partition.named_sharding(s.shape, s.axes) for _, s in leaves]
+    return jax.tree_util.tree_unflatten(treedef, made)
+
+
+def spec_tree_summary(specs) -> Tuple[int, int]:
+    """(num_params, bytes) across the spec tree."""
+    leaves, _ = _leaf_paths(specs)
+    n = sum(int(np.prod(s.shape)) for _, s in leaves)
+    by = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for _, s in leaves)
+    return n, by

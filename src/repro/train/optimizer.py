@@ -1,0 +1,102 @@
+"""AdamW with fp32 master weights — sharded states (ZeRO-3 by construction).
+
+Optimizer state mirrors the parameter pytree, so every state leaf inherits
+the parameter's sharding (params are FSDP+TP sharded => m/v/master are
+too).  No optax dependency: the update is ~30 lines of jnp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    master_weights: bool = True
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any  # fp32 copy of params (None-leaves when disabled)
+
+
+def init(params, cfg: OptConfig) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (
+        # jnp.array(copy=True): .astype is a no-op for f32 params and the
+        # resulting alias would be donated twice on the first step.
+        jax.tree_util.tree_map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+        if cfg.master_weights
+        else None
+    )
+    return OptState(jnp.zeros((), jnp.int32), zeros, jax.tree_util.tree_map(jnp.copy, zeros), master)
+
+
+def _schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def update(grads, state: OptState, params, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        gnorm > cfg.grad_clip, cfg.grad_clip / jnp.maximum(gnorm, 1e-12), 1.0
+    )
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * (g * g)
+        mh = m / bc1
+        vh = v / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * delta
+        new_p = new_master.astype(p.dtype)
+        if new_p is new_master:
+            # f32 params: force a distinct buffer, else params and master
+            # alias one output and the next step donates it twice.
+            new_p = jnp.copy(new_master)
+        return new_p, m, v, new_master
+
+    if cfg.master_weights:
+        flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, params, state.master)
+    else:
+        flat = jax.tree_util.tree_map(
+            lambda g, m, v, p: upd(g, m, v, p, None), grads, state.m, state.v, params
+        )
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_master = (
+        jax.tree_util.tree_map(lambda t: t[3], flat, is_leaf=lambda x: isinstance(x, tuple))
+        if cfg.master_weights
+        else None
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,140 @@
+"""Train step: chunked cross-entropy, grad accumulation, remat, jit wiring.
+
+Memory discipline for the large archs:
+  * remat ("nothing_saveable") on every scanned block;
+  * chunked CE — logits (B, S, V) are never materialized; the hidden
+    states are re-projected per sequence chunk inside a scan;
+  * grad accumulation — ``accum`` microbatches via lax.scan, fp32 grad
+    accumulators sharded like the params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..sharding import partition
+from . import optimizer as opt_mod
+
+CE_CHUNK = 512
+
+
+def chunked_ce_loss(model: Model, params, hidden: jnp.ndarray, labels: jnp.ndarray,
+                    chunk: int = CE_CHUNK) -> jnp.ndarray:
+    """Mean next-token CE without materializing full logits."""
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, l = xs
+        logits = model.logits(params, h).astype(jnp.float32)  # (B, C, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via a masked sum, NOT take_along_axis: a gather over
+        # the vocab axis (sharded on `model`) would all-gather the whole
+        # logits chunk; the masked sum stays local + a tiny all-reduce.
+        v = logits.shape[-1]
+        hit = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) == jnp.maximum(
+            l, 0
+        )[..., None]
+        gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+        valid = (l >= 0).astype(jnp.float32)
+        loss = jnp.sum((logz - gold) * valid)
+        return (carry[0] + loss, carry[1] + jnp.sum(valid)), None
+
+    (total, count), _ = jax.lax.scan(body, (0.0, 0.0), (hc, lc))
+    return total / jnp.maximum(count, 1.0)
+
+
+def make_loss_fn(model: Model, remat: bool = True):
+    def loss_fn(params, batch: Dict[str, jnp.ndarray]):
+        inputs = {k: v for k, v in batch.items() if k != "labels"}
+        hidden = model.forward(params, inputs, remat=remat)
+        return chunked_ce_loss(model, params, hidden, batch["labels"])
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: opt_mod.OptConfig,
+    accum: int = 1,
+    remat: bool = True,
+    compression=None,  # optional grad-compression transform (see compression.py)
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, remat)
+    grad_fn = jax.value_and_grad(loss_fn)
+    param_specs = model.abstract_params()
+
+    def shard_like_params(grads):
+        """Pin gradient shardings to the (FSDP+TP) param layout.
+
+        Without this, XLA resolves each microbatch wgrad with a full f32
+        all-reduce over the data axes (3.3 GB/layer on command-r) instead
+        of a reduce-scatter onto the accumulator's param shard.
+        """
+        return jax.tree_util.tree_map(
+            lambda g, sp: partition.constrain(g, sp.axes),
+            grads,
+            param_specs,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
+        )
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // accum
+
+            def micro(carry, xs):
+                gsum, lsum = carry
+                l, g = grad_fn(params, xs)
+                g32 = jax.tree_util.tree_map(
+                    lambda a, acc: acc + a.astype(jnp.float32), shard_like_params(g), gsum
+                )
+                return (shard_like_params(g32), lsum + l), None
+
+            split = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum, mb, *x.shape[1:]), batch
+            )
+            zeros = shard_like_params(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), split)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            loss, grads = grad_fn(params, batch)
+            grads = shard_like_params(grads)
+
+        if compression is not None:
+            grads, opt_state = compression(grads, opt_state)
+
+        new_params, new_opt, metrics = opt_mod.update(grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model, remat=False)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step

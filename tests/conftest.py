@@ -1,0 +1,4 @@
+import jax
+
+# f64 for the LP solver oracles; model code is dtype-explicit throughout.
+jax.config.update("jax_enable_x64", True)

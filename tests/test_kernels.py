@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lp
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [3, 5, 28, 100, 200])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_hyperbox_kernel_sweep(n, dtype):
+    rng = np.random.default_rng(n)
+    lo, hi, d = lp.random_hyperbox_batch(rng, 57, n, dtype=dtype)
+    out = ops.hyperbox_support(lo, hi, d)
+    expect = ref.hyperbox_ref(lo, hi, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "batch,m,n,feasible",
+    [
+        (16, 5, 5, True),
+        (16, 10, 10, True),
+        (8, 28, 28, True),
+        (4, 60, 60, True),
+        (8, 20, 10, False),
+        (5, 24, 12, False),
+    ],
+)
+def test_simplex_kernel_vs_ref(batch, m, n, feasible):
+    rng = np.random.default_rng(hash((batch, m, n)) % 2**31)
+    b_ = lp.random_lp_batch(rng, batch, m, n, feasible_start=feasible, dtype=np.float32)
+    sol_k = ops.simplex_solve(b_.a, b_.b, b_.c)
+    sol_r = ref.simplex_ref(b_.a, b_.b, b_.c)
+    assert np.array_equal(np.asarray(sol_k.status), np.asarray(sol_r.status))
+    ok = np.asarray(sol_r.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(sol_k.objective)[ok], np.asarray(sol_r.objective)[ok], rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(sol_k.x)[ok], np.asarray(sol_r.x)[ok], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_simplex_kernel_float64():
+    rng = np.random.default_rng(5)
+    b_ = lp.random_lp_batch(rng, 8, 12, 12, feasible_start=True, dtype=np.float64)
+    sol_k = ops.simplex_solve(b_.a, b_.b, b_.c)
+    sol_r = ref.simplex_ref(b_.a, b_.b, b_.c)
+    assert np.array_equal(np.asarray(sol_k.status), np.asarray(sol_r.status))
+    ok = np.asarray(sol_r.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(sol_k.objective)[ok], np.asarray(sol_r.objective)[ok], rtol=1e-12
+    )
+
+
+def test_simplex_kernel_nondivisible_batch_padding():
+    rng = np.random.default_rng(9)
+    b_ = lp.random_lp_batch(rng, 13, 10, 10, True, dtype=np.float32)  # 13 % 8 != 0
+    sol_k = ops.simplex_solve(b_.a, b_.b, b_.c)
+    sol_r = ref.simplex_ref(b_.a, b_.b, b_.c)
+    assert sol_k.objective.shape == (13,)
+    ok = np.asarray(sol_r.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(sol_k.objective)[ok], np.asarray(sol_r.objective)[ok], rtol=1e-5
+    )
+
+
+def test_hyperbox_kernel_large_batch_tiling():
+    rng = np.random.default_rng(3)
+    lo, hi, d = lp.random_hyperbox_batch(rng, 10000, 28, dtype=np.float32)
+    out = ops.hyperbox_support(lo, hi, d, tile_b=512)
+    expect = ref.hyperbox_ref(lo, hi, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6)

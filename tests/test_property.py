@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hyperbox, lp, simplex
+from repro.core.support import Box, box_to_polytope, template_directions
+from repro.launch import hlo_stats
+
+# ---------------------------------------------------------------------------
+# LP duality / feasibility invariants
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def lp_batches(draw):
+    m = draw(st.integers(2, 12))
+    n = draw(st.integers(2, 12))
+    batch = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return lp.random_lp_batch(rng, batch, m, n, feasible_start=True, dtype=np.float64)
+
+
+@given(lp_batches())
+@settings(max_examples=25, deadline=None)
+def test_simplex_solution_is_feasible_and_vertexlike(lpb):
+    sol = simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+    a = np.asarray(lpb.a)
+    b = np.asarray(lpb.b)
+    c = np.asarray(lpb.c)
+    x = np.asarray(sol.x)
+    for i in range(lpb.batch):
+        if int(sol.status[i]) != lp.OPTIMAL:
+            continue
+        # primal feasibility
+        assert (a[i] @ x[i] <= b[i] + 1e-7).all()
+        assert (x[i] >= -1e-9).all()
+        # objective consistency
+        np.testing.assert_allclose(c[i] @ x[i], float(sol.objective[i]), rtol=1e-8)
+        # optimality vs a random feasible point (scaled-down vertex mix)
+        y = x[i] * 0.5
+        assert c[i] @ y <= float(sol.objective[i]) + 1e-7
+
+
+@given(
+    st.integers(1, 6),
+    st.integers(2, 30),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_hyperbox_support_invariants(batch, n, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi, d = lp.random_hyperbox_batch(rng, batch, n, dtype=np.float64)
+    sup, pick = hyperbox.argsupport(lo, hi, d)
+    lo_, hi_, d_, sup_, pick_ = map(np.asarray, (lo, hi, d, sup, pick))
+    # maximizer is inside the box
+    assert (pick_ >= lo_ - 1e-12).all() and (pick_ <= hi_ + 1e-12).all()
+    # support dominates any box point (corner sampling)
+    for _ in range(5):
+        z = np.where(rng.random(lo_.shape) < 0.5, lo_, hi_)
+        assert (np.sum(d_ * z, -1) <= sup_ + 1e-9).all()
+    # positive homogeneity: rho(a l) = a rho(l), a >= 0
+    sup2 = np.asarray(hyperbox.support(lo, hi, 2.5 * d_))
+    np.testing.assert_allclose(sup2, 2.5 * sup_, rtol=1e-10)
+    # sub-additivity: rho(l1 + l2) <= rho(l1) + rho(l2)
+    d2 = rng.normal(size=d_.shape)
+    lhs = np.asarray(hyperbox.support(lo, hi, d_ + d2))
+    rhs = sup_ + np.asarray(hyperbox.support(lo, hi, d2))
+    assert (lhs <= rhs + 1e-9).all()
+
+
+@given(st.integers(2, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_box_support_equals_polytope_lp(dim, seed):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(-2, 0, dim)
+    hi = lo + rng.uniform(0.5, 2, dim)
+    box = Box(lo, hi)
+    dirs = template_directions(dim, "oct").astype(np.float64)
+    s_box = np.asarray(box.support(dirs))
+    s_lp = np.asarray(box_to_polytope(box).support(dirs))
+    np.testing.assert_allclose(s_box, s_lp, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parser round-trip
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.sampled_from(["f32", "bf16", "s32", "f64"]),
+    st.lists(st.integers(1, 64), min_size=0, max_size=4),
+)
+@settings(max_examples=50, deadline=None)
+def test_hlo_shape_bytes(dtype, dims):
+    txt = f"{dtype}[{','.join(map(str, dims))}]"
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4, "f64": 8}[dtype]
+    expect = nbytes * int(np.prod(dims)) if dims else nbytes
+    assert hlo_stats._shape_bytes(txt) == expect
+
+
+def test_hlo_loop_aware_flops_exact():
+    """Scanned matmuls: analyzer must multiply by trip counts (nested)."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(sds, sds).compile()
+    st_ = hlo_stats.analyze(compiled.as_text())
+    expect = 15 * 2 * 64**3  # 5 x 3 matmuls
+    assert abs(st_["dot_flops"] - expect) / expect < 1e-6, st_["dot_flops"]

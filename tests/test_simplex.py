@@ -1,0 +1,143 @@
+"""Batched simplex vs scipy.linprog + NumPy oracle (statuses and optima)."""
+
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+from repro.core import lp, oracle, simplex
+
+
+def _scipy_solve(a, b, c):
+    r = linprog(-c, A_ub=a, b_ub=b, bounds=(0, None), method="highs")
+    if r.status == 0:
+        return lp.OPTIMAL, -r.fun
+    if r.status == 3:
+        return lp.UNBOUNDED, None
+    if r.status == 2:
+        return lp.INFEASIBLE, None
+    return -1, None
+
+
+@pytest.mark.parametrize(
+    "batch,m,n,feasible",
+    [
+        (32, 10, 10, True),
+        (32, 20, 20, True),
+        (8, 50, 50, True),
+        (32, 20, 10, False),
+        (16, 24, 10, False),
+    ],
+)
+def test_matches_scipy(batch, m, n, feasible):
+    rng = np.random.default_rng(hash((batch, m, n, feasible)) % 2**31)
+    lpb = lp.random_lp_batch(rng, batch, m, n, feasible_start=feasible, dtype=np.float64)
+    sol = simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+    a, b, c = np.asarray(lpb.a), np.asarray(lpb.b), np.asarray(lpb.c)
+    for i in range(batch):
+        st, opt = _scipy_solve(a[i], b[i], c[i])
+        assert int(sol.status[i]) == st, f"LP {i}: {lp.STATUS_NAMES[int(sol.status[i])]} vs scipy {st}"
+        if st == lp.OPTIMAL:
+            np.testing.assert_allclose(float(sol.objective[i]), opt, rtol=1e-8, atol=1e-8)
+            # primal feasibility of the returned point
+            x = np.asarray(sol.x[i])
+            assert (a[i] @ x <= b[i] + 1e-7).all()
+            assert (x >= -1e-9).all()
+            np.testing.assert_allclose(c[i] @ x, opt, rtol=1e-8, atol=1e-8)
+
+
+def test_matches_numpy_oracle():
+    rng = np.random.default_rng(7)
+    lpb = lp.random_lp_batch(rng, 24, 20, 10, feasible_start=False, dtype=np.float64)
+    obj, xs, st, _ = oracle.solve_batch(np.asarray(lpb.a), np.asarray(lpb.b), np.asarray(lpb.c))
+    sol = simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+    assert np.array_equal(st, np.asarray(sol.status))
+    ok = st == lp.OPTIMAL
+    np.testing.assert_allclose(np.asarray(sol.objective)[ok], obj[ok], rtol=1e-9)
+
+
+@pytest.mark.parametrize("rule", [simplex.RPC, simplex.BLAND])
+def test_pivot_rules_agree_on_optimum(rule):
+    rng = np.random.default_rng(11)
+    lpb = lp.random_lp_batch(rng, 16, 12, 12, feasible_start=True, dtype=np.float64)
+    base = simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=simplex.LPC)
+    other = simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=rule)
+    assert np.array_equal(np.asarray(base.status), np.asarray(other.status))
+    ok = np.asarray(base.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(other.objective)[ok], np.asarray(base.objective)[ok], rtol=1e-8
+    )
+
+
+def test_rpc_needs_no_fewer_iterations_typically():
+    """Paper Sec 4.6: LPC converges in <= iterations vs RPC (on average)."""
+    rng = np.random.default_rng(13)
+    lpb = lp.random_lp_batch(rng, 64, 30, 30, feasible_start=True, dtype=np.float64)
+    lpc = simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=simplex.LPC)
+    rpc = simplex.solve_batched(lpb.a, lpb.b, lpb.c, rule=simplex.RPC)
+    assert float(np.mean(np.asarray(lpc.iterations))) <= float(
+        np.mean(np.asarray(rpc.iterations))
+    )
+
+
+def test_unbounded_detection():
+    # maximize x1 with only x2 constrained -> unbounded
+    a = np.zeros((1, 1, 2))
+    a[0, 0, 1] = 1.0
+    b = np.ones((1, 1))
+    c = np.array([[1.0, 0.0]])
+    sol = simplex.solve_batched(a, b, c)
+    assert int(sol.status[0]) == lp.UNBOUNDED
+
+
+def test_infeasible_detection():
+    # x1 <= -1 with x >= 0 -> infeasible
+    a = np.array([[[1.0]]])
+    b = np.array([[-1.0]])
+    c = np.array([[1.0]])
+    sol = simplex.solve_batched(a, b, c)
+    assert int(sol.status[0]) == lp.INFEASIBLE
+
+
+def test_degenerate_lp():
+    """Redundant constraints (degenerate vertices) still reach the optimum."""
+    a = np.array([[[1.0, 1.0], [1.0, 1.0], [2.0, 2.0], [1.0, 0.0]]])
+    b = np.array([[1.0, 1.0, 2.0, 0.5]])
+    c = np.array([[1.0, 1.0]])
+    sol = simplex.solve_batched(a, b, c)
+    assert int(sol.status[0]) == lp.OPTIMAL
+    np.testing.assert_allclose(float(sol.objective[0]), 1.0, rtol=1e-9)
+
+
+def test_mixed_batch_statuses():
+    """One batch containing optimal + unbounded + infeasible LPs."""
+    a = np.zeros((3, 2, 2))
+    b = np.zeros((3, 2))
+    c = np.ones((3, 2))
+    # 0: box -> optimal
+    a[0] = np.eye(2)
+    b[0] = [1.0, 2.0]
+    # 1: only x2 bounded -> unbounded in x1
+    a[1, 0, 1] = 1.0
+    a[1, 1, 1] = 1.0
+    b[1] = [1.0, 2.0]
+    # 2: infeasible
+    a[2, 0, 0] = 1.0
+    b[2, 0] = -1.0
+    a[2, 1, 1] = 1.0
+    b[2, 1] = 1.0
+    sol = simplex.solve_batched(a, b, c)
+    assert [int(s) for s in sol.status] == [lp.OPTIMAL, lp.UNBOUNDED, lp.INFEASIBLE]
+    np.testing.assert_allclose(float(sol.objective[0]), 3.0, rtol=1e-9)
+
+
+def test_float32_close_to_float64():
+    rng = np.random.default_rng(17)
+    lpb = lp.random_lp_batch(rng, 32, 30, 30, feasible_start=True, dtype=np.float32)
+    sol32 = simplex.solve_batched(lpb.a, lpb.b, lpb.c)
+    obj64, _, st64, _ = oracle.solve_batch(
+        np.asarray(lpb.a, np.float64), np.asarray(lpb.b, np.float64), np.asarray(lpb.c, np.float64)
+    )
+    assert np.array_equal(st64, np.asarray(sol32.status))
+    ok = st64 == lp.OPTIMAL
+    rel = np.abs(np.asarray(sol32.objective)[ok] - obj64[ok]) / np.maximum(1.0, np.abs(obj64[ok]))
+    assert rel.max() < 5e-4

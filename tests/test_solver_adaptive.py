@@ -1,0 +1,32 @@
+"""Adaptive two-pass lockstep solve: equivalence + bounded re-work."""
+
+import numpy as np
+
+from repro.core import lp
+from repro.core.solver import BatchedLPSolver
+
+
+def test_adaptive_matches_full_solve():
+    rng = np.random.default_rng(21)
+    batch = lp.random_lp_batch(rng, 128, 30, 30, True, dtype=np.float64)
+    solver = BatchedLPSolver()
+    full = solver.solve(batch)
+    adaptive = solver.solve_adaptive(batch, first_cap=25)  # force a 2nd pass
+    assert np.array_equal(np.asarray(full.status), np.asarray(adaptive.status))
+    ok = np.asarray(full.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(adaptive.objective)[ok], np.asarray(full.objective)[ok], rtol=1e-9
+    )
+
+
+def test_adaptive_second_pass_is_small():
+    rng = np.random.default_rng(22)
+    batch = lp.random_lp_batch(rng, 256, 20, 20, True, dtype=np.float64)
+    solver = BatchedLPSolver()
+    full = solver.solve(batch)
+    iters = np.asarray(full.iterations)
+    cap = int(np.median(iters) * 2)
+    adaptive = solver.solve_adaptive(batch, first_cap=cap)
+    assert np.array_equal(np.asarray(full.status), np.asarray(adaptive.status))
+    # at 2x-median cap, the long tail re-solved in pass 2 must be a minority
+    assert (iters > cap).sum() < 0.5 * len(iters)

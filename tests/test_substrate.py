@@ -1,0 +1,243 @@
+"""Substrate tests: data pipeline, checkpointing, fault recovery, optimizer,
+solver chunking, support functions, reachability, straggler scheduler."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+from repro.core import lp, reach
+from repro.core.solver import BatchedLPSolver
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.runtime.fault import DriverConfig, Preemption, TrainDriver
+from repro.runtime.straggler import run_with_speculation
+from repro.train import optimizer as opt_mod
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_replay():
+    cfg = DataConfig(vocab_size=977, seq_len=64, global_batch=8, seed=3)
+    a = SyntheticLM(cfg).batch(5)
+    b = SyntheticLM(cfg).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    c = SyntheticLM(cfg).batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab_size=977, seq_len=32, global_batch=8, seed=1)
+    h0 = SyntheticLM(cfg, host_index=0, num_hosts=2).batch(0)
+    h1 = SyntheticLM(cfg, host_index=1, num_hosts=2).batch(0)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+    src = SyntheticLM(cfg)
+    pf = Prefetcher(src, start_step=0, depth=2)
+    try:
+        s0, b0 = pf.next()
+        s1, b1 = pf.next()
+        assert (s0, s1) == (0, 1)
+        np.testing.assert_array_equal(b0["tokens"], src.batch(0)["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16), "step": jnp.asarray(7)}}
+    ckpt.save(str(tmp_path), 3, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    out = ckpt.restore(str(tmp_path), tree)
+    for l1, l2 in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        w.submit(s, tree)
+    w.wait()
+    w.close()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) <= 2
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_elastic_restore_to_new_sharding(tmp_path):
+    """Save unsharded, restore with an explicit (1-device) sharding."""
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(str(tmp_path), 1, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None))
+    out = ckpt.restore(str(tmp_path), tree, shardings={"w": sh})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding == sh
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant driver
+# ---------------------------------------------------------------------------
+
+
+def _toy_setup():
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    ocfg = opt_mod.OptConfig(lr=0.1, warmup_steps=1, weight_decay=0.0)
+    opt_state = opt_mod.init(params, ocfg)
+
+    def data_fn(step):
+        return {"t": np.full((4,), float(step), np.float32)}
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return jnp.mean((p["w"] - batch["t"]) ** 2)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        p2, o2, m = opt_mod.update(g, opt_state, params, ocfg)
+        return p2, o2, {**m, "loss": loss}
+
+    return params, opt_state, train_step, data_fn
+
+
+def test_driver_checkpoint_restart(tmp_path):
+    params, opt_state, step_fn, data_fn = _toy_setup()
+    cfg = DriverConfig(str(tmp_path), ckpt_every=5, log_every=100)
+    driver = TrainDriver(cfg, step_fn, data_fn)
+    # crash at step 12 (after the step-10 checkpoint)
+    with pytest.raises(Preemption):
+        driver.run(params, opt_state, 20, preempt_at=12)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    # restart: resumes from 10 and completes; deterministic data replays
+    p_resumed, o_resumed, _ = driver.run(params, opt_state, 20)
+    # reference: uninterrupted run
+    p_ref, o_ref, _ = TrainDriver(
+        DriverConfig(str(tmp_path) + "_ref", ckpt_every=100, log_every=100),
+        step_fn, data_fn,
+    ).run(params, opt_state, 20)
+    np.testing.assert_allclose(
+        np.asarray(p_resumed["w"]), np.asarray(p_ref["w"]), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0], jnp.float32)}
+    ocfg = opt_mod.OptConfig(lr=0.3, warmup_steps=1, weight_decay=0.0)
+    state = opt_mod.init(params, ocfg)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        return opt_mod.update(g, state, params, ocfg)
+
+    for _ in range(150):
+        params, state, _ = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_limits_norm():
+    params = {"w": jnp.asarray([1.0], jnp.float32)}
+    ocfg = opt_mod.OptConfig(lr=1e-3, grad_clip=0.5, warmup_steps=1)
+    state = opt_mod.init(params, ocfg)
+    g = {"w": jnp.asarray([100.0], jnp.float32)}
+    _, _, m = opt_mod.update(g, state, params, ocfg)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# solver API + reachability application
+# ---------------------------------------------------------------------------
+
+
+def test_solver_chunked_equals_single():
+    rng = np.random.default_rng(1)
+    lpb = lp.random_lp_batch(rng, 64, 12, 12, True)
+    s1 = BatchedLPSolver().solve(lpb)
+    s2 = BatchedLPSolver(chunk_size=20).solve(lpb)
+    np.testing.assert_allclose(
+        np.asarray(s1.objective), np.asarray(s2.objective), rtol=1e-9
+    )
+
+
+def test_solver_pallas_backend_matches_xla():
+    rng = np.random.default_rng(2)
+    lpb = lp.random_lp_batch(rng, 16, 10, 10, True, dtype=np.float32)
+    s1 = BatchedLPSolver(backend="xla").solve(lpb)
+    s2 = BatchedLPSolver(backend="pallas").solve(lpb)
+    assert np.array_equal(np.asarray(s1.status), np.asarray(s2.status))
+    ok = np.asarray(s1.status) == lp.OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(s1.objective)[ok], np.asarray(s2.objective)[ok], rtol=1e-4
+    )
+
+
+def test_reachability_five_dim_contains_trajectory():
+    """Simulated trajectories stay inside the support-function flowpipe."""
+    import scipy.linalg
+
+    sys5 = reach.five_dim_model()
+    delta, steps = 0.02, 40
+    dirs = reach.template_directions(5, "box")
+    sup, _ = reach.reach_supports(sys5, delta, steps, directions=dirs)
+    phi = scipy.linalg.expm(sys5.a * delta)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        x = rng.uniform(sys5.x0.lo, sys5.x0.hi)
+        for k_ in range(steps):
+            # support in each template direction bounds the trajectory
+            vals = dirs @ x
+            assert (vals <= sup[k_] + 1e-6).all(), (k_, vals, sup[k_])
+            x = phi @ x + delta * sys5.u.lo  # point input set
+def test_reach_support_general_vs_hyperbox_path():
+    sys5 = reach.five_dim_model()
+    s_box, _ = reach.reach_supports(sys5, 0.05, 10, use_hyperbox=True)
+    s_gen, _ = reach.reach_supports(sys5, 0.05, 10, use_hyperbox=False)
+    np.testing.assert_allclose(s_box, s_gen, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_speculative_redispatch():
+    calls = {"n": 0}
+
+    def solve(payload, worker):
+        calls["n"] += 1
+        if payload == "slow" and calls["n"] <= 1:
+            time.sleep(1.0)  # first attempt straggles
+        else:
+            time.sleep(0.02)
+        return payload
+
+    units = ["slow"] + ["u%d" % i for i in range(7)]
+    rep = run_with_speculation(units, solve, n_workers=4, alpha=3.0)
+    assert [r.value for r in rep.results] == units
+    assert rep.respawned >= 1
+    # speculation should beat waiting for the 1 s straggler serially
+    assert rep.wall_time < 2.0
