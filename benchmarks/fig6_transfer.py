@@ -1,7 +1,7 @@
 """Paper Fig. 6 + Sec 4.4: host->device transfer vs solve profile; overlap.
 
 Measures, per (dim, batch): host staging (device_put of A, b, c), solve
-time, and the chunked double-buffered pipeline of core/solver.py (the
+time, and the chunked double-buffered pipeline of core/dispatch.py (the
 CUDA-streams analogue) vs a strictly sequential transfer->solve schedule.
 Also reports the H2D byte reduction from building tableaus device-side
 (the library transfers A,b,c = O(mn) rather than the paper's full
@@ -15,8 +15,9 @@ import time
 import jax
 import numpy as np
 
+import repro
+from repro import SolveOptions
 from repro.core import lp, simplex
-from repro.core.solver import BatchedLPSolver
 
 from .common import emit, time_fn
 
@@ -48,8 +49,8 @@ def run(full: bool = False):
 
         # streams analogue: chunked double-buffer vs sequential chunks
         chunks = 4
-        solver = BatchedLPSolver(chunk_size=bsz // chunks)
-        t_overlap = time_fn(lambda: solver.solve(lpb))
+        options = SolveOptions(chunk_size=bsz // chunks)
+        t_overlap = time_fn(lambda: repro.solve(lpb, options))
 
         def sequential():
             outs = []

@@ -11,7 +11,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import oracle, reach
-from repro.core.solver import BatchedLPSolver
 from repro.core.support import box_to_polytope, template_directions
 
 from .common import emit, time_fn

@@ -1,48 +1,76 @@
-"""Quickstart: solve a batch of LPs three ways and cross-check.
+"""Quickstart for the unified ``repro.solve`` front-end.
+
+Shows the four ways in: a general-form problem batch, a heterogeneous
+problem list (shape-bucketed megabatching), the closed-form hyperbox
+path, and backend selection through the registry.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
+import repro
+from repro import LPProblem, SolveOptions
 from repro.core import lp
-from repro.core.solver import BatchedLPSolver
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # 1) General LPs: max c.x s.t. Ax <= b, x >= 0  — batched simplex.
+    # 1) General form: minimize c.x s.t. bl <= Ax <= bu, lo <= x <= hi.
+    #    (equality rows via bl == bu, free variables via lo = -inf)
+    p = LPProblem.make(
+        c=[2.0, 1.0, -1.0],
+        a=[[1.0, 1.0, 1.0], [1.0, -1.0, 0.0]],
+        bl=[3.0, -np.inf],
+        bu=[3.0, 2.0],          # first row is an equality: x1+x2+x3 == 3
+        lo=[0.0, 0.0, -np.inf],  # x3 is free
+        hi=[2.0, np.inf, 1.0],
+        maximize=False,
+    )
+    sol = repro.solve(p)
+    print(f"general form: objective={float(sol.objective[0]):.3f}, "
+          f"x={np.asarray(sol.x[0]).round(3)}, "
+          f"status={lp.STATUS_NAMES[int(sol.status[0])]}")
+
+    # 2) A batch of canonical LPs (the paper's form) still goes straight in.
     batch = lp.random_lp_batch(rng, batch=1000, m=28, n=28, feasible_start=True,
                                dtype=np.float32)
-    solver = BatchedLPSolver(rule="lpc")
-    sol = solver.solve(batch)
+    sol = repro.solve(batch, SolveOptions(rule="lpc"))
     print(f"solved {batch.batch} LPs of size {batch.m}x{batch.n}")
     print(f"  statuses: optimal={int((np.asarray(sol.status)==lp.OPTIMAL).sum())}, "
           f"mean iterations={float(np.asarray(sol.iterations).mean()):.1f}")
-    print(f"  first objectives: {np.asarray(sol.objective[:4]).round(3)}")
 
-    # 2) Two-phase LPs (infeasible initial basis, like the paper's 2nd class).
-    batch2 = lp.random_lp_batch(rng, 500, m=24, n=10, feasible_start=False,
-                                dtype=np.float32)
-    sol2 = solver.solve(batch2)
-    print(f"two-phase batch: optimal={int((np.asarray(sol2.status)==lp.OPTIMAL).sum())}"
-          f"/{batch2.batch}")
+    # 3) Heterogeneous list: mixed shapes bucketed into shape-class
+    #    megabatches, results scattered back in input order.
+    problems = []
+    for dim in (5, 12, 28, 5, 12, 5):
+        b = lp.random_lp_batch(rng, 1, dim, dim, True, dtype=np.float32)
+        problems.append(LPProblem.make(b.c, b.a, bu=b.b))
+    sols = repro.solve(problems)
+    print(f"heterogeneous list: {len(problems)} LPs in "
+          f"{len({(q.m, q.n) for q in problems})} shape classes -> "
+          f"objectives {[round(float(s.objective[0]), 3) for s in sols]}")
 
-    # 3) Hyperbox LPs (paper Sec. 6): closed form, millions at a time.
+    # 4) Hyperbox LPs (paper Sec. 6): closed form, millions at a time.
+    #    Box-only problems (no general rows) auto-route here too.
     lo, hi, dirs = lp.random_hyperbox_batch(rng, 100_000, 5, dtype=np.float32)
-    sol3 = solver.solve_hyperbox(lo, hi, dirs)
+    sol3 = repro.solve_hyperbox(lo, hi, dirs)
     print(f"hyperbox batch: {sol3.objective.shape[0]} LPs solved, "
           f"support[:4]={np.asarray(sol3.objective[:4]).round(3)}")
 
-    # 4) Pallas-kernel backend (interpret mode on CPU; Mosaic on TPU).
-    k_sol = BatchedLPSolver(backend="pallas").solve(
-        lp.LPBatch(batch.a[:64], batch.b[:64], batch.c[:64])
-    )
-    agree = np.allclose(
-        np.asarray(k_sol.objective), np.asarray(sol.objective[:64]), rtol=1e-4
-    )
-    print(f"pallas kernel agrees with XLA path: {agree}")
+    # 5) Backend registry: same protocol, different engines.
+    #    ("pallas" = VMEM-resident kernels: interpret mode on CPU, Mosaic
+    #    on TPU; "reference" = sequential float64 NumPy oracle.)
+    small = lp.LPBatch(batch.a[:64], batch.b[:64], batch.c[:64])
+    base = repro.solve(small)
+    for name in repro.available_backends():
+        if name == "xla":
+            continue
+        other = repro.solve(small, SolveOptions(backend=name))
+        agree = np.allclose(np.asarray(other.objective),
+                            np.asarray(base.objective), rtol=1e-4)
+        print(f"backend {name!r} agrees with xla: {agree}")
 
 
 if __name__ == "__main__":

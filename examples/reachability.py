@@ -12,8 +12,8 @@ import time
 
 import numpy as np
 
+from repro import SolveOptions
 from repro.core import reach
-from repro.core.solver import BatchedLPSolver
 from repro.core.support import template_directions
 
 
@@ -32,7 +32,7 @@ def main():
         t0 = time.perf_counter()
         sup, _ = reach.reach_supports(
             sys_, args.delta, args.steps, directions=dirs,
-            solver=BatchedLPSolver(),
+            options=SolveOptions(),
         )
         dt = time.perf_counter() - t0
         # bounding-box envelope of the flowpipe per axis

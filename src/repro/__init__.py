@@ -3,6 +3,37 @@
 JAX reproduction + TPU adaptation of
 "Solving Batched Linear Programs on GPU and Multicore CPU" (Gurung & Ray, 2016),
 embedded in a production-grade multi-pod training/serving framework.
+
+Public LP API::
+
+    import repro
+    sol  = repro.solve(repro.LPProblem.make(c, a, bu=b))      # general form
+    sols = repro.solve([p1, p2, p3])                          # heterogeneous
+    sol  = repro.solve(repro.LPBatch(a, b, c))                # canonical form
 """
 
-__version__ = "0.1.0"
+from .api import solve, solve_hyperbox
+from .core.backends import (
+    Backend,
+    SolveOptions,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .core.lp import LPBatch, LPSolution
+from .core.problem import LPProblem
+
+__all__ = [
+    "solve",
+    "solve_hyperbox",
+    "LPProblem",
+    "LPBatch",
+    "LPSolution",
+    "SolveOptions",
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+__version__ = "0.2.0"

@@ -1,0 +1,154 @@
+"""``repro.solve`` — the unified front-end over every solver path.
+
+One functional entry point replaces the old ``BatchedLPSolver`` object:
+
+    import repro
+    from repro import LPProblem, SolveOptions
+
+    # a batch of general-form LPs (one shape)
+    sol = repro.solve(LPProblem.make(c, a, bl=bl, bu=bu, lo=lo, hi=hi,
+                                     maximize=False))
+
+    # a heterogeneous list — bucketed by shape class, megabatched,
+    # results scattered back in input order
+    sols = repro.solve([p1, p2, p3], options=SolveOptions(backend="pallas"))
+
+    # an already-canonical LPBatch (max c.x, Ax <= b, x >= 0)
+    sol = repro.solve(LPBatch(a, b, c))
+
+Routing:
+
+  * ``LPProblem``  -> hyperbox closed form when ``boxlike`` (no general
+    rows, finite box), else canonicalize -> chunked dispatch ->
+    uncanonicalize back to user coordinates.
+  * ``list/tuple`` of ``LPProblem`` -> shape bucketing (core/bucketing.py),
+    one solve per bucket, per-problem single-LP solutions in input order.
+  * ``LPBatch``    -> straight to the chunked dispatch (no mapping).
+
+``mesh`` shards the batch dimension across the mesh's data axes; all solver
+knobs live in the frozen ``SolveOptions`` record (core/backends.py).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from .core import dispatch as _dispatch
+from .core.backends import SolveOptions
+from .core.bucketing import ShapeGrid, bucket_problems, scatter_solutions
+from .core.lp import INFEASIBLE, LPBatch, LPSolution
+from .core.problem import LPProblem, canonicalize, solve_box, uncanonicalize
+
+Solvable = Union[LPProblem, LPBatch, Sequence[LPProblem]]
+
+
+def solve(
+    problem: Solvable,
+    options: Optional[SolveOptions] = None,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_axes: Sequence[str] = ("data",),
+    grid: Optional[ShapeGrid] = None,
+) -> Union[LPSolution, List[LPSolution]]:
+    """Solve general-form LP problem(s); see module docstring for routing.
+
+    Returns an ``LPSolution`` for a single ``LPProblem``/``LPBatch`` input,
+    or a list of single-LP ``LPSolution``s (input order) for a list input.
+    """
+    if isinstance(problem, LPBatch):
+        return _dispatch.solve_canonical(
+            problem, options, mesh=mesh, batch_axes=batch_axes
+        )
+    if isinstance(problem, LPProblem):
+        return _solve_problem(problem, options, mesh, batch_axes)
+    if isinstance(problem, (list, tuple)):
+        return _solve_many(problem, options, mesh, batch_axes, grid)
+    raise TypeError(
+        f"repro.solve expects LPProblem, LPBatch, or a list of LPProblem; "
+        f"got {type(problem).__name__}"
+    )
+
+
+def solve_hyperbox(
+    lo,
+    hi,
+    directions,
+    options: Optional[SolveOptions] = None,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_axes: Sequence[str] = ("data",),
+) -> LPSolution:
+    """Support of the box [lo, hi] in each direction (paper Sec. 6)."""
+    return _dispatch.solve_hyperbox(
+        lo, hi, directions, options, mesh=mesh, batch_axes=batch_axes
+    )
+
+
+def _solve_problem(
+    problem: LPProblem,
+    options: Optional[SolveOptions],
+    mesh,
+    batch_axes: Sequence[str],
+) -> LPSolution:
+    if problem.batch == 0:
+        return _dispatch.empty_solution(problem.n, problem.dtype)
+    if problem.boxlike:
+        # No general rows + finite box: closed form, no simplex. The jnp
+        # closed form (solve_box) is already a single fused op; a non-default
+        # backend routes through its registered hyperbox kernel instead.
+        if options is None or options.backend == "xla":
+            return solve_box(problem)
+        return _solve_box_via_backend(problem, options, mesh, batch_axes)
+    canon = canonicalize(problem)
+    sol = _dispatch.solve_canonical(
+        canon.batch, options, mesh=mesh, batch_axes=batch_axes
+    )
+    return uncanonicalize(canon, sol)
+
+
+def _solve_box_via_backend(
+    problem: LPProblem,
+    options: SolveOptions,
+    mesh,
+    batch_axes: Sequence[str],
+) -> LPSolution:
+    """Boxlike solve through the backend's hyperbox kernel (sign-adjusted).
+
+    The kernel maximizes, so minimize flips the direction; the objective is
+    re-evaluated as c.x in user space and empty boxes report INFEASIBLE
+    (kernels assume lo <= hi).
+    """
+    sign = 1.0 if problem.maximize else -1.0
+    sol = _dispatch.solve_hyperbox(
+        problem.lo, problem.hi, sign * problem.c, options,
+        mesh=mesh, batch_axes=batch_axes,
+    )
+    infeasible = jnp.any(problem.lo > problem.hi, axis=-1)
+    bad = -jnp.inf if problem.maximize else jnp.inf
+    objective = jnp.where(
+        infeasible, bad, jnp.sum(problem.c * sol.x, axis=-1)
+    )
+    x = jnp.where(infeasible[:, None], 0.0, sol.x)
+    status = jnp.where(infeasible, INFEASIBLE, sol.status).astype(jnp.int32)
+    return LPSolution(
+        objective=objective, x=x, status=status, iterations=sol.iterations
+    )
+
+
+def _solve_many(
+    problems: Sequence[LPProblem],
+    options: Optional[SolveOptions],
+    mesh,
+    batch_axes: Sequence[str],
+    grid: Optional[ShapeGrid],
+) -> List[LPSolution]:
+    if not problems:
+        return []
+    buckets = bucket_problems(problems, grid)
+    sols = [
+        _solve_problem(b.problem, options, mesh, batch_axes) for b in buckets
+    ]
+    return scatter_solutions(buckets, sols, len(problems))

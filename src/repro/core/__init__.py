@@ -14,11 +14,42 @@ from .lp import (
     random_lp_batch,
 )
 from .simplex import BLAND, LPC, RPC, solve_batched
-from . import hyperbox, oracle
+from .problem import (
+    Canonicalized,
+    LPProblem,
+    canonicalize,
+    solve_box,
+    stack_problems,
+    uncanonicalize,
+)
+from .backends import (
+    Backend,
+    SolveOptions,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from .bucketing import Bucket, bucket_problems, scatter_solutions, shape_class
+from . import dispatch, hyperbox, oracle
 
 __all__ = [
     "LPBatch",
     "LPSolution",
+    "LPProblem",
+    "Canonicalized",
+    "canonicalize",
+    "uncanonicalize",
+    "solve_box",
+    "stack_problems",
+    "Backend",
+    "SolveOptions",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "Bucket",
+    "bucket_problems",
+    "scatter_solutions",
+    "shape_class",
     "OPTIMAL",
     "UNBOUNDED",
     "INFEASIBLE",
@@ -32,6 +63,7 @@ __all__ = [
     "LPC",
     "RPC",
     "BLAND",
+    "dispatch",
     "hyperbox",
     "oracle",
 ]

@@ -1,0 +1,188 @@
+"""Backend registry: named solver implementations behind one protocol.
+
+Every backend solves the *canonical* form only (``max c.x, Ax <= b,
+x >= 0``) — canonicalization happens above this layer (core/problem.py),
+chunking/sharding happens beside it (core/dispatch.py).  A backend is a
+pair of callables:
+
+    solve_canonical(LPBatch, SolveOptions)      -> LPSolution
+    solve_hyperbox(lo, hi, dirs, SolveOptions)  -> LPSolution
+
+Built-ins:
+
+  * ``xla``       — the lockstep batched simplex (core/simplex.py), jitted
+                    through XLA; the default and the paper-faithful path.
+  * ``pallas``    — the VMEM-resident Pallas kernels (kernels/ops.py);
+                    Mosaic on TPU, interpret mode on CPU.
+  * ``reference`` — the sequential float64 NumPy oracle (core/oracle.py);
+                    slow, trustworthy, used for cross-checking.
+
+``register_backend`` lets deployments plug in new implementations (e.g. a
+first-order PDLP backend) without touching the front-end; ``repro.solve``
+selects by ``SolveOptions.backend`` name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hyperbox as _hyperbox
+from . import simplex as _simplex
+from .lp import LPBatch, LPSolution
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOptions:
+    """Solver configuration — one frozen record instead of loose knobs.
+
+    Attributes:
+      backend:   registered backend name ("xla" | "pallas" | "reference" | ...).
+      rule:      pivot rule ("lpc" | "rpc" | "bland"); LPC is the paper default.
+      max_iters: simplex iteration cap across both phases (0 = 50*(m+n)).
+      tolerance: reduced-cost/pivot tolerance (0 = dtype default: 1e-9 for
+                 float64, 1e-5 for float32).  Advisory for backends with a
+                 baked-in tolerance (pallas kernel, reference oracle).
+      unroll:    while_loop body unroll factor (xla perf knob).
+      chunk_size: megabatch chunk size for the overlapped dispatch pipeline
+                 (None = whole batch in one chunk).
+      first_cap: adaptive two-pass cap.  None disables the two-pass solve;
+                 0 enables it with the auto cap 8*(m+n); a positive value is
+                 the explicit pass-1 iteration cap (stragglers hitting it are
+                 compacted and re-solved with the full cap).
+      seed:      PRNG seed for the randomized (RPC) pivot rule.
+    """
+
+    backend: str = "xla"
+    rule: str = _simplex.LPC
+    max_iters: int = 0
+    tolerance: float = 0.0
+    unroll: int = 1
+    chunk_size: Optional[int] = None
+    first_cap: Optional[int] = None
+    seed: int = 0
+
+    def replace(self, **kw) -> "SolveOptions":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A named solver implementation over the canonical problem protocol."""
+
+    name: str
+    solve_canonical: Callable[[LPBatch, SolveOptions], LPSolution]
+    solve_hyperbox: Callable[..., LPSolution]
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, overwrite: bool = False) -> Backend:
+    """Add a backend to the registry (name collisions need overwrite=True)."""
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {', '.join(available_backends())}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _xla_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+    return _simplex.solve_batched(
+        batch.a,
+        batch.b,
+        batch.c,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        unroll=options.unroll,
+        tol=options.tolerance,
+    )
+
+
+def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
+    return _hyperbox.solve_batched(lo, hi, directions)
+
+
+def _pallas_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops.simplex_solve(
+        batch.a, batch.b, batch.c, max_iters=options.max_iters
+    )
+
+
+def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    from .lp import OPTIMAL
+
+    obj = kernel_ops.hyperbox_support(lo, hi, directions)
+    pick = jnp.where(directions < 0, lo, hi)
+    bsz = obj.shape[0]
+    return LPSolution(
+        objective=obj,
+        x=pick,
+        status=jnp.full((bsz,), OPTIMAL, jnp.int32),
+        iterations=jnp.zeros((bsz,), jnp.int32),
+    )
+
+
+def _reference_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+    from . import oracle  # lazy: keep the hot import path lean
+
+    obj, xs, status, iters = oracle.solve_batch(
+        np.asarray(batch.a),
+        np.asarray(batch.b),
+        np.asarray(batch.c),
+        max_iters=options.max_iters,
+    )
+    dtype = batch.a.dtype
+    return LPSolution(
+        objective=jnp.asarray(obj, dtype),
+        x=jnp.asarray(xs, dtype),
+        status=jnp.asarray(status, jnp.int32),
+        iterations=jnp.asarray(iters, jnp.int32),
+    )
+
+
+def _reference_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
+    from . import oracle
+    from .lp import OPTIMAL
+
+    support, pick = oracle.solve_hyperbox(
+        np.asarray(lo), np.asarray(hi), np.asarray(directions)
+    )
+    dtype = jnp.asarray(directions).dtype
+    bsz = support.shape[0]
+    return LPSolution(
+        objective=jnp.asarray(support, dtype),
+        x=jnp.asarray(pick, dtype),
+        status=jnp.full((bsz,), OPTIMAL, jnp.int32),
+        iterations=jnp.zeros((bsz,), jnp.int32),
+    )
+
+
+register_backend(Backend("xla", _xla_solve, _xla_hyperbox))
+register_backend(Backend("pallas", _pallas_solve, _pallas_hyperbox))
+register_backend(Backend("reference", _reference_solve, _reference_hyperbox))

@@ -1,0 +1,207 @@
+"""Chunked, overlapped, mesh-aware dispatch of canonical LP batches.
+
+This is the substrate under every front-end path (paper Sec. 4):
+
+  * split a megabatch into device-sized chunks (the paper's global-memory
+    capacity bound, eq. 5) — here the bound is ``SolveOptions.chunk_size``;
+  * overlap host->device staging of chunk k+1 with the solve of chunk k
+    (the paper's CUDA streams; here: JAX async dispatch + early device_put);
+  * shard the batch dimension across a mesh's data axes when a mesh is
+    supplied (one LP never spans devices — same invariant as one LP per
+    CUDA block);
+  * optional adaptive two-pass solve (``SolveOptions.first_cap``): pass 1
+    runs with a small iteration cap, the straggler LPs that hit it are
+    compacted into a second batch and re-solved with the full cap.
+
+The actual per-chunk solve is delegated to the registered backend
+(core/backends.py); empty batches short-circuit to an empty solution.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .backends import SolveOptions, get_backend
+from .lp import ITER_LIMIT, LPBatch, LPSolution
+
+
+def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
+    """The solution of a zero-LP batch (shape-correct, no device work)."""
+    return LPSolution(
+        objective=jnp.zeros((0,), dtype),
+        x=jnp.zeros((0, n), dtype),
+        status=jnp.zeros((0,), jnp.int32),
+        iterations=jnp.zeros((0,), jnp.int32),
+    )
+
+
+def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
+    return LPSolution(
+        objective=jnp.concatenate([p.objective for p in parts]),
+        x=jnp.concatenate([p.x for p in parts]),
+        status=jnp.concatenate([p.status for p in parts]),
+        iterations=jnp.concatenate([p.iterations for p in parts]),
+    )
+
+
+def _resolve_axes(
+    mesh: Optional[jax.sharding.Mesh], batch_axes: Sequence[str]
+) -> Tuple[str, ...]:
+    return tuple(ax for ax in batch_axes if mesh and ax in mesh.axis_names)
+
+
+def _batch_sharding(mesh, axes, ndim: int):
+    if not mesh or not axes:
+        return None
+    spec = [None] * ndim
+    spec[0] = axes if len(axes) > 1 else axes[0]
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+
+
+def _stage(arr: jnp.ndarray, mesh, axes) -> jnp.ndarray:
+    sh = _batch_sharding(mesh, axes, arr.ndim)
+    if sh is None:
+        return jax.device_put(arr)
+    return jax.device_put(arr, sh)
+
+
+def _pad_batch(batch: LPBatch, multiple: int) -> Tuple[LPBatch, int]:
+    bsz = batch.batch
+    padded = math.ceil(bsz / multiple) * multiple
+    if padded == bsz:
+        return batch, bsz
+    pad = padded - bsz
+
+    def p(x):
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, mode="edge")
+
+    return LPBatch(p(batch.a), p(batch.b), p(batch.c)), bsz
+
+
+def solve_canonical(
+    batch: LPBatch,
+    options: Optional[SolveOptions] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_axes: Sequence[str] = ("data",),
+) -> LPSolution:
+    """Solve a canonical batch through the chunked/overlapped pipeline."""
+    options = options or SolveOptions()
+    if batch.batch == 0:
+        return empty_solution(batch.n, batch.a.dtype)
+    if options.first_cap is not None:
+        return _solve_adaptive(batch, options, mesh, batch_axes)
+    return _solve_chunked(batch, options, mesh, batch_axes)
+
+
+def _solve_chunked(
+    batch: LPBatch,
+    options: SolveOptions,
+    mesh,
+    batch_axes: Sequence[str],
+) -> LPSolution:
+    axes = _resolve_axes(mesh, batch_axes)
+    mesh_div = 1
+    if mesh and axes:
+        mesh_div = int(np.prod([mesh.shape[a] for a in axes]))
+    batch, true_bsz = _pad_batch(batch, max(mesh_div, 1))
+
+    backend = get_backend(options.backend)
+
+    bsz = batch.batch
+    chunk = options.chunk_size or bsz
+    chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
+    parts = []
+    # Stage chunk 0, then for each chunk: kick off the solve (async under
+    # XLA) and immediately stage chunk k+1 so transfer overlaps compute —
+    # the CUDA-streams discipline from paper Sec. 4.4.
+    staged = None
+    for lo in range(0, bsz, chunk):
+        hi = min(lo + chunk, bsz)
+        cur = staged or LPBatch(
+            _stage(batch.a[lo:hi], mesh, axes),
+            _stage(batch.b[lo:hi], mesh, axes),
+            _stage(batch.c[lo:hi], mesh, axes),
+        )
+        out = backend.solve_canonical(cur, options)
+        nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
+        staged = (
+            LPBatch(
+                _stage(batch.a[nxt_lo:nxt_hi], mesh, axes),
+                _stage(batch.b[nxt_lo:nxt_hi], mesh, axes),
+                _stage(batch.c[nxt_lo:nxt_hi], mesh, axes),
+            )
+            if nxt_lo < bsz
+            else None
+        )
+        parts.append(out)
+    sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
+    if true_bsz != bsz:
+        sol = LPSolution(
+            objective=sol.objective[:true_bsz],
+            x=sol.x[:true_bsz],
+            status=sol.status[:true_bsz],
+            iterations=sol.iterations[:true_bsz],
+        )
+    return sol
+
+
+def _solve_adaptive(
+    batch: LPBatch,
+    options: SolveOptions,
+    mesh,
+    batch_axes: Sequence[str],
+) -> LPSolution:
+    """Two-pass lockstep solve: early-exit analogue for SIMD batching.
+
+    A CUDA block retires as soon as its LP converges; lockstep batching
+    instead drags every LP to the slowest one's iteration count.  Pass 1
+    caps iterations at ~2x the *median* need (first_cap, default 8*(m+n));
+    the few LPs hitting ITER_LIMIT are compacted into a small second batch
+    and re-solved with the full cap.  Bounded re-work, most of the batch
+    stops early — EXPERIMENTS.md §Perf-LP.
+    """
+    m, n = batch.m, batch.n
+    first_cap = options.first_cap or 8 * (m + n)
+    sol1 = _solve_chunked(batch, options.replace(max_iters=first_cap), mesh, batch_axes)
+    status = np.asarray(sol1.status)
+    unfinished = np.nonzero(status == ITER_LIMIT)[0]
+    if unfinished.size == 0:
+        return sol1
+    idx = jnp.asarray(unfinished)
+    sub = LPBatch(batch.a[idx], batch.b[idx], batch.c[idx])
+    sol2 = _solve_chunked(sub, options.replace(first_cap=None), mesh, batch_axes)
+    return LPSolution(
+        objective=sol1.objective.at[idx].set(sol2.objective),
+        x=sol1.x.at[idx].set(sol2.x),
+        status=sol1.status.at[idx].set(sol2.status),
+        iterations=sol1.iterations.at[idx].set(sol2.iterations + first_cap),
+    )
+
+
+def solve_hyperbox(
+    lo,
+    hi,
+    directions,
+    options: Optional[SolveOptions] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    batch_axes: Sequence[str] = ("data",),
+) -> LPSolution:
+    """Closed-form box-LP batch through the selected backend."""
+    options = options or SolveOptions()
+    backend = get_backend(options.backend)
+    directions = jnp.asarray(directions)
+    if directions.shape[0] == 0:
+        return empty_solution(directions.shape[-1], directions.dtype)
+    axes = _resolve_axes(mesh, batch_axes)
+    return backend.solve_hyperbox(
+        _stage(jnp.asarray(lo), mesh, axes),
+        _stage(jnp.asarray(hi), mesh, axes),
+        _stage(directions, mesh, axes),
+        options,
+    )

@@ -27,7 +27,13 @@ def _pivot(tab: np.ndarray, basis: np.ndarray, l: int, e: int) -> None:
     basis[l] = e
 
 
-def _run_simplex(tab: np.ndarray, basis: np.ndarray, elig: np.ndarray, max_iters: int):
+def _run_simplex(
+    tab: np.ndarray,
+    basis: np.ndarray,
+    elig: np.ndarray,
+    max_iters: int,
+    art_start: int,
+):
     """Iterate LPC-rule simplex until optimal/unbounded/limit. Returns status."""
     m = tab.shape[0] - 1
     for it in range(max_iters):
@@ -38,6 +44,13 @@ def _run_simplex(tab: np.ndarray, basis: np.ndarray, elig: np.ndarray, max_iters
             return OPTIMAL, it
         col = tab[:m, e]
         ratios = np.where(col > _TOL, tab[:m, 0] / np.maximum(col, _TOL), _BIG)
+        # A basic artificial sits at 0 after phase I (degenerate rows); a
+        # pivot with a negative coefficient there would make it GROW, i.e.
+        # silently leave the feasible region.  Force such rows to leave at
+        # ratio 0 (a degenerate pivot on the negative element is valid:
+        # rhs is 0, so feasibility is preserved and the artificial exits).
+        zero_art = (basis >= art_start) & (tab[:m, 0] <= _TOL) & (col < -_TOL)
+        ratios = np.where(zero_art, 0.0, ratios)
         l = int(np.argmin(ratios))
         if ratios[l] >= _BIG / 2:
             return UNBOUNDED, it
@@ -76,10 +89,11 @@ def solve_lp(
     elig = np.zeros(q, bool)
     elig[1 : 1 + n + m] = True  # b column and artificials never enter
 
+    art_start = 1 + n + m
     total_it = 0
     if neg.any():
         tab[m, :] = tab[:m, :][neg].sum(axis=0)  # phase-I priced objective
-        status, it = _run_simplex(tab, basis, elig, max_iters)
+        status, it = _run_simplex(tab, basis, elig, max_iters, art_start)
         total_it += it
         if status != OPTIMAL:
             return -np.inf, np.zeros(n), status, total_it
@@ -94,7 +108,7 @@ def solve_lp(
     else:
         tab[m, 1 : 1 + n] = c
 
-    status, it = _run_simplex(tab, basis, elig, max_iters)
+    status, it = _run_simplex(tab, basis, elig, max_iters, art_start)
     total_it += it
     x = np.zeros(n)
     if status == OPTIMAL:

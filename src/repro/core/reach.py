@@ -29,8 +29,7 @@ from typing import Optional, Tuple
 import numpy as np
 import scipy.linalg
 
-from .lp import LPBatch
-from .solver import BatchedLPSolver
+from .backends import SolveOptions
 from .support import Box, Polytope, box_to_polytope, template_directions
 
 
@@ -64,16 +63,16 @@ def reach_supports(
     delta: float,
     steps: int,
     directions: Optional[np.ndarray] = None,
-    solver: Optional[BatchedLPSolver] = None,
+    options: Optional[SolveOptions] = None,
     use_hyperbox: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Support samples of the reach sequence.
 
     Returns (supports, directions) with supports: (steps, K).
     Total LPs solved = steps * K (+ steps * K for the input term when U is
-    not a point), all in batched solver calls.
+    not a point), all in batched ``repro.solve`` megabatches configured by
+    ``options`` (backend, pivot rule, chunking — see SolveOptions).
     """
-    solver = solver or BatchedLPSolver()
     if directions is None:
         directions = template_directions(sys.dim, "box")
     directions = np.asarray(directions, np.float64)
@@ -84,10 +83,10 @@ def reach_supports(
 
     # rho_{X0} on all (Phi^T)^k l at once — one megabatch.
     if use_hyperbox:
-        x0_sup = np.asarray(sys.x0.support(flat.astype(np.float32), solver))
+        x0_sup = np.asarray(sys.x0.support(flat.astype(np.float32), options))
     else:
         poly = box_to_polytope(sys.x0)
-        x0_sup = np.asarray(poly.support(flat.astype(np.float32), solver))
+        x0_sup = np.asarray(poly.support(flat.astype(np.float32), options))
     x0_sup = x0_sup.reshape(steps, k)
 
     # Input contribution: V = delta*U. rho_V on the same directions, then a
@@ -95,7 +94,7 @@ def reach_supports(
     u_lo = np.asarray(sys.u.lo) * delta
     u_hi = np.asarray(sys.u.hi) * delta
     v = Box(u_lo, u_hi)
-    v_sup = np.asarray(v.support(flat.astype(np.float32), solver)).reshape(steps, k)
+    v_sup = np.asarray(v.support(flat.astype(np.float32), options)).reshape(steps, k)
     v_cum = np.concatenate(
         [np.zeros((1, k)), np.cumsum(v_sup, axis=0)[:-1]], axis=0
     )

@@ -86,7 +86,7 @@ def _phase2_objective(tab, basis, c_ext):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("rule", "max_iters", "unroll")
+    jax.jit, static_argnames=("rule", "max_iters", "unroll", "tol")
 )
 def solve_batched(
     a: jnp.ndarray,
@@ -96,6 +96,7 @@ def solve_batched(
     max_iters: int = 0,
     seed: int = 0,
     unroll: int = 1,
+    tol: float = 0.0,
 ) -> LPSolution:
     """Solve a batch of LPs (max c.x, Ax <= b, x >= 0) in lockstep.
 
@@ -105,12 +106,14 @@ def solve_batched(
       max_iters: simplex iteration cap across both phases
         (default 50*(m+n), matching the oracle).
       unroll: while_loop body unroll factor (perf knob).
+      tol: reduced-cost/pivot tolerance (0 = dtype default).
     """
     bsz, m, n = a.shape
     if max_iters <= 0:
         max_iters = 50 * (m + n)
     dtype = a.dtype
-    tol = _tolerances(dtype)
+    if tol <= 0.0:
+        tol = _tolerances(dtype)
 
     tab, basis, phase = build_tableau(a, b, c)
     q = tab.shape[-1]
@@ -152,6 +155,14 @@ def solve_batched(
         col = jnp.take_along_axis(tab[:, :m, :], e[:, None, None], axis=-1)[..., 0]
         rhs = tab[:, :m, 0]
         ratios = jnp.where(col > tol, rhs / jnp.maximum(col, tol), _BIG)
+        # A basic artificial sits at 0 on degenerate rows after phase I; a
+        # pivot with a negative coefficient there would make it GROW (leave
+        # the feasible region unnoticed).  Force such rows out at ratio 0 —
+        # a valid degenerate pivot on the negative element (rhs is 0).
+        zero_art = (
+            (s.basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
+        )
+        ratios = jnp.where(zero_art, 0.0, ratios)
         l = jnp.argmin(ratios, axis=-1)
         min_ratio = jnp.take_along_axis(ratios, l[:, None], axis=-1)[:, 0]
         unbounded = pivoting & (min_ratio >= _BIG / 2)

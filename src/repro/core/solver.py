@@ -1,46 +1,35 @@
-"""Public batched-LP solver API: chunking, device sharding, double-buffering.
+"""Deprecated object-style solver API — thin shim over ``repro.solve``.
 
-This is the library entry point an application uses (paper Sec. 4):
+.. deprecated::
+    ``BatchedLPSolver`` is kept for backwards compatibility only.  New code
+    should use the functional front-end::
 
-    solver = BatchedLPSolver(rule="lpc")
-    sol = solver.solve(LPBatch(a, b, c))           # general simplex path
-    sup = solver.solve_hyperbox(lo, hi, dirs)      # closed-form path
+        import repro
+        sol = repro.solve(problem_or_list, options=repro.SolveOptions(...))
 
-Responsibilities mirrored from the paper's CUDA library:
-  * split a megabatch into device-sized chunks (the paper's global-memory
-    capacity bound, eq. 5) — here the bound is chosen chunk_size;
-  * overlap host->device staging of chunk k+1 with the solve of chunk k
-    (the paper's CUDA streams; here: JAX async dispatch + early device_put);
-  * shard the batch dimension across a mesh's data axes when a mesh is
-    supplied (one LP never spans devices — same invariant as one LP per
-    CUDA block).
+    The constructor knobs moved into the frozen ``SolveOptions`` record
+    (core/backends.py), backend selection goes through the backend registry,
+    and the chunked/overlapped/mesh-aware pipeline lives in
+    ``core/dispatch.py``.  This class merely translates its knobs into a
+    ``SolveOptions`` and delegates — results are bit-identical to the old
+    implementation (same chunking, same staging order, same backends).
 """
 
 from __future__ import annotations
 
-import math
+import warnings
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from . import hyperbox as _hyperbox
+from . import dispatch as _dispatch
 from . import simplex as _simplex
+from .backends import SolveOptions
 from .lp import LPBatch, LPSolution
 
 
-def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
-    return LPSolution(
-        objective=jnp.concatenate([p.objective for p in parts]),
-        x=jnp.concatenate([p.x for p in parts]),
-        status=jnp.concatenate([p.status for p in parts]),
-        iterations=jnp.concatenate([p.iterations for p in parts]),
-    )
-
-
 class BatchedLPSolver:
-    """Batched LP solver with chunked, overlapped, mesh-aware dispatch."""
+    """Deprecated shim: batched LP solver; use ``repro.solve`` instead."""
 
     def __init__(
         self,
@@ -52,155 +41,48 @@ class BatchedLPSolver:
         backend: str = "xla",
         unroll: int = 1,
     ):
+        warnings.warn(
+            "BatchedLPSolver is deprecated; use repro.solve(problem, "
+            "options=repro.SolveOptions(...)) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        # Attributes kept for callers that introspect the old API surface.
         self.rule = rule
         self.max_iters = max_iters
         self.chunk_size = chunk_size
         self.mesh = mesh
-        self.batch_axes = tuple(ax for ax in batch_axes if mesh and ax in mesh.axis_names)
+        self.batch_axes = tuple(
+            ax for ax in batch_axes if mesh and ax in mesh.axis_names
+        )
         self.backend = backend
         self.unroll = unroll
-
-    # -- sharding helpers ---------------------------------------------------
-
-    def _batch_sharding(self, ndim: int):
-        if not self.mesh or not self.batch_axes:
-            return None
-        spec = [None] * ndim
-        spec[0] = self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
-        return jax.sharding.NamedSharding(
-            self.mesh, jax.sharding.PartitionSpec(*spec)
+        self.options = SolveOptions(
+            backend=backend,
+            rule=rule,
+            max_iters=max_iters,
+            unroll=unroll,
+            chunk_size=chunk_size,
         )
-
-    def _stage(self, arr: jnp.ndarray) -> jnp.ndarray:
-        sh = self._batch_sharding(arr.ndim)
-        if sh is None:
-            return jax.device_put(arr)
-        return jax.device_put(arr, sh)
-
-    def _pad_batch(self, batch: LPBatch, multiple: int):
-        bsz = batch.batch
-        padded = math.ceil(bsz / multiple) * multiple
-        if padded == bsz:
-            return batch, bsz
-        pad = padded - bsz
-
-        def p(x):
-            widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-            return jnp.pad(x, widths, mode="edge")
-
-        return LPBatch(p(batch.a), p(batch.b), p(batch.c)), bsz
-
-    # -- general simplex path ----------------------------------------------
 
     def solve(self, batch: LPBatch, seed: int = 0) -> LPSolution:
-        mesh_div = 1
-        if self.mesh and self.batch_axes:
-            mesh_div = int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
-        batch, true_bsz = self._pad_batch(batch, max(mesh_div, 1))
-
-        if self.backend == "pallas":
-            from ..kernels import ops as kernel_ops
-
-            solve_fn = lambda a, b, c: kernel_ops.simplex_solve(
-                a, b, c, max_iters=self.max_iters
-            )
-        else:
-            solve_fn = lambda a, b, c: _simplex.solve_batched(
-                a,
-                b,
-                c,
-                rule=self.rule,
-                max_iters=self.max_iters,
-                seed=seed,
-                unroll=self.unroll,
-            )
-
-        bsz = batch.batch
-        chunk = self.chunk_size or bsz
-        chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
-        parts = []
-        # Stage chunk 0, then for each chunk: kick off the solve (async under
-        # XLA) and immediately stage chunk k+1 so transfer overlaps compute —
-        # the CUDA-streams discipline from paper Sec. 4.4.
-        staged = None
-        for lo in range(0, bsz, chunk):
-            hi = min(lo + chunk, bsz)
-            cur = staged or LPBatch(
-                self._stage(batch.a[lo:hi]),
-                self._stage(batch.b[lo:hi]),
-                self._stage(batch.c[lo:hi]),
-            )
-            out = solve_fn(cur.a, cur.b, cur.c)
-            nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
-            staged = (
-                LPBatch(
-                    self._stage(batch.a[nxt_lo:nxt_hi]),
-                    self._stage(batch.b[nxt_lo:nxt_hi]),
-                    self._stage(batch.c[nxt_lo:nxt_hi]),
-                )
-                if nxt_lo < bsz
-                else None
-            )
-            parts.append(out)
-        sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
-        if true_bsz != bsz:
-            sol = LPSolution(
-                objective=sol.objective[:true_bsz],
-                x=sol.x[:true_bsz],
-                status=sol.status[:true_bsz],
-                iterations=sol.iterations[:true_bsz],
-            )
-        return sol
-
-    def solve_adaptive(self, batch: LPBatch, first_cap: int = 0, seed: int = 0) -> LPSolution:
-        """Two-pass lockstep solve: early-exit analogue for SIMD batching.
-
-        A CUDA block retires as soon as its LP converges; lockstep batching
-        instead drags every LP to the slowest one's iteration count.  Pass 1
-        caps iterations at ~2x the *median* need (first_cap, default
-        8*(m+n)); the few LPs hitting ITER_LIMIT are compacted into a small
-        second batch and re-solved with the full cap.  Bounded re-work,
-        most of the batch stops early — EXPERIMENTS.md §Perf-LP.
-        """
-        m, n = batch.m, batch.n
-        if first_cap <= 0:
-            first_cap = 8 * (m + n)
-        # pass 1 (respect chunking/backend via a capped clone of self)
-        capped = BatchedLPSolver(
-            rule=self.rule, max_iters=first_cap, chunk_size=self.chunk_size,
-            mesh=self.mesh, batch_axes=self.batch_axes, backend=self.backend,
-            unroll=self.unroll,
-        )
-        sol1 = capped.solve(batch, seed=seed)
-        status = np.asarray(sol1.status)
-        unfinished = np.nonzero(status == 4)[0]  # ITER_LIMIT
-        if unfinished.size == 0:
-            return sol1
-        idx = jnp.asarray(unfinished)
-        sub = LPBatch(batch.a[idx], batch.b[idx], batch.c[idx])
-        sol2 = self.solve(sub, seed=seed)
-        return LPSolution(
-            objective=sol1.objective.at[idx].set(sol2.objective),
-            x=sol1.x.at[idx].set(sol2.x),
-            status=sol1.status.at[idx].set(sol2.status),
-            iterations=sol1.iterations.at[idx].set(sol2.iterations + first_cap),
+        options = self.options if seed == 0 else self.options.replace(seed=seed)
+        return _dispatch.solve_canonical(
+            batch, options, mesh=self.mesh, batch_axes=self.batch_axes
         )
 
-    # -- hyperbox path -------------------------------------------------------
+    def solve_adaptive(
+        self, batch: LPBatch, first_cap: int = 0, seed: int = 0
+    ) -> LPSolution:
+        options = self.options.replace(
+            first_cap=max(first_cap, 0), seed=seed
+        )
+        return _dispatch.solve_canonical(
+            batch, options, mesh=self.mesh, batch_axes=self.batch_axes
+        )
 
     def solve_hyperbox(self, lo, hi, directions) -> LPSolution:
-        if self.backend == "pallas":
-            from ..kernels import ops as kernel_ops
-
-            obj = kernel_ops.hyperbox_support(lo, hi, directions)
-            bsz = obj.shape[0]
-            pick = jnp.where(directions < 0, lo, hi)
-            return LPSolution(
-                objective=obj,
-                x=pick,
-                status=jnp.full((bsz,), 1, jnp.int32),
-                iterations=jnp.zeros((bsz,), jnp.int32),
-            )
-        return _hyperbox.solve_batched(
-            self._stage(lo), self._stage(hi), self._stage(directions)
+        return _dispatch.solve_hyperbox(
+            lo, hi, directions, self.options,
+            mesh=self.mesh, batch_axes=self.batch_axes,
         )

@@ -4,11 +4,14 @@ A support function of a convex set Omega takes a direction l and returns
 max_{x in Omega} l.x.  Converting a support-function representation to a
 polytope representation means sampling it in K template directions — each
 sample is a small LP.  Reachability tools (SpaceEx / XSpeed) issue millions
-of these; this module turns them into LPBatches for the batched solver.
+of these; this module turns them into general-form ``LPProblem``s for the
+unified ``repro.solve`` front-end.
 
-Sets here may contain points with negative coordinates, so the general
-path splits x = x+ - x- (doubling variables) to reach the solver's
-standard form (x >= 0).  Boxes bypass the simplex entirely (paper Sec. 6).
+Polytope sets contain points with negative coordinates: their variables
+are *free*, expressed directly as ``lo = -inf`` in the general form — the
+x = x+ - x- split the old code hand-rolled now happens inside
+``core.problem.canonicalize``.  Boxes bypass the simplex entirely (paper
+Sec. 6) via the closed-form hyperbox path.
 """
 
 from __future__ import annotations
@@ -19,9 +22,11 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from . import dispatch as _dispatch
 from . import hyperbox as _hyperbox
+from .backends import SolveOptions
 from .lp import LPBatch
-from .solver import BatchedLPSolver
+from .problem import LPProblem, canonicalize, uncanonicalize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,13 +38,13 @@ class Box:
     def dim(self) -> int:
         return int(np.asarray(self.lo).shape[-1])
 
-    def support(self, directions, solver: Optional[BatchedLPSolver] = None):
+    def support(self, directions, options: Optional[SolveOptions] = None):
         """rho_B(l) for each row of directions: (K, n) -> (K,)."""
         directions = jnp.asarray(directions)
         lo = jnp.broadcast_to(jnp.asarray(self.lo), directions.shape)
         hi = jnp.broadcast_to(jnp.asarray(self.hi), directions.shape)
-        if solver is not None and solver.backend == "pallas":
-            return solver.solve_hyperbox(lo, hi, directions).objective
+        if options is not None and options.backend != "xla":
+            return _dispatch.solve_hyperbox(lo, hi, directions, options).objective
         return _hyperbox.support(lo, hi, directions)
 
 
@@ -54,25 +59,26 @@ class Polytope:
     def dim(self) -> int:
         return int(np.asarray(self.a).shape[-1])
 
-    def to_lp_batch(self, directions) -> LPBatch:
-        """One LP per direction via the x = x+ - x- split."""
+    def to_problem(self, directions) -> LPProblem:
+        """One general-form LP per direction: max l.x, Ax <= b, x free."""
         directions = np.asarray(directions)
         k, n = directions.shape
-        a = np.asarray(self.a)
-        b = np.asarray(self.b)
-        a_split = np.concatenate([a, -a], axis=1)  # (m, 2n)
-        a_b = np.broadcast_to(a_split, (k, *a_split.shape))
-        b_b = np.broadcast_to(b, (k, b.shape[0]))
-        c_b = np.concatenate([directions, -directions], axis=1)  # (k, 2n)
-        dtype = directions.dtype
-        return LPBatch(
-            jnp.asarray(a_b, dtype), jnp.asarray(b_b, dtype), jnp.asarray(c_b, dtype)
+        a = np.broadcast_to(np.asarray(self.a), (k, *np.asarray(self.a).shape))
+        bu = np.broadcast_to(np.asarray(self.b), (k, np.asarray(self.b).shape[0]))
+        return LPProblem.make(
+            c=directions, a=a, bu=bu, lo=-np.inf, hi=np.inf,
+            dtype=directions.dtype,
         )
 
-    def support(self, directions, solver: Optional[BatchedLPSolver] = None):
-        solver = solver or BatchedLPSolver()
-        sol = solver.solve(self.to_lp_batch(directions))
-        return sol.objective
+    def to_lp_batch(self, directions) -> LPBatch:
+        """Canonical batch for the directions (kept for callers on the old
+        standard-form API; equivalent to canonicalizing ``to_problem``)."""
+        return canonicalize(self.to_problem(directions)).batch
+
+    def support(self, directions, options: Optional[SolveOptions] = None):
+        canon = canonicalize(self.to_problem(directions))
+        sol = _dispatch.solve_canonical(canon.batch, options)
+        return uncanonicalize(canon, sol).objective
 
 
 def box_to_polytope(box: Box) -> Polytope:

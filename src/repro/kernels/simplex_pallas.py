@@ -104,6 +104,11 @@ def _kernel(
         col = full_col[:, :m]
         rhs = tab[:, :m, 0]
         ratios = jnp.where(col > tol, rhs / jnp.where(col > tol, col, 1.0), _BIG)
+        # Basic artificials at 0 (degenerate rows after phase I) must leave
+        # at ratio 0 when the entering column is negative there — otherwise
+        # the pivot grows the artificial and exits the feasible region.
+        zero_art = (basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
+        ratios = jnp.where(zero_art, 0.0, ratios)
         l = jnp.argmin(ratios, axis=-1).astype(jnp.int32)  # (TB,)
         min_ratio = jnp.min(ratios, axis=-1)
         unbounded = pivoting & (min_ratio >= _BIG / 2)

@@ -1,19 +1,26 @@
-"""Serving engine: batched prefill + greedy decode with a static KV cache.
+"""Serving engines: LM decode loop + heterogeneous LP micro-batching.
 
-``generate`` drives the model's prefill/decode_step under jit with donated
-cache buffers (the functional cache update is in-place post-donation).
-The LP-serving path (batched LP requests, straggler re-dispatch) lives in
-``runtime/straggler.py`` and ``launch/serve_lp.py``.
-"""
+``Engine.generate`` drives the model's prefill/decode_step under jit with
+donated cache buffers (the functional cache update is in-place
+post-donation).  ``LPEngine`` is the LP-serving counterpart: it queues
+general-form ``LPProblem`` requests of arbitrary shapes and flushes them
+through the unified ``repro.solve`` front-end, which buckets by shape
+class and megabatches per bucket (launch/serve_lp.py drives it with
+straggler-mitigated workers from ``runtime/straggler.py``)."""
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .. import api
+from ..core.backends import SolveOptions
+from ..core.bucketing import ShapeGrid
+from ..core.lp import LPSolution
+from ..core.problem import LPProblem
 from ..models.model import Model
 
 
@@ -59,3 +66,61 @@ class Engine:
         if temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+class LPEngine:
+    """Micro-batching LP server over the unified ``repro.solve`` front-end.
+
+    Requests (general-form ``LPProblem``s, any shapes) accumulate until
+    ``flush_every`` are pending or ``flush()`` is called; each flush is one
+    ``repro.solve(list)`` call — shape-bucketed megabatches under the hood.
+    Ticket numbers map responses back to callers in submission order.
+    """
+
+    def __init__(
+        self,
+        options: Optional[SolveOptions] = None,
+        flush_every: int = 256,
+        grid: Optional[ShapeGrid] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+    ):
+        self.options = options or SolveOptions()
+        self.flush_every = flush_every
+        self.grid = grid
+        self.mesh = mesh
+        self._pending: List[Tuple[int, LPProblem]] = []
+        self._results: Dict[int, LPSolution] = {}
+        self._next_ticket = 0
+
+    def submit(self, problem: LPProblem) -> int:
+        """Queue one request; returns a ticket redeemable after a flush."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, problem))
+        if len(self._pending) >= self.flush_every:
+            self.flush()
+        return ticket
+
+    def flush(self) -> int:
+        """Solve everything pending in one bucketed megabatch call."""
+        if not self._pending:
+            return 0
+        tickets = [t for t, _ in self._pending]
+        problems = [p for _, p in self._pending]
+        sols = api.solve(
+            problems, self.options, mesh=self.mesh, grid=self.grid
+        )
+        # Clear only after the solve succeeds: a raising solve (bad problem,
+        # backend error) must not silently drop the other queued requests.
+        self._pending = []
+        self._results.update(zip(tickets, sols))
+        return len(tickets)
+
+    def result(self, ticket: int) -> LPSolution:
+        """Redeem a ticket (flushes implicitly if it is still pending)."""
+        if ticket in self._results:
+            return self._results.pop(ticket)
+        if any(t == ticket for t, _ in self._pending):
+            self.flush()
+            return self._results.pop(ticket)
+        raise KeyError(f"ticket {ticket} unknown or already redeemed")

@@ -1,0 +1,387 @@
+"""Unified front-end tests: general-form canonicalization round-trips,
+shape-bucketed heterogeneous solves, backend registry, empty batches,
+and the BatchedLPSolver deprecation shim."""
+
+import warnings
+
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+import repro
+from repro import LPBatch, LPProblem, SolveOptions
+from repro.core import bucketing, lp, oracle
+from repro.core.problem import canonicalize, uncanonicalize
+
+
+def _oracle_general(p: LPProblem, i: int = 0):
+    """Independent general-form solve: canonicalize on the host, run the
+    float64 NumPy oracle on the canonical batch, map back by hand."""
+    canon = canonicalize(p)
+    a = np.asarray(canon.batch.a[i], np.float64)
+    b = np.asarray(canon.batch.b[i], np.float64)
+    c = np.asarray(canon.batch.c[i], np.float64)
+    obj, x, status, _ = oracle.solve_lp(a, b, c)
+    n = p.n
+    x_user = np.asarray(canon.shift[i]) + x[:n]
+    if canon.split:
+        x_user = x_user - x[n : 2 * n]
+    return status, float(np.asarray(p.c[i]) @ x_user), x_user
+
+
+def _scipy_general(p: LPProblem, i: int = 0):
+    c = np.asarray(p.c[i], np.float64)
+    a = np.asarray(p.a[i], np.float64)
+    bl = np.asarray(p.bl[i], np.float64)
+    bu = np.asarray(p.bu[i], np.float64)
+    lo = np.asarray(p.lo[i], np.float64)
+    hi = np.asarray(p.hi[i], np.float64)
+    sign = -1.0 if p.maximize else 1.0
+    bounds = [
+        (None if np.isneginf(l) else l, None if np.isposinf(h) else h)
+        for l, h in zip(lo, hi)
+    ]
+    a_ub = np.vstack([a, -a])
+    b_ub = np.concatenate([bu, -bl])
+    keep = np.isfinite(b_ub)  # drop disabled (infinite-bound) rows
+    r = linprog(
+        sign * c,
+        A_ub=a_ub[keep],
+        b_ub=b_ub[keep],
+        bounds=bounds,
+        method="highs",
+    )
+    status = {0: lp.OPTIMAL, 2: lp.INFEASIBLE, 3: lp.UNBOUNDED}.get(r.status, -1)
+    return status, (sign * r.fun if r.status == 0 else None), r.x
+
+
+def _check_against_references(p: LPProblem, rtol=1e-8, atol=1e-8):
+    sol = repro.solve(p)
+    for i in range(p.batch):
+        st = int(sol.status[i])
+        o_st, o_obj, _ = _oracle_general(p, i)
+        s_st, s_obj, _ = _scipy_general(p, i)
+        assert st == s_st, f"LP {i}: status {st} vs scipy {s_st}"
+        assert st == o_st, f"LP {i}: status {st} vs oracle {o_st}"
+        if st == lp.OPTIMAL:
+            np.testing.assert_allclose(float(sol.objective[i]), s_obj, rtol=rtol, atol=atol)
+            np.testing.assert_allclose(float(sol.objective[i]), o_obj, rtol=rtol, atol=atol)
+            # primal point consistency in user coordinates
+            x = np.asarray(sol.x[i])
+            a = np.asarray(p.a[i])
+            assert (a @ x <= np.asarray(p.bu[i]) + 1e-6).all()
+            assert (a @ x >= np.asarray(p.bl[i]) - 1e-6).all()
+            assert (x <= np.asarray(p.hi[i]) + 1e-6).all()
+            assert (x >= np.asarray(p.lo[i]) - 1e-6).all()
+            np.testing.assert_allclose(
+                float(np.asarray(p.c[i]) @ x), float(sol.objective[i]), rtol=1e-7, atol=1e-8
+            )
+    return sol
+
+
+# ---------------------------------------------------------------------------
+# canonicalization round-trips (satellite: min/max, equality, two-sided,
+# free/shifted bounds, hyperbox auto-route — each against core/oracle.py)
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_minimize_vs_maximize():
+    rng = np.random.default_rng(0)
+    a = rng.uniform(-1, 1, (3, 4))
+    bu = np.abs(a).sum(1) + 1.0
+    c = rng.uniform(-1, 1, 4)
+    pmax = LPProblem.make(c, a, bu=bu, hi=2.0, maximize=True)
+    pmin = LPProblem.make(c, a, bu=bu, hi=2.0, maximize=False)
+    smax = _check_against_references(pmax)
+    smin = _check_against_references(pmin)
+    assert float(smin.objective[0]) <= float(smax.objective[0]) + 1e-9
+
+
+def test_roundtrip_equality_rows():
+    # x + y == 2, max x - y, 0 <= x <= 1.5 -> x = 1.5, y = 0.5, obj = 1.
+    p = LPProblem.make(
+        c=[1.0, -1.0], a=[[1.0, 1.0]], bl=[2.0], bu=[2.0], hi=[1.5, np.inf]
+    )
+    sol = _check_against_references(p)
+    np.testing.assert_allclose(float(sol.objective[0]), 1.0, rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(sol.x[0]), [1.5, 0.5], rtol=1e-9)
+
+
+def test_roundtrip_two_sided_rows():
+    rng = np.random.default_rng(5)
+    for _ in range(5):
+        m, n = 4, 3
+        a = rng.uniform(-1, 1, (m, n))
+        xf = rng.uniform(0, 1, n)
+        bu = a @ xf + rng.uniform(0.1, 1.0, m)
+        bl = bu - rng.uniform(0.5, 2.0, m)
+        c = rng.uniform(-1, 1, n)
+        p = LPProblem.make(c, a, bl=bl, bu=bu, hi=3.0, maximize=bool(rng.random() < 0.5))
+        _check_against_references(p)
+
+
+def test_roundtrip_free_and_shifted_bounds():
+    rng = np.random.default_rng(9)
+    for _ in range(5):
+        m, n = 3, 4
+        a = rng.uniform(-1, 1, (m, n))
+        bu = np.abs(a).sum(1) * 2 + 1.0
+        c = rng.uniform(-1, 1, n)
+        lo = rng.uniform(-2.0, 0.5, n)
+        lo[0] = -np.inf  # free variable -> canonical x+/x- split
+        hi = np.where(np.isneginf(lo), 1.5, lo + rng.uniform(0.5, 2.0, n))
+        p = LPProblem.make(c, a, bu=bu, lo=lo, hi=hi, maximize=False)
+        assert p.split
+        _check_against_references(p)
+
+
+def test_hyperbox_auto_route():
+    # No general rows + finite box: solved closed-form (0 iterations).
+    p = LPProblem.make(
+        c=[[1.0, -2.0], [-1.0, 0.5]], lo=[-1.0, -1.0], hi=[2.0, 3.0], maximize=False
+    )
+    assert p.boxlike
+    sol = repro.solve(p)
+    assert np.array_equal(np.asarray(sol.iterations), [0, 0])
+    np.testing.assert_allclose(np.asarray(sol.objective), [-7.0, -2.5])
+    np.testing.assert_allclose(np.asarray(sol.x), [[-1.0, 3.0], [2.0, -1.0]])
+    # against the oracle's closed form (maximize orientation: flip sign)
+    sup, _ = oracle.solve_hyperbox(
+        np.asarray(p.lo), np.asarray(p.hi), -np.asarray(p.c)
+    )
+    np.testing.assert_allclose(np.asarray(sol.objective), -sup)
+
+
+def test_hyperbox_route_reports_empty_box_infeasible():
+    p = LPProblem.make(c=[1.0, 1.0], lo=[0.0, 2.0], hi=[1.0, 1.0])
+    assert p.boxlike
+    sol = repro.solve(p)
+    assert int(sol.status[0]) == lp.INFEASIBLE
+
+
+def test_constraint_free_problems():
+    # No rows, nothing bounded above: OPTIMAL at 0 or UNBOUNDED by costs.
+    s = repro.solve(LPProblem.make(c=[1.0, 2.0]))  # max, x unbounded above
+    assert int(s.status[0]) == lp.UNBOUNDED
+    s = repro.solve(LPProblem.make(c=[-1.0, -2.0]))  # max of negatives: x = 0
+    assert int(s.status[0]) == lp.OPTIMAL
+    np.testing.assert_allclose(float(s.objective[0]), 0.0)
+    s = repro.solve(LPProblem.make(c=[1.0], lo=[-np.inf]))  # free, no rows
+    assert int(s.status[0]) == lp.UNBOUNDED
+
+
+def test_boxlike_respects_backend_selection():
+    p = LPProblem.make(
+        c=[[1.0, -2.0], [-1.0, 0.5]], lo=[-1.0, -1.0], hi=[2.0, 3.0],
+        maximize=False, dtype=np.float64,
+    )
+    base = repro.solve(p)
+    for name in ("reference", "pallas"):
+        other = repro.solve(p, SolveOptions(backend=name))
+        np.testing.assert_allclose(
+            np.asarray(other.objective), np.asarray(base.objective), rtol=1e-6
+        )
+        np.testing.assert_allclose(np.asarray(other.x), np.asarray(base.x))
+
+
+def test_unbounded_general_form():
+    # minimize a free variable with no constraints on it
+    p = LPProblem.make(
+        c=[1.0, 0.0], a=[[0.0, 1.0]], bu=[1.0], lo=[-np.inf, 0.0], maximize=False
+    )
+    sol = repro.solve(p)
+    assert int(sol.status[0]) == lp.UNBOUNDED
+    assert float(sol.objective[0]) == np.inf  # minimize convention
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous lists + bucketing (acceptance: >= 3 shape classes, one call,
+# per-shape oracle match in input order)
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_shape_list_matches_oracle_in_order():
+    rng = np.random.default_rng(12)
+    shapes = [(5, 5), (28, 28), (100, 100), (5, 5), (28, 28), (5, 5)]
+    problems = []
+    for m, n in shapes:
+        b = lp.random_lp_batch(rng, 1, m, n, True, dtype=np.float64)
+        problems.append(LPProblem.make(b.c, b.a, bu=b.b))
+    sols = repro.solve(problems)
+    assert len(sols) == len(problems)
+    for p, s in zip(problems, sols):
+        obj, x, status, _ = oracle.solve_lp(
+            np.asarray(p.a[0]), np.asarray(p.bu[0]), np.asarray(p.c[0])
+        )
+        assert int(s.status[0]) == status
+        np.testing.assert_allclose(float(s.objective[0]), obj, rtol=1e-8)
+        assert s.x.shape == (1, p.n)  # trimmed back to the true width
+
+
+def test_bucketing_pads_to_pow2_classes():
+    rng = np.random.default_rng(13)
+    problems = []
+    for m, n in [(5, 5), (6, 7), (28, 28), (100, 100)]:
+        b = lp.random_lp_batch(rng, 1, m, n, True, dtype=np.float64)
+        problems.append(LPProblem.make(b.c, b.a, bu=b.b))
+    buckets = bucketing.bucket_problems(problems)
+    keys = {b.key[:2] for b in buckets}
+    assert keys == {(8, 8), (32, 32), (128, 128)}
+    # (5,5) and (6,7) share the (8,8) class
+    b88 = next(b for b in buckets if b.key[:2] == (8, 8))
+    assert b88.problem.batch == 2
+
+
+def test_bucketing_caller_grid():
+    assert bucketing.shape_class(5, 5, grid=[(10, 10), (50, 50)]) == (10, 10)
+    assert bucketing.shape_class(11, 4, grid=[(10, 10), (50, 50)]) == (50, 50)
+    with pytest.raises(ValueError):
+        bucketing.shape_class(60, 60, grid=[(10, 10), (50, 50)])
+
+
+def test_mixed_senses_and_general_forms_in_one_list():
+    rng = np.random.default_rng(14)
+    problems = []
+    for k in range(6):
+        m, n = int(rng.integers(2, 6)), int(rng.integers(2, 6))
+        a = rng.uniform(-1, 1, (m, n))
+        bu = np.abs(a).sum(1) + 1.0
+        problems.append(
+            LPProblem.make(
+                rng.uniform(-1, 1, n), a, bu=bu, hi=2.0, maximize=bool(k % 2)
+            )
+        )
+    sols = repro.solve(problems)
+    for p, s in zip(problems, sols):
+        o_st, o_obj, _ = _oracle_general(p)
+        assert int(s.status[0]) == o_st
+        if o_st == lp.OPTIMAL:
+            np.testing.assert_allclose(float(s.objective[0]), o_obj, rtol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# empty batches (satellite regression: used to raise IndexError)
+# ---------------------------------------------------------------------------
+
+
+def _empty_batch(n=4, m=3):
+    return LPBatch(
+        np.zeros((0, m, n)), np.zeros((0, m)), np.zeros((0, n))
+    )
+
+
+def test_empty_batch_solve():
+    sol = repro.solve(_empty_batch())
+    assert sol.objective.shape == (0,)
+    assert sol.x.shape == (0, 4)
+    assert sol.status.shape == (0,)
+
+
+def test_empty_batch_via_shim():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.solver import BatchedLPSolver
+
+        sol = BatchedLPSolver().solve(_empty_batch())
+    assert sol.objective.shape == (0,)
+
+
+def test_empty_problem_list():
+    assert repro.solve([]) == []
+
+
+def test_lp_engine_failed_flush_keeps_requests_queued():
+    from repro.serve.engine import LPEngine
+
+    rng = np.random.default_rng(16)
+    engine = LPEngine(flush_every=100)
+    good = lp.random_lp_batch(rng, 1, 3, 3, True, dtype=np.float64)
+    t_good = engine.submit(LPProblem.make(good.c, good.a, bu=good.b))
+    bad = lp.random_lp_batch(rng, 2, 3, 3, True, dtype=np.float64)
+    engine.submit(LPProblem(bad.c, bad.a, -bad.b, bad.b,  # batch=2: rejected
+                            np.zeros_like(bad.c), np.full_like(bad.c, np.inf)))
+    with pytest.raises(ValueError):
+        engine.flush()
+    # the failing flush must not drop the good request
+    assert len(engine._pending) == 2
+    engine._pending = [pq for pq in engine._pending if pq[0] == t_good]
+    sol = engine.result(t_good)
+    assert int(sol.status[0]) == lp.OPTIMAL
+
+
+def test_lp_engine_micro_batches_heterogeneous_requests():
+    from repro.serve.engine import LPEngine
+
+    rng = np.random.default_rng(15)
+    engine = LPEngine(flush_every=4)
+    problems, tickets = [], []
+    for dim in (3, 5, 3, 5, 3):
+        b = lp.random_lp_batch(rng, 1, dim, dim, True, dtype=np.float64)
+        p = LPProblem.make(b.c, b.a, bu=b.b)
+        problems.append(p)
+        tickets.append(engine.submit(p))
+    for p, t in zip(problems, tickets):
+        sol = engine.result(t)
+        obj, _, status, _ = oracle.solve_lp(
+            np.asarray(p.a[0]), np.asarray(p.bu[0]), np.asarray(p.c[0])
+        )
+        assert int(sol.status[0]) == status
+        np.testing.assert_allclose(float(sol.objective[0]), obj, rtol=1e-8)
+    with pytest.raises(KeyError, match="already redeemed"):
+        engine.result(tickets[0])  # double redeem: clear error, no side effects
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtin_backends():
+    names = repro.available_backends()
+    assert {"xla", "pallas", "reference"} <= set(names)
+
+
+def test_registry_unknown_backend_raises():
+    b = lp.random_lp_batch(np.random.default_rng(1), 2, 3, 3, True)
+    with pytest.raises(ValueError, match="unknown backend"):
+        repro.solve(b, SolveOptions(backend="nope"))
+    with pytest.raises(ValueError):
+        repro.register_backend(repro.get_backend("xla"))  # duplicate name
+
+
+def test_reference_backend_matches_xla():
+    rng = np.random.default_rng(2)
+    b = lp.random_lp_batch(rng, 8, 10, 10, True, dtype=np.float64)
+    s_x = repro.solve(b)
+    s_r = repro.solve(b, SolveOptions(backend="reference"))
+    assert np.array_equal(np.asarray(s_x.status), np.asarray(s_r.status))
+    np.testing.assert_allclose(
+        np.asarray(s_x.objective), np.asarray(s_r.objective), rtol=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_shim_identical_to_functional_path():
+    rng = np.random.default_rng(3)
+    b = lp.random_lp_batch(rng, 32, 12, 12, True, dtype=np.float64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with pytest.raises(DeprecationWarning):
+            from repro.core.solver import BatchedLPSolver
+
+            BatchedLPSolver()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.solver import BatchedLPSolver
+
+        shim = BatchedLPSolver(chunk_size=10).solve(b)
+    func = repro.solve(b, SolveOptions(chunk_size=10))
+    assert np.array_equal(np.asarray(shim.status), np.asarray(func.status))
+    np.testing.assert_array_equal(
+        np.asarray(shim.objective), np.asarray(func.objective)
+    )
+    np.testing.assert_array_equal(np.asarray(shim.x), np.asarray(func.x))
