@@ -1,0 +1,185 @@
+"""Convergence compaction + warm-start benchmark -> BENCH_compaction.json.
+
+Two experiments, both beyond the paper's figures but directly on its
+load-balancing axis (Sec. 4 design goal 3):
+
+1. **Compaction** — a megabatch whose iteration counts are skewed (90%
+   "hyperbox-easy" LPs that converge in ~n pivots, 10% two-phase hard
+   LPs).  With ``compaction="off"`` the lockstep loop drags every LP to
+   the hard tail's iteration count; ``every_k`` compacts the active set
+   between geometric rounds.  Acceptance: >= 1.5x wall-clock.
+
+2. **Warm-started reach sweep** — the 5-dim reachability workload solved
+   as a polytope sweep, cold megabatch vs. per-step basis reuse.
+   Acceptance: identical supports, measurably fewer simplex iterations
+   (``SolveStats.simplex_iterations``).
+
+Writes ``BENCH_compaction.json`` next to the repo root (or $BENCH_DIR)
+so the perf trajectory is recorded; prints the usual CSV rows too.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+
+def _klee_minty(nv: int, m: int, n: int, count: int):
+    """KM cubes in nv vars embedded in the (m, n) shape class.
+
+    The LPC (Dantzig) rule walks all 2^nv - 1 vertices — the canonical
+    iteration-count straggler.  Unused rows/vars stay disabled (b = 1,
+    zero coefficients, zero cost).
+    """
+    a = np.zeros((count, m, n), np.float32)
+    b = np.ones((count, m), np.float32)
+    c = np.zeros((count, n), np.float32)
+    for i in range(nv):
+        for j in range(i):
+            a[:, i, j] = 2.0 ** (i - j + 1)
+        a[:, i, i] = 1.0
+        b[:, i] = 5.0 ** (i + 1)
+        c[:, i] = 2.0 ** (nv - 1 - i)
+    return a, b, c
+
+
+def _skewed_batch(bsz: int, m: int, n: int, hard_frac: float, rng):
+    """90/10 easy/hard batch of one (m, n) shape class.
+
+    Easy: box rows (identity A) — the canonical form of a hyperbox LP;
+    the simplex walks at most n pivots.  Hard: Klee-Minty cubes, which
+    the default LPC rule drags through 2^8 - 1 = 255 pivots.  Shuffled
+    so chunking cannot accidentally segregate them.
+    """
+    from repro.core.lp import LPBatch
+
+    n_hard = max(1, int(round(bsz * hard_frac)))
+    n_easy = bsz - n_hard
+
+    a_e = np.zeros((n_easy, m, n), np.float32)
+    a_e[:, :n, :] = np.eye(n, dtype=np.float32)
+    b_e = np.ones((n_easy, m), np.float32)
+    b_e[:, :n] = rng.uniform(1.0, 2.0, size=(n_easy, n))
+    c_e = rng.uniform(0.1, 1.0, size=(n_easy, n)).astype(np.float32)
+
+    a_h, b_h, c_h = _klee_minty(8, m, n, n_hard)
+
+    a = np.concatenate([a_e, a_h])
+    b = np.concatenate([b_e, b_h])
+    c = np.concatenate([c_e, c_h])
+    perm = rng.permutation(bsz)
+    return LPBatch(a[perm], b[perm], c[perm])
+
+
+def _bench_compaction(full: bool, rng) -> dict:
+    import repro
+    from repro import SolveOptions, SolveStats
+
+    bsz = 8192 if full else 2048
+    m, n = 24, 12
+    batch = _skewed_batch(bsz, m, n, hard_frac=0.1, rng=rng)
+
+    off_opts = SolveOptions()
+    comp_opts = SolveOptions(compaction="every_k", compact_every=n + 2)
+
+    def run(opts):
+        return repro.solve(batch, opts)
+
+    t_off = time_fn(run, off_opts)
+    t_comp = time_fn(run, comp_opts)
+
+    off_stats, comp_stats = SolveStats(), SolveStats()
+    sol_off = repro.solve(batch, off_opts, stats=off_stats)
+    sol_comp = repro.solve(batch, comp_opts, stats=comp_stats)
+    identical = bool(
+        np.array_equal(np.asarray(sol_off.status), np.asarray(sol_comp.status))
+        and np.array_equal(
+            np.asarray(sol_off.objective), np.asarray(sol_comp.objective)
+        )
+    )
+
+    speedup = t_off / t_comp
+    emit(f"compaction_off_b{bsz}", t_off, f"{bsz / t_off:.0f} lps/s")
+    emit(f"compaction_every_k_b{bsz}", t_comp, f"speedup {speedup:.2f}x")
+    return {
+        "batch": bsz,
+        "m": m,
+        "n": n,
+        "hard_frac": 0.1,
+        "off_s": t_off,
+        "every_k_s": t_comp,
+        "speedup": speedup,
+        "bit_identical": identical,
+        "off_lockstep_iterations": off_stats.lockstep_iterations,
+        "every_k_lockstep_iterations": comp_stats.lockstep_iterations,
+        "simplex_iterations": off_stats.simplex_iterations,
+    }
+
+
+def _bench_warm_reach(full: bool) -> dict:
+    from repro import SolveStats
+    from repro.core import reach
+
+    steps = 200 if full else 60
+    sys5 = reach.five_dim_model()
+
+    cold_stats, warm_stats = SolveStats(), SolveStats()
+
+    def cold():
+        return reach.reach_supports(sys5, 0.05, steps, use_hyperbox=False)[0]
+
+    def warm():
+        return reach.reach_supports(
+            sys5, 0.05, steps, use_hyperbox=False, warm_start=True
+        )[0]
+
+    t_cold = time_fn(cold, warmup=1, iters=1)
+    t_warm = time_fn(warm, warmup=1, iters=1)
+    sup_cold, _ = reach.reach_supports(
+        sys5, 0.05, steps, use_hyperbox=False, stats=cold_stats
+    )
+    sup_warm, _ = reach.reach_supports(
+        sys5, 0.05, steps, use_hyperbox=False, warm_start=True, stats=warm_stats
+    )
+    max_diff = float(np.abs(sup_cold - sup_warm).max())
+    ratio = warm_stats.simplex_iterations / max(1, cold_stats.simplex_iterations)
+    emit(f"reach_cold_s{steps}", t_cold, f"{cold_stats.simplex_iterations} iters")
+    emit(
+        f"reach_warm_s{steps}",
+        t_warm,
+        f"{warm_stats.simplex_iterations} iters ({ratio:.3f}x)",
+    )
+    return {
+        "steps": steps,
+        "directions": int(sup_cold.shape[1]),
+        "cold_s": t_cold,
+        "warm_s": t_warm,
+        "cold_simplex_iterations": cold_stats.simplex_iterations,
+        "warm_simplex_iterations": warm_stats.simplex_iterations,
+        "iteration_ratio": ratio,
+        "warm_started_lps": warm_stats.warm_started,
+        "max_abs_diff": max_diff,
+    }
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(2016)
+    results = {
+        "compaction": _bench_compaction(full, rng),
+        "warm_start_reach": _bench_warm_reach(full),
+    }
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_compaction.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ from . import (
     fig8_feasible,
     fig9_infeasible,
     fig10_cpu_threads,
+    fig_compaction,
     roofline,
     table1_hyperbox,
     table2_reach,
@@ -28,6 +29,7 @@ BENCHES = {
     "fig10": fig10_cpu_threads.run,
     "table1": table1_hyperbox.run,
     "table2": table2_reach.run,
+    "compaction": fig_compaction.run,
     "roofline": roofline.run,
 }
 

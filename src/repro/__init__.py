@@ -16,6 +16,7 @@ from .api import solve, solve_hyperbox
 from .core.backends import (
     Backend,
     SolveOptions,
+    SolveStats,
     available_backends,
     get_backend,
     register_backend,
@@ -30,6 +31,7 @@ __all__ = [
     "LPBatch",
     "LPSolution",
     "SolveOptions",
+    "SolveStats",
     "Backend",
     "register_backend",
     "get_backend",

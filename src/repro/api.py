@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from .core import dispatch as _dispatch
-from .core.backends import SolveOptions
+from .core.backends import SolveOptions, SolveStats
 from .core.bucketing import ShapeGrid, bucket_problems, scatter_solutions
 from .core.lp import INFEASIBLE, LPBatch, LPSolution
 from .core.problem import LPProblem, canonicalize, solve_box, uncanonicalize
@@ -52,20 +52,54 @@ def solve(
     mesh: Optional[jax.sharding.Mesh] = None,
     batch_axes: Sequence[str] = ("data",),
     grid: Optional[ShapeGrid] = None,
+    stats: Optional[SolveStats] = None,
 ) -> Union[LPSolution, List[LPSolution]]:
     """Solve general-form LP problem(s); see module docstring for routing.
 
-    Returns an ``LPSolution`` for a single ``LPProblem``/``LPBatch`` input,
-    or a list of single-LP ``LPSolution``s (input order) for a list input.
+    Parameters
+    ----------
+    problem : LPProblem | LPBatch | sequence of LPProblem
+        One batched general-form problem, one canonical batch, or a
+        heterogeneous list (bucketed by shape class and megabatched).
+        ``LPProblem.basis0`` / ``LPBatch.basis0`` warm-start the simplex
+        where the carrying backend supports it.
+    options : SolveOptions, optional
+        All solver/pipeline knobs — backend, pivot rule, iteration caps,
+        ``chunk_size`` (overlapped chunking), ``compaction`` +
+        ``compact_every`` (convergence compaction), ``first_cap`` (legacy
+        two-pass).  Defaults to ``SolveOptions()``.
+    mesh : jax.sharding.Mesh, optional
+        Shard the batch dimension across the mesh's ``batch_axes``.
+    batch_axes : sequence of str, default ("data",)
+        Mesh axis names eligible to shard the batch dimension.
+    grid : sequence of (int, int), optional
+        Caller-pinned shape classes for list inputs (see
+        ``core.bucketing.shape_class``).
+    stats : SolveStats, optional
+        Opt-in counters (LPs, dispatch rounds, simplex iterations,
+        warm-started LPs) accumulated across every dispatch this call
+        performs.
+
+    Returns
+    -------
+    LPSolution or list of LPSolution
+        One ``LPSolution`` for a single ``LPProblem``/``LPBatch`` input;
+        a list of single-LP ``LPSolution``s in input order for a list
+        input.
+
+    Raises
+    ------
+    TypeError
+        For any other input type.
     """
     if isinstance(problem, LPBatch):
         return _dispatch.solve_canonical(
-            problem, options, mesh=mesh, batch_axes=batch_axes
+            problem, options, mesh=mesh, batch_axes=batch_axes, stats=stats
         )
     if isinstance(problem, LPProblem):
-        return _solve_problem(problem, options, mesh, batch_axes)
+        return _solve_problem(problem, options, mesh, batch_axes, stats)
     if isinstance(problem, (list, tuple)):
-        return _solve_many(problem, options, mesh, batch_axes, grid)
+        return _solve_many(problem, options, mesh, batch_axes, grid, stats)
     raise TypeError(
         f"repro.solve expects LPProblem, LPBatch, or a list of LPProblem; "
         f"got {type(problem).__name__}"
@@ -80,10 +114,30 @@ def solve_hyperbox(
     *,
     mesh: Optional[jax.sharding.Mesh] = None,
     batch_axes: Sequence[str] = ("data",),
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
-    """Support of the box [lo, hi] in each direction (paper Sec. 6)."""
+    """Support of the box [lo, hi] in each direction (paper Sec. 6).
+
+    Parameters
+    ----------
+    lo, hi : array_like
+        Box bounds, broadcastable to ``directions``' shape ``(B, n)``.
+    directions : array_like
+        (B, n) objective directions, one closed-form LP per row.
+    options : SolveOptions, optional
+        Backend selection; iteration knobs are irrelevant here.
+    mesh, batch_axes
+        As for :func:`solve`.
+    stats : SolveStats, optional
+        Counters to accumulate into (box LPs do 0 iterations).
+
+    Returns
+    -------
+    LPSolution
+        Support values in ``objective``, maximizing vertices in ``x``.
+    """
     return _dispatch.solve_hyperbox(
-        lo, hi, directions, options, mesh=mesh, batch_axes=batch_axes
+        lo, hi, directions, options, mesh=mesh, batch_axes=batch_axes, stats=stats
     )
 
 
@@ -92,6 +146,7 @@ def _solve_problem(
     options: Optional[SolveOptions],
     mesh,
     batch_axes: Sequence[str],
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
     if problem.batch == 0:
         return _dispatch.empty_solution(problem.n, problem.dtype)
@@ -100,11 +155,14 @@ def _solve_problem(
         # closed form (solve_box) is already a single fused op; a non-default
         # backend routes through its registered hyperbox kernel instead.
         if options is None or options.backend == "xla":
-            return solve_box(problem)
-        return _solve_box_via_backend(problem, options, mesh, batch_axes)
+            sol = solve_box(problem)
+            if stats is not None:
+                stats.record(sol)
+            return sol
+        return _solve_box_via_backend(problem, options, mesh, batch_axes, stats)
     canon = canonicalize(problem)
     sol = _dispatch.solve_canonical(
-        canon.batch, options, mesh=mesh, batch_axes=batch_axes
+        canon.batch, options, mesh=mesh, batch_axes=batch_axes, stats=stats
     )
     return uncanonicalize(canon, sol)
 
@@ -114,6 +172,7 @@ def _solve_box_via_backend(
     options: SolveOptions,
     mesh,
     batch_axes: Sequence[str],
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
     """Boxlike solve through the backend's hyperbox kernel (sign-adjusted).
 
@@ -124,7 +183,7 @@ def _solve_box_via_backend(
     sign = 1.0 if problem.maximize else -1.0
     sol = _dispatch.solve_hyperbox(
         problem.lo, problem.hi, sign * problem.c, options,
-        mesh=mesh, batch_axes=batch_axes,
+        mesh=mesh, batch_axes=batch_axes, stats=stats,
     )
     infeasible = jnp.any(problem.lo > problem.hi, axis=-1)
     bad = -jnp.inf if problem.maximize else jnp.inf
@@ -144,11 +203,13 @@ def _solve_many(
     mesh,
     batch_axes: Sequence[str],
     grid: Optional[ShapeGrid],
+    stats: Optional[SolveStats] = None,
 ) -> List[LPSolution]:
     if not problems:
         return []
     buckets = bucket_problems(problems, grid)
     sols = [
-        _solve_problem(b.problem, options, mesh, batch_axes) for b in buckets
+        _solve_problem(b.problem, options, mesh, batch_axes, stats)
+        for b in buckets
     ]
     return scatter_solutions(buckets, sols, len(problems))

@@ -25,6 +25,7 @@ from .problem import (
 from .backends import (
     Backend,
     SolveOptions,
+    SolveStats,
     available_backends,
     get_backend,
     register_backend,
@@ -43,6 +44,7 @@ __all__ = [
     "stack_problems",
     "Backend",
     "SolveOptions",
+    "SolveStats",
     "available_backends",
     "get_backend",
     "register_backend",

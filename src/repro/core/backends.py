@@ -20,6 +20,20 @@ Built-ins:
 ``register_backend`` lets deployments plug in new implementations (e.g. a
 first-order PDLP backend) without touching the front-end; ``repro.solve``
 selects by ``SolveOptions.backend`` name.
+
+Two pipeline-level extensions ride on this protocol:
+
+  * warm starts — the canonical batch may carry ``LPBatch.basis0``; the
+    ``xla`` and ``pallas`` backends rebuild the tableau for that basis and
+    skip phase I where it is feasible, and report the final basis in
+    ``LPSolution.basis`` (the ``reference`` oracle ignores the hint);
+  * convergence compaction — ``SolveOptions.compaction`` makes the
+    dispatch layer drop converged LPs between rounds and re-dispatch the
+    dense still-active set; it composes with any backend because it lives
+    entirely above this protocol (core/dispatch.py).
+
+``SolveStats`` is the opt-in instrumentation record both features report
+into.
 """
 
 from __future__ import annotations
@@ -35,25 +49,63 @@ from . import simplex as _simplex
 from .lp import LPBatch, LPSolution
 
 
+#: Valid values of :attr:`SolveOptions.compaction`.
+COMPACTION_MODES = ("off", "chunked", "every_k")
+
+
 @dataclasses.dataclass(frozen=True)
 class SolveOptions:
     """Solver configuration — one frozen record instead of loose knobs.
 
-    Attributes:
-      backend:   registered backend name ("xla" | "pallas" | "reference" | ...).
-      rule:      pivot rule ("lpc" | "rpc" | "bland"); LPC is the paper default.
-      max_iters: simplex iteration cap across both phases (0 = 50*(m+n)).
-      tolerance: reduced-cost/pivot tolerance (0 = dtype default: 1e-9 for
-                 float64, 1e-5 for float32).  Advisory for backends with a
-                 baked-in tolerance (pallas kernel, reference oracle).
-      unroll:    while_loop body unroll factor (xla perf knob).
-      chunk_size: megabatch chunk size for the overlapped dispatch pipeline
-                 (None = whole batch in one chunk).
-      first_cap: adaptive two-pass cap.  None disables the two-pass solve;
-                 0 enables it with the auto cap 8*(m+n); a positive value is
-                 the explicit pass-1 iteration cap (stragglers hitting it are
-                 compacted and re-solved with the full cap).
-      seed:      PRNG seed for the randomized (RPC) pivot rule.
+    Parameters
+    ----------
+    backend : str, default "xla"
+        Registered backend name (``"xla"`` | ``"pallas"`` |
+        ``"reference"`` | a name added via :func:`register_backend`).
+    rule : str, default "lpc"
+        Pivot rule: ``"lpc"`` (largest positive coefficient, the paper
+        default), ``"rpc"`` (randomized), or ``"bland"`` (anti-cycling).
+    max_iters : int, default 0
+        Simplex iteration cap across both phases; 0 means the auto cap
+        ``50 * (m + n)``.
+    tolerance : float, default 0.0
+        Reduced-cost/pivot tolerance; 0 means the dtype default (1e-9 for
+        float64, 1e-5 for float32).  Advisory for backends with a baked-in
+        tolerance (pallas kernel, reference oracle).
+    unroll : int, default 1
+        ``lax.while_loop`` body unroll factor (xla perf knob).
+    chunk_size : int, optional
+        Megabatch chunk size for the overlapped dispatch pipeline
+        (None = whole batch in one chunk).
+    first_cap : int, optional
+        Legacy adaptive two-pass cap.  None disables the two-pass solve; 0
+        enables it with the auto cap ``8 * (m + n)``; a positive value is
+        the explicit pass-1 iteration cap.  Subsumed by (and ignored when
+        combined with) ``compaction``.
+    compaction : str, default "off"
+        Convergence compaction mode for the dispatch pipeline:
+
+        * ``"off"`` — lockstep to the bitter end: every LP in a dispatch
+          pays the slowest LP's iteration count (the paper's lockstep
+          trade-off).
+        * ``"chunked"`` — each chunk runs with a small iteration cap; LPs
+          still running afterwards are pooled across chunks, compacted
+          into one dense sub-batch, and re-dispatched with the full cap.
+        * ``"every_k"`` — the whole batch is iterated in rounds with a
+          geometrically doubling cap (k, 2k, 4k, ...); after each round
+          the converged LPs are dropped and the survivors are compacted
+          into a dense sub-batch for the next round.
+
+        Both active modes return results identical to ``"off"`` under the
+        deterministic pivot rules (lpc/bland) — per-LP pivot trajectories
+        do not depend on batch composition — and are honored by every
+        registered backend, since compaction lives above the backend
+        protocol (core/dispatch.py).
+    compact_every : int, default 0
+        Iteration budget per compaction round (the cap ``k`` above);
+        0 means the auto budget ``8 * (m + n)``.
+    seed : int, default 0
+        PRNG seed for the randomized (RPC) pivot rule.
     """
 
     backend: str = "xla"
@@ -63,15 +115,108 @@ class SolveOptions:
     unroll: int = 1
     chunk_size: Optional[int] = None
     first_cap: Optional[int] = None
+    compaction: str = "off"
+    compact_every: int = 0
     seed: int = 0
 
+    def __post_init__(self):
+        # Validate here (not in the dispatch layer) so every route —
+        # including the boxlike/hyperbox paths that never iterate — rejects
+        # a misconfiguration at the same place.
+        if self.compaction not in COMPACTION_MODES:
+            raise ValueError(
+                f"unknown compaction mode {self.compaction!r}; "
+                f"expected one of {COMPACTION_MODES}"
+            )
+
     def replace(self, **kw) -> "SolveOptions":
+        """Return a copy with the given fields replaced.
+
+        Parameters
+        ----------
+        **kw
+            Field-name/value pairs, as for :func:`dataclasses.replace`.
+
+        Returns
+        -------
+        SolveOptions
+            A new frozen record; ``self`` is unchanged.
+        """
         return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class SolveStats:
+    """Mutable host-side counters accumulated across a solve pipeline.
+
+    Pass an instance to :func:`repro.solve` /
+    :func:`repro.core.dispatch.solve_canonical` (``stats=``) to measure
+    the work a pipeline actually performed — the counters that make the
+    compaction and warm-start wins observable.  Recording forces a device
+    sync per backend call, so it is opt-in (``stats=None`` costs nothing).
+
+    Attributes
+    ----------
+    lps : int
+        LP solves recorded (an LP re-dispatched by a compaction round or a
+        two-pass solve counts once per dispatch).
+    rounds : int
+        Backend dispatches recorded (compaction rounds, chunks, sweep
+        steps).
+    simplex_iterations : int
+        Total simplex pivots across all recorded LPs — the counter the
+        warm-started reachability sweep drives down.
+    lockstep_iterations : int
+        ``max(iterations) * batch`` summed per dispatch: the lockstep cost
+        model, in which every LP pays the slowest LP's iteration count.
+        Compaction shrinks this toward ``simplex_iterations``.
+    warm_started : int
+        LPs that entered a dispatch with a usable warm-start basis.
+    """
+
+    lps: int = 0
+    rounds: int = 0
+    simplex_iterations: int = 0
+    lockstep_iterations: int = 0
+    warm_started: int = 0
+
+    def record(self, sol: LPSolution) -> None:
+        """Accumulate one dispatch's ``LPSolution`` into the counters.
+
+        Parameters
+        ----------
+        sol : LPSolution
+            The solution batch returned by a backend dispatch.
+        """
+        iters = np.asarray(sol.iterations)
+        if iters.size == 0:
+            return
+        self.lps += int(iters.size)
+        self.rounds += 1
+        self.simplex_iterations += int(iters.sum())
+        self.lockstep_iterations += int(iters.max()) * int(iters.size)
 
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """A named solver implementation over the canonical problem protocol."""
+    """A named solver implementation over the canonical problem protocol.
+
+    Attributes
+    ----------
+    name : str
+        Registry key, selected by :attr:`SolveOptions.backend`.
+    solve_canonical : callable
+        ``(LPBatch, SolveOptions) -> LPSolution``.  The batch may carry a
+        warm-start basis in ``LPBatch.basis0``; backends that cannot honor
+        it must ignore it (a warm start is a hint, never a semantic
+        change) and may leave ``LPSolution.basis`` as None.  A
+        ``max_iters`` of 0 must resolve to ``core.lp.auto_cap(m, n)`` —
+        the compaction engine relies on every backend sharing that rule
+        for its results-identical-to-``off`` guarantee.
+    solve_hyperbox : callable
+        ``(lo, hi, directions, SolveOptions) -> LPSolution`` — the
+        closed-form box path (paper Sec. 6).
+    """
 
     name: str
     solve_canonical: Callable[[LPBatch, SolveOptions], LPSolution]
@@ -82,7 +227,25 @@ _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(backend: Backend, overwrite: bool = False) -> Backend:
-    """Add a backend to the registry (name collisions need overwrite=True)."""
+    """Add a backend to the registry.
+
+    Parameters
+    ----------
+    backend : Backend
+        The implementation record to register.
+    overwrite : bool, default False
+        Replace an existing backend of the same name instead of raising.
+
+    Returns
+    -------
+    Backend
+        The registered backend (for chaining).
+
+    Raises
+    ------
+    ValueError
+        If the name is already registered and ``overwrite`` is False.
+    """
     if backend.name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {backend.name!r} already registered")
     _REGISTRY[backend.name] = backend
@@ -90,6 +253,22 @@ def register_backend(backend: Backend, overwrite: bool = False) -> Backend:
 
 
 def get_backend(name: str) -> Backend:
+    """Look up a registered backend by name.
+
+    Parameters
+    ----------
+    name : str
+        A name from :func:`available_backends`.
+
+    Returns
+    -------
+    Backend
+
+    Raises
+    ------
+    ValueError
+        If no backend of that name is registered.
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -99,6 +278,7 @@ def get_backend(name: str) -> Backend:
 
 
 def available_backends() -> Tuple[str, ...]:
+    """Sorted names of all registered backends."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -117,6 +297,7 @@ def _xla_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
         seed=options.seed,
         unroll=options.unroll,
         tol=options.tolerance,
+        basis0=batch.basis0,
     )
 
 
@@ -128,7 +309,11 @@ def _pallas_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
     return kernel_ops.simplex_solve(
-        batch.a, batch.b, batch.c, max_iters=options.max_iters
+        batch.a,
+        batch.b,
+        batch.c,
+        max_iters=options.max_iters,
+        basis0=batch.basis0,
     )
 
 
@@ -149,6 +334,8 @@ def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
 
 
 def _reference_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+    # The oracle has no warm-start path; batch.basis0 is ignored (a warm
+    # start is a hint) and LPSolution.basis stays None.
     from . import oracle  # lazy: keep the hot import path lean
 
     obj, xs, status, iters = oracle.solve_batch(

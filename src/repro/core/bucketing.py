@@ -106,7 +106,10 @@ def scatter_solutions(
 
     Returns one single-LP ``LPSolution`` (batch dim 1) per input problem,
     with the primal point trimmed to the problem's true variable count —
-    padded variables are fixed at 0 and carry no information.
+    padded variables are fixed at 0 and carry no information.  The final
+    simplex basis is not scattered: it lives in the *padded* canonical
+    column space of the bucket, which is meaningless for the unpadded
+    problem a caller holds.
     """
     out: List[Optional[LPSolution]] = [None] * total
     for bucket, sol in zip(buckets, bucket_solutions):

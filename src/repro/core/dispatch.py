@@ -9,12 +9,19 @@ This is the substrate under every front-end path (paper Sec. 4):
   * shard the batch dimension across a mesh's data axes when a mesh is
     supplied (one LP never spans devices — same invariant as one LP per
     CUDA block);
-  * optional adaptive two-pass solve (``SolveOptions.first_cap``): pass 1
-    runs with a small iteration cap, the straggler LPs that hit it are
-    compacted into a second batch and re-solved with the full cap.
+  * convergence compaction (``SolveOptions.compaction``): between dispatch
+    rounds, read the status vector, gather the still-active LPs into a
+    dense sub-batch, re-dispatch it, and scatter results back — the
+    load-balancing the paper gets from independent CUDA blocks retiring
+    early, recovered for lockstep batching;
+  * the legacy adaptive two-pass solve (``SolveOptions.first_cap``) is the
+    degenerate single-round form of compaction and is kept for
+    compatibility.
 
 The actual per-chunk solve is delegated to the registered backend
 (core/backends.py); empty batches short-circuit to an empty solution.
+An optional ``SolveStats`` instance records per-dispatch iteration
+counters (the observability hook for compaction/warm-start wins).
 """
 
 from __future__ import annotations
@@ -26,12 +33,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backends import SolveOptions, get_backend
-from .lp import ITER_LIMIT, LPBatch, LPSolution
+from .backends import SolveOptions, SolveStats, get_backend
+from .lp import ITER_LIMIT, LPBatch, LPSolution, auto_cap
 
 
 def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
-    """The solution of a zero-LP batch (shape-correct, no device work)."""
+    """The solution of a zero-LP batch (shape-correct, no device work).
+
+    Parameters
+    ----------
+    n : int
+        Number of variables (fixes the width of the empty primal block).
+    dtype : jnp dtype, default float32
+        Dtype of the objective/primal arrays.
+
+    Returns
+    -------
+    LPSolution
+        All result arrays with batch dimension 0.
+    """
     return LPSolution(
         objective=jnp.zeros((0,), dtype),
         x=jnp.zeros((0, n), dtype),
@@ -40,12 +60,25 @@ def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
     )
 
 
+def _trim_solution(sol: LPSolution, k: int) -> LPSolution:
+    """First k rows of a solution batch (drop mesh-padding replicas)."""
+    return LPSolution(
+        objective=sol.objective[:k],
+        x=sol.x[:k],
+        status=sol.status[:k],
+        iterations=sol.iterations[:k],
+        basis=None if sol.basis is None else sol.basis[:k],
+    )
+
+
 def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
+    bases = [p.basis for p in parts]
     return LPSolution(
         objective=jnp.concatenate([p.objective for p in parts]),
         x=jnp.concatenate([p.x for p in parts]),
         status=jnp.concatenate([p.status for p in parts]),
         iterations=jnp.concatenate([p.iterations for p in parts]),
+        basis=jnp.concatenate(bases) if all(b is not None for b in bases) else None,
     )
 
 
@@ -70,6 +103,42 @@ def _stage(arr: jnp.ndarray, mesh, axes) -> jnp.ndarray:
     return jax.device_put(arr, sh)
 
 
+def _stage_batch(batch: LPBatch, lo: int, hi: int, mesh, axes) -> LPBatch:
+    return LPBatch(
+        _stage(batch.a[lo:hi], mesh, axes),
+        _stage(batch.b[lo:hi], mesh, axes),
+        _stage(batch.c[lo:hi], mesh, axes),
+        None if batch.basis0 is None else _stage(batch.basis0[lo:hi], mesh, axes),
+    )
+
+
+def _gather_batch(batch: LPBatch, idx: jnp.ndarray) -> LPBatch:
+    return LPBatch(
+        batch.a[idx],
+        batch.b[idx],
+        batch.c[idx],
+        None if batch.basis0 is None else batch.basis0[idx],
+    )
+
+
+def _scatter_solution(
+    full: LPSolution, idx: jnp.ndarray, part: LPSolution, iter_offset: int = 0
+) -> LPSolution:
+    """Overwrite rows ``idx`` of ``full`` with ``part`` (compaction scatter)."""
+    basis = full.basis
+    if basis is not None and part.basis is not None:
+        basis = basis.at[idx].set(part.basis)
+    elif part.basis is not None:
+        basis = None  # mixed provenance: drop rather than fabricate
+    return LPSolution(
+        objective=full.objective.at[idx].set(part.objective),
+        x=full.x.at[idx].set(part.x),
+        status=full.status.at[idx].set(part.status),
+        iterations=full.iterations.at[idx].set(part.iterations + iter_offset),
+        basis=basis,
+    )
+
+
 def _pad_batch(batch: LPBatch, multiple: int) -> Tuple[LPBatch, int]:
     bsz = batch.batch
     padded = math.ceil(bsz / multiple) * multiple
@@ -81,7 +150,23 @@ def _pad_batch(batch: LPBatch, multiple: int) -> Tuple[LPBatch, int]:
         widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
         return jnp.pad(x, widths, mode="edge")
 
-    return LPBatch(p(batch.a), p(batch.b), p(batch.c)), bsz
+    return LPBatch(
+        p(batch.a),
+        p(batch.b),
+        p(batch.c),
+        None if batch.basis0 is None else p(batch.basis0),
+    ), bsz
+
+
+def _full_cap(batch: LPBatch, options: SolveOptions) -> int:
+    """The effective iteration cap — the backends' shared 0 -> auto rule."""
+    return options.max_iters if options.max_iters > 0 else auto_cap(batch.m, batch.n)
+
+
+def _round_cap(batch: LPBatch, options: SolveOptions) -> int:
+    """Per-round compaction budget (``compact_every``, 0 -> auto 8*(m+n))."""
+    k = options.compact_every if options.compact_every > 0 else 8 * (batch.m + batch.n)
+    return min(k, _full_cap(batch, options))
 
 
 def solve_canonical(
@@ -89,14 +174,43 @@ def solve_canonical(
     options: Optional[SolveOptions] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     batch_axes: Sequence[str] = ("data",),
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
-    """Solve a canonical batch through the chunked/overlapped pipeline."""
+    """Solve a canonical batch through the chunked/overlapped pipeline.
+
+    Parameters
+    ----------
+    batch : LPBatch
+        Canonical problems (``max c.x, Ax <= b, x >= 0``), optionally
+        carrying a warm-start basis in ``batch.basis0``.
+    options : SolveOptions, optional
+        Pipeline + backend configuration; defaults to ``SolveOptions()``.
+        ``options.compaction`` selects the convergence-compaction mode
+        (see :class:`repro.core.backends.SolveOptions`); it takes
+        precedence over the legacy ``options.first_cap`` two-pass solve.
+    mesh : jax.sharding.Mesh, optional
+        When given, the batch dimension is sharded across the mesh axes
+        named in ``batch_axes``.
+    batch_axes : sequence of str, default ("data",)
+        Mesh axis names eligible to shard the batch dimension.
+    stats : SolveStats, optional
+        Counters to accumulate per-dispatch iteration totals into
+        (opt-in; forces a host sync per dispatch).
+
+    Returns
+    -------
+    LPSolution
+        One result row per input LP, in input order.  ``basis`` carries
+        the final simplex basis when the backend reports one.
+    """
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
+    if options.compaction != "off":
+        return _solve_compacted(batch, options, mesh, batch_axes, stats)
     if options.first_cap is not None:
-        return _solve_adaptive(batch, options, mesh, batch_axes)
-    return _solve_chunked(batch, options, mesh, batch_axes)
+        return _solve_adaptive(batch, options, mesh, batch_axes, stats)
+    return _solve_chunked(batch, options, mesh, batch_axes, stats)
 
 
 def _solve_chunked(
@@ -104,6 +218,7 @@ def _solve_chunked(
     options: SolveOptions,
     mesh,
     batch_axes: Sequence[str],
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
     axes = _resolve_axes(mesh, batch_axes)
     mesh_div = 1
@@ -123,31 +238,91 @@ def _solve_chunked(
     staged = None
     for lo in range(0, bsz, chunk):
         hi = min(lo + chunk, bsz)
-        cur = staged or LPBatch(
-            _stage(batch.a[lo:hi], mesh, axes),
-            _stage(batch.b[lo:hi], mesh, axes),
-            _stage(batch.c[lo:hi], mesh, axes),
-        )
+        cur = staged or _stage_batch(batch, lo, hi, mesh, axes)
         out = backend.solve_canonical(cur, options)
         nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
         staged = (
-            LPBatch(
-                _stage(batch.a[nxt_lo:nxt_hi], mesh, axes),
-                _stage(batch.b[nxt_lo:nxt_hi], mesh, axes),
-                _stage(batch.c[nxt_lo:nxt_hi], mesh, axes),
-            )
-            if nxt_lo < bsz
-            else None
+            _stage_batch(batch, nxt_lo, nxt_hi, mesh, axes) if nxt_lo < bsz else None
         )
+        if stats is not None:
+            # Don't let mesh-padding replica rows (edge-mode duplicates in
+            # the trailing chunk) inflate the counters.
+            valid = min(hi, true_bsz) - lo
+            if valid > 0:
+                stats.record(out if valid == hi - lo else _trim_solution(out, valid))
         parts.append(out)
     sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
     if true_bsz != bsz:
-        sol = LPSolution(
-            objective=sol.objective[:true_bsz],
-            x=sol.x[:true_bsz],
-            status=sol.status[:true_bsz],
-            iterations=sol.iterations[:true_bsz],
+        sol = _trim_solution(sol, true_bsz)
+    return sol
+
+
+def _solve_compacted(
+    batch: LPBatch,
+    options: SolveOptions,
+    mesh,
+    batch_axes: Sequence[str],
+    stats: Optional[SolveStats],
+) -> LPSolution:
+    """Convergence compaction: drop converged LPs between dispatch rounds.
+
+    A lockstep dispatch makes every LP pay the slowest LP's iteration
+    count.  Compaction caps each round, reads the status vector, gathers
+    the LPs that hit the cap (``ITER_LIMIT``) into a dense sub-batch,
+    re-dispatches only those, and scatters results back in input order:
+
+    * ``"chunked"`` — one capped pass over all chunks, then ONE dense
+      re-dispatch of the pooled stragglers at the full cap (bounded
+      re-work; the generalized form of the legacy two-pass solve).
+    * ``"every_k"`` — geometric rounds over the shrinking active set with
+      caps k, 2k, 4k, ... up to the full cap, so the easy majority stops
+      paying for the hard tail after the first round while re-solve work
+      stays within 2x of a single full solve.
+
+    Re-dispatched LPs are re-solved from scratch, so under the
+    deterministic pivot rules every LP follows the exact pivot trajectory
+    it would follow with ``compaction="off"`` — statuses, objectives,
+    primal points, and iteration counts are bit-identical.
+    """
+    base = options.replace(compaction="off", first_cap=None)
+    full_cap = _full_cap(batch, options)
+    cap = _round_cap(batch, options)
+
+    if options.compaction == "chunked":
+        sol = _solve_chunked(
+            batch, base.replace(max_iters=cap), mesh, batch_axes, stats
         )
+        if cap >= full_cap:
+            return sol
+        unfinished = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
+        if unfinished.size == 0:
+            return sol
+        idx = jnp.asarray(unfinished)
+        part = _solve_chunked(
+            _gather_batch(batch, idx),
+            base.replace(max_iters=full_cap),
+            mesh,
+            batch_axes,
+            stats,
+        )
+        return _scatter_solution(sol, idx, part)
+
+    # "every_k": geometric rounds over the shrinking active set.
+    sol = _solve_chunked(batch, base.replace(max_iters=cap), mesh, batch_axes, stats)
+    while cap < full_cap:
+        active = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
+        if active.size == 0:
+            break
+        cap = min(2 * cap, full_cap)
+        idx = jnp.asarray(active)
+        part = _solve_chunked(
+            _gather_batch(batch, idx),
+            base.replace(max_iters=cap),
+            mesh,
+            batch_axes,
+            stats,
+        )
+        sol = _scatter_solution(sol, idx, part)
     return sol
 
 
@@ -156,6 +331,7 @@ def _solve_adaptive(
     options: SolveOptions,
     mesh,
     batch_axes: Sequence[str],
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
     """Two-pass lockstep solve: early-exit analogue for SIMD batching.
 
@@ -164,24 +340,26 @@ def _solve_adaptive(
     caps iterations at ~2x the *median* need (first_cap, default 8*(m+n));
     the few LPs hitting ITER_LIMIT are compacted into a small second batch
     and re-solved with the full cap.  Bounded re-work, most of the batch
-    stops early — EXPERIMENTS.md §Perf-LP.
+    stops early — EXPERIMENTS.md §Perf-LP.  Kept for compatibility; the
+    ``compaction`` modes generalize it (note the historical difference:
+    this path *continues* counting iterations across passes, compaction
+    re-solves from scratch for bit-identical trajectories).
     """
     m, n = batch.m, batch.n
     first_cap = options.first_cap or 8 * (m + n)
-    sol1 = _solve_chunked(batch, options.replace(max_iters=first_cap), mesh, batch_axes)
+    sol1 = _solve_chunked(
+        batch, options.replace(max_iters=first_cap), mesh, batch_axes, stats
+    )
     status = np.asarray(sol1.status)
     unfinished = np.nonzero(status == ITER_LIMIT)[0]
     if unfinished.size == 0:
         return sol1
     idx = jnp.asarray(unfinished)
-    sub = LPBatch(batch.a[idx], batch.b[idx], batch.c[idx])
-    sol2 = _solve_chunked(sub, options.replace(first_cap=None), mesh, batch_axes)
-    return LPSolution(
-        objective=sol1.objective.at[idx].set(sol2.objective),
-        x=sol1.x.at[idx].set(sol2.x),
-        status=sol1.status.at[idx].set(sol2.status),
-        iterations=sol1.iterations.at[idx].set(sol2.iterations + first_cap),
+    sub = _gather_batch(batch, idx)
+    sol2 = _solve_chunked(
+        sub, options.replace(first_cap=None), mesh, batch_axes, stats
     )
+    return _scatter_solution(sol1, idx, sol2, iter_offset=first_cap)
 
 
 def solve_hyperbox(
@@ -191,17 +369,40 @@ def solve_hyperbox(
     options: Optional[SolveOptions] = None,
     mesh: Optional[jax.sharding.Mesh] = None,
     batch_axes: Sequence[str] = ("data",),
+    stats: Optional[SolveStats] = None,
 ) -> LPSolution:
-    """Closed-form box-LP batch through the selected backend."""
+    """Closed-form box-LP batch through the selected backend.
+
+    Parameters
+    ----------
+    lo, hi : array_like
+        Box bounds, broadcastable to ``directions``' shape ``(B, n)``.
+    directions : array_like
+        Objective directions, one LP per row.
+    options : SolveOptions, optional
+        Backend selection (the box path needs no iteration knobs).
+    mesh, batch_axes
+        As for :func:`solve_canonical`.
+    stats : SolveStats, optional
+        Counters to accumulate into (box LPs record 0 iterations).
+
+    Returns
+    -------
+    LPSolution
+        Support values in ``objective``, maximizing vertices in ``x``.
+    """
     options = options or SolveOptions()
     backend = get_backend(options.backend)
     directions = jnp.asarray(directions)
     if directions.shape[0] == 0:
         return empty_solution(directions.shape[-1], directions.dtype)
     axes = _resolve_axes(mesh, batch_axes)
-    return backend.solve_hyperbox(
+    sol = backend.solve_hyperbox(
         _stage(jnp.asarray(lo), mesh, axes),
         _stage(jnp.asarray(hi), mesh, axes),
         _stage(directions, mesh, axes),
         options,
     )
+    if stats is not None:
+        stats.record(sol)
+    return sol

@@ -52,11 +52,20 @@ STATUS_NAMES = {
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class LPBatch:
-    """A batch of B identical-shape LPs: max c.x s.t. Ax <= b, x >= 0."""
+    """A batch of B identical-shape LPs: max c.x s.t. Ax <= b, x >= 0.
+
+    ``basis0`` optionally carries a warm-start basis per LP: tableau column
+    indices (1..n originals, n+1..n+m slacks) of the variables basic at the
+    start.  Backends that support warm starts rebuild the tableau for that
+    basis and skip phase I when it is primal feasible; LPs whose basis is
+    out of range, singular, or infeasible silently fall back to the cold
+    two-phase start (see ``build_tableau``).
+    """
 
     a: jnp.ndarray  # (B, m, n)
     b: jnp.ndarray  # (B, m)
     c: jnp.ndarray  # (B, n)
+    basis0: Optional[jnp.ndarray] = None  # (B, m) int32 warm-start basis
 
     @property
     def batch(self) -> int:
@@ -71,18 +80,30 @@ class LPBatch:
         return self.a.shape[2]
 
     def astype(self, dtype) -> "LPBatch":
-        return LPBatch(self.a.astype(dtype), self.b.astype(dtype), self.c.astype(dtype))
+        return LPBatch(
+            self.a.astype(dtype),
+            self.b.astype(dtype),
+            self.c.astype(dtype),
+            self.basis0,
+        )
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class LPSolution:
-    """Result batch: objective, primal point, status, iterations used."""
+    """Result batch: objective, primal point, status, iterations used.
+
+    ``basis`` is the final simplex basis (same column convention as
+    ``LPBatch.basis0``) when the producing backend tracks one, else None.
+    Feeding it back as the next solve's ``basis0`` is the warm-start path
+    used by the reachability sweep (core/support.py).
+    """
 
     objective: jnp.ndarray  # (B,)
     x: jnp.ndarray  # (B, n)
     status: jnp.ndarray  # (B,) int32, see STATUS_* above
     iterations: jnp.ndarray  # (B,) int32
+    basis: Optional[jnp.ndarray] = None  # (B, m) int32 final basis
 
 
 def num_cols(m: int, n: int) -> int:
@@ -90,15 +111,46 @@ def num_cols(m: int, n: int) -> int:
     return 1 + n + 2 * m
 
 
-def build_tableau(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
+def auto_cap(m: int, n: int) -> int:
+    """The library-wide auto iteration cap for ``max_iters <= 0``.
+
+    Every built-in solver (oracle, lockstep simplex, Pallas kernel) and
+    the compaction engine must agree on this rule — compaction's
+    bit-identity guarantee relies on its final round using the same cap a
+    plain solve would.
+    """
+    return 50 * (m + n)
+
+
+def build_tableau(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    basis0: Optional[jnp.ndarray] = None,
+):
     """Construct the batched two-phase simplex tableau (device-side, jit-able).
 
-    Returns:
-      tab:    (B, m+1, q) tableau, q = 1 + n + 2m.  Objective row is the
-              phase-I reduced-cost row for LPs with any b_i < 0, else the
-              phase-II row (coefficients of c).
-      basis:  (B, m) int32 — column index of the basic variable per row.
-      phase:  (B,) int32 — 1 where phase I is required, else 2.
+    Parameters
+    ----------
+    a, b, c : jnp.ndarray
+        Canonical batch data, shapes ``(B, m, n)``, ``(B, m)``, ``(B, n)``.
+    basis0 : jnp.ndarray, optional
+        ``(B, m)`` int32 warm-start basis (tableau column indices,
+        1..n originals / n+1..n+m slacks).  Where the basis is valid,
+        nonsingular, and primal feasible the tableau is rebuilt for it
+        (``B^-1 [b | A | I]``) and the LP starts directly in phase II;
+        invalid rows fall back to the cold slack/artificial start.
+
+    Returns
+    -------
+    tab : jnp.ndarray
+        (B, m+1, q) tableau, q = 1 + n + 2m.  Objective row is the
+        phase-I reduced-cost row for LPs with any b_i < 0, else the
+        phase-II row (coefficients of c).
+    basis : jnp.ndarray
+        (B, m) int32 — column index of the basic variable per row.
+    phase : jnp.ndarray
+        (B,) int32 — 1 where phase I is required, else 2.
     """
     bsz, m, n = a.shape
     q = num_cols(m, n)
@@ -135,7 +187,62 @@ def build_tableau(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray):
     basis = jnp.where(neg, 1 + n + m + row_idx[None, :], 1 + n + row_idx[None, :])
     basis = basis.astype(jnp.int32)
     phase = jnp.where(need_phase1, 1, 2).astype(jnp.int32)
+    if basis0 is None:
+        return tab, basis, phase
+    warm_tab, warm_basis, ok = _warm_tableau(a, b, c, basis0)
+    tab = jnp.where(ok[:, None, None], warm_tab, tab)
+    basis = jnp.where(ok[:, None], warm_basis, basis)
+    phase = jnp.where(ok, 2, phase)
     return tab, basis, phase
+
+
+def _warm_tableau(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, basis0):
+    """Tableau for a caller-supplied basis: rows = B^-1 [b | A | I].
+
+    Returns ``(tab, basis, ok)`` where ``ok`` is a (B,) bool mask of LPs
+    whose warm basis is usable — indices in the var/slack range, basis
+    matrix nonsingular (a singular or duplicated basis surfaces as
+    non-finite solve output), and ``B^-1 b`` primal feasible.  Rows with
+    ``ok`` False must use the cold start; the returned tableau is
+    unspecified there.  The artificial columns of a warm tableau are all
+    zero: a feasible warm basis starts in phase II where artificials are
+    both non-basic and ineligible to enter.
+    """
+    bsz, m, n = a.shape
+    q = num_cols(m, n)
+    dtype = a.dtype
+    basis0 = jnp.asarray(basis0, jnp.int32)
+
+    in_range = (basis0 >= 1) & (basis0 <= n + m)  # (B, m)
+    safe = jnp.where(in_range, basis0, 1)
+
+    eye = jnp.broadcast_to(jnp.eye(m, dtype=dtype), (bsz, m, m))
+    ai = jnp.concatenate([a, eye], axis=2)  # (B, m, n+m) var+slack columns
+    bmat = jnp.take_along_axis(ai, (safe - 1)[:, None, :], axis=2)  # (B, m, m)
+    rhs_full = jnp.concatenate([b[:, :, None], ai], axis=2)  # (B, m, 1+n+m)
+    body = jnp.linalg.solve(bmat, rhs_full)  # B^-1 [b | A | I]
+
+    feas_tol = (1e-9 if dtype == jnp.float64 else 1e-6) * jnp.maximum(
+        1.0, jnp.max(jnp.abs(b), axis=-1)
+    )
+    finite = jnp.all(jnp.isfinite(body), axis=(1, 2))
+    feasible = jnp.all(body[:, :, 0] >= -feas_tol[:, None], axis=1)
+    ok = jnp.all(in_range, axis=1) & finite & feasible
+    # Guard the downstream arithmetic: non-finite entries from a singular
+    # basis would poison jnp.where on some backends.
+    body = jnp.where(jnp.isfinite(body), body, 0.0)
+    # Restore the rhs >= 0 invariant the ratio test relies on (the accepted
+    # bases are feasible only up to feas_tol).
+    body = body.at[:, :, 0].set(jnp.maximum(body[:, :, 0], 0.0))
+
+    c_full = jnp.zeros((bsz, 1 + n + m), dtype).at[:, 1 : 1 + n].set(c)
+    cb = jnp.take_along_axis(c_full, safe, axis=1)  # (B, m) basic costs
+    obj = c_full - jnp.einsum("bm,bmk->bk", cb, body)  # col 0 holds -z0
+
+    tab = jnp.zeros((bsz, m + 1, q), dtype)
+    tab = tab.at[:, :m, : 1 + n + m].set(body)
+    tab = tab.at[:, m, : 1 + n + m].set(obj)
+    return tab, safe, ok
 
 
 def random_lp_batch(

@@ -13,7 +13,7 @@ from typing import Tuple
 
 import numpy as np
 
-from .lp import INFEASIBLE, ITER_LIMIT, OPTIMAL, UNBOUNDED
+from .lp import INFEASIBLE, ITER_LIMIT, OPTIMAL, UNBOUNDED, auto_cap
 
 _TOL = 1e-9
 _BIG = 1e30
@@ -73,7 +73,7 @@ def solve_lp(
     c = np.asarray(c, np.float64)
     m, n = a.shape
     if max_iters <= 0:
-        max_iters = 50 * (m + n)
+        max_iters = auto_cap(m, n)
     q = 1 + n + 2 * m
 
     neg = b < 0

@@ -74,6 +74,12 @@ class LPProblem:
     bu: jnp.ndarray  # (B, m) row upper bounds (+inf = none)
     lo: jnp.ndarray  # (B, n) variable lower bounds (-inf = free below)
     hi: jnp.ndarray  # (B, n) variable upper bounds (+inf = none)
+    # Optional warm-start basis in CANONICAL column space (the space of the
+    # LPBatch that `canonicalize` emits, whose final basis a previous
+    # solve reports in LPSolution.basis).  A hint only: rows that are not
+    # usable fall back to the cold two-phase start, and dropping it never
+    # changes results.
+    basis0: Optional[jnp.ndarray] = None  # (B, m') int32
     maximize: bool = _static(True)
     split: bool = _static(False)  # canonical form carries x_neg columns
     boxlike: bool = _static(False)  # no rows + finite box: hyperbox route
@@ -112,14 +118,39 @@ class LPProblem:
         hi=None,
         maximize: bool = True,
         dtype=None,
+        basis0=None,
     ) -> "LPProblem":
         """Normalize user inputs (host-side) into a batched ``LPProblem``.
 
-        Accepts unbatched ``c: (n,)`` / ``a: (m, n)`` or batched ``(B, n)`` /
-        ``(B, m, n)`` arrays; row/variable bounds broadcast and default to
-        unbounded rows, ``lo = 0``, ``hi = +inf`` (the paper's sign-restricted
-        variables).  Structure flags (``split``, ``boxlike``) are computed
-        here from the concrete bounds, so call this outside jit.
+        Parameters
+        ----------
+        c : array_like
+            Objective, unbatched ``(n,)`` or batched ``(B, n)``.
+        a : array_like, optional
+            General constraint rows, ``(m, n)`` or ``(B, m, n)``; defaults
+            to no rows.
+        bl, bu : array_like, optional
+            Row lower/upper bounds (equality rows: ``bl == bu``); default
+            unbounded.  Broadcast over the batch.
+        lo, hi : array_like, optional
+            Variable bounds; default ``lo = 0``, ``hi = +inf`` (the
+            paper's sign-restricted variables).  ``lo = -inf`` marks a
+            free variable (canonical x+/x- split).
+        maximize : bool, default True
+            Objective sense (static pytree metadata).
+        dtype : numpy dtype, optional
+            Data dtype; inferred from ``c`` when omitted.
+        basis0 : array_like, optional
+            ``(B, m')`` int32 warm-start basis in canonical column space —
+            feed a previous ``LPSolution.basis`` from a solve of a
+            same-shaped problem (the support-function sweep pattern).
+
+        Returns
+        -------
+        LPProblem
+            Batched problem with the static structure flags (``split``,
+            ``boxlike``, ...) derived from the concrete bounds — so call
+            this outside jit.
         """
         c = np.asarray(c)
         if dtype is None:
@@ -162,6 +193,7 @@ class LPProblem:
             bu=jnp.asarray(bu),
             lo=jnp.asarray(lo),
             hi=jnp.asarray(hi),
+            basis0=None if basis0 is None else jnp.asarray(basis0, jnp.int32),
             maximize=bool(maximize),
             split=split,
             boxlike=boxlike,
@@ -171,7 +203,18 @@ class LPProblem:
 
     @classmethod
     def from_batch(cls, batch: LPBatch) -> "LPProblem":
-        """Wrap an already-canonical ``LPBatch`` (max, Ax <= b, x >= 0)."""
+        """Wrap an already-canonical ``LPBatch`` (max, Ax <= b, x >= 0).
+
+        Parameters
+        ----------
+        batch : LPBatch
+            Canonical batch; its ``basis0`` warm-start hint is preserved.
+
+        Returns
+        -------
+        LPProblem
+            General-form view with one-sided rows and default bounds.
+        """
         bsz, m, _ = batch.a.shape
         neg_inf = jnp.full((bsz, m), -jnp.inf, batch.a.dtype)
         return cls(
@@ -181,6 +224,7 @@ class LPProblem:
             bu=batch.b,
             lo=jnp.zeros_like(batch.c),
             hi=jnp.full_like(batch.c, jnp.inf),
+            basis0=batch.basis0,
             maximize=True,
             split=False,
             boxlike=False,
@@ -219,6 +263,10 @@ class LPProblem:
             bu=jnp.pad(self.bu, pad_rows, constant_values=jnp.inf),
             lo=jnp.pad(self.lo, pad_vars),
             hi=jnp.pad(self.hi, pad_vars, constant_values=hi_fill),
+            # Padding changes the canonical column layout, so a carried
+            # basis would point at the wrong columns; drop the hint
+            # (semantically a cold start, never a wrong answer).
+            basis0=None,
             maximize=self.maximize,
             split=self.split,
             boxlike=boxlike_pad,
@@ -228,7 +276,25 @@ class LPProblem:
 
 
 def stack_problems(problems: Sequence[LPProblem]) -> LPProblem:
-    """Concatenate same-shape problems along the batch axis (one bucket)."""
+    """Concatenate same-shape problems along the batch axis (one bucket).
+
+    Parameters
+    ----------
+    problems : sequence of LPProblem
+        Problems of one ``(m, n)`` shape class and one objective sense.
+        Warm-start bases are stacked only when every problem carries one.
+
+    Returns
+    -------
+    LPProblem
+        One batched problem; structure flags are the union (a flag that is
+        True for any member is True for the stack).
+
+    Raises
+    ------
+    ValueError
+        On an empty list, mixed shapes, or mixed objective senses.
+    """
     if not problems:
         raise ValueError("cannot stack an empty problem list")
     shapes = {(p.m, p.n) for p in problems}
@@ -245,6 +311,7 @@ def stack_problems(problems: Sequence[LPProblem]) -> LPProblem:
         bu=cat("bu"),
         lo=cat("lo"),
         hi=cat("hi"),
+        basis0=cat("basis0") if all(p.basis0 is not None for p in problems) else None,
         maximize=problems[0].maximize,
         split=any(p.split for p in problems),
         boxlike=all(p.boxlike for p in problems),
@@ -275,6 +342,25 @@ def canonicalize(problem: LPProblem) -> Canonicalized:
     """Lower general form to the paper's ``max c.x, Ax <= b, x >= 0``.
 
     Pure jnp value-masking over static shapes — jit/vmap friendly.
+
+    Parameters
+    ----------
+    problem : LPProblem
+        General-form batch.  A ``basis0`` warm-start hint is threaded onto
+        the canonical batch unchanged (it already lives in canonical
+        column space).
+
+    Returns
+    -------
+    Canonicalized
+        The canonical ``LPBatch`` plus the shift/sign/split data
+        :func:`uncanonicalize` needs to map solutions back.
+
+    Raises
+    ------
+    ValueError
+        If ``basis0`` has a row count that cannot match the canonical
+        form produced by the problem's structure flags.
     """
     p = problem
     bsz, m, n = p.a.shape
@@ -312,8 +398,16 @@ def canonicalize(problem: LPProblem) -> Canonicalized:
         a_std = jnp.concatenate([a_std, a_neg], axis=2)  # (B, 2m+n, 2n)
         c_std = jnp.concatenate([c_std, jnp.where(free, -c_std, 0.0)], axis=1)
 
+    basis0 = p.basis0
+    if basis0 is not None and basis0.shape[-1] != a_std.shape[1]:
+        raise ValueError(
+            f"basis0 has {basis0.shape[-1]} rows but the canonical form has "
+            f"{a_std.shape[1]} — feed a basis from a solve of a problem with "
+            "the same structure flags"
+        )
+
     return Canonicalized(
-        batch=LPBatch(a_std, b_std, c_std),
+        batch=LPBatch(a_std, b_std, c_std, basis0=basis0),
         c_user=p.c,
         shift=lo0,
         n=n,
@@ -328,6 +422,20 @@ def uncanonicalize(canon: Canonicalized, sol: LPSolution) -> LPSolution:
     Primal: x = shift + x_pos - x_neg.  Objective is re-evaluated as
     ``c_user . x`` (exact in user space, no sign algebra); non-optimal LPs
     report -inf when maximizing, +inf when minimizing.
+
+    Parameters
+    ----------
+    canon : Canonicalized
+        The record :func:`canonicalize` produced for the problem.
+    sol : LPSolution
+        Solution of ``canon.batch`` from any backend.
+
+    Returns
+    -------
+    LPSolution
+        User-coordinate solution.  ``basis`` stays in canonical column
+        space: it is the warm-start currency for the next solve over the
+        same canonical structure, not a user-facing quantity.
     """
     n = canon.n
     x = canon.shift + sol.x[:, :n]
@@ -338,7 +446,13 @@ def uncanonicalize(canon: Canonicalized, sol: LPSolution) -> LPSolution:
     objective = jnp.where(ok, jnp.sum(canon.c_user * x, axis=-1), bad)
     x = jnp.where(ok[:, None], x, 0.0)
     return LPSolution(
-        objective=objective, x=x, status=sol.status, iterations=sol.iterations
+        objective=objective,
+        x=x,
+        status=sol.status,
+        iterations=sol.iterations,
+        # Canonical-space basis, preserved for warm-starting the next
+        # solve over the same canonical structure (LPProblem.basis0).
+        basis=sol.basis,
     )
 
 
@@ -347,6 +461,22 @@ def solve_box(problem: LPProblem) -> LPSolution:
 
     max/min of c.x over [lo, hi] decomposes coordinate-wise; empty boxes
     (lo > hi anywhere) are reported INFEASIBLE.
+
+    Parameters
+    ----------
+    problem : LPProblem
+        A problem whose static ``boxlike`` flag is True (no general rows,
+        all-finite box).
+
+    Returns
+    -------
+    LPSolution
+        Exact solutions with 0 iterations per LP.
+
+    Raises
+    ------
+    ValueError
+        If the problem is not boxlike.
     """
     p = problem
     if not p.boxlike:

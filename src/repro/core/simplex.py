@@ -30,7 +30,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .lp import INFEASIBLE, ITER_LIMIT, LPBatch, LPSolution, OPTIMAL, RUNNING, UNBOUNDED, build_tableau
+from .lp import INFEASIBLE, ITER_LIMIT, LPBatch, LPSolution, OPTIMAL, RUNNING, UNBOUNDED, auto_cap, build_tableau
 
 LPC = "lpc"
 RPC = "rpc"
@@ -97,6 +97,7 @@ def solve_batched(
     seed: int = 0,
     unroll: int = 1,
     tol: float = 0.0,
+    basis0: Optional[jnp.ndarray] = None,
 ) -> LPSolution:
     """Solve a batch of LPs (max c.x, Ax <= b, x >= 0) in lockstep.
 
@@ -107,15 +108,20 @@ def solve_batched(
         (default 50*(m+n), matching the oracle).
       unroll: while_loop body unroll factor (perf knob).
       tol: reduced-cost/pivot tolerance (0 = dtype default).
+      basis0: optional (B, m) warm-start basis; feasible rows skip
+        phase I entirely (see ``build_tableau``).
+
+    The returned ``LPSolution.basis`` holds the final basis, reusable as
+    the next solve's ``basis0`` (warm-start sweeps, core/support.py).
     """
     bsz, m, n = a.shape
     if max_iters <= 0:
-        max_iters = 50 * (m + n)
+        max_iters = auto_cap(m, n)
     dtype = a.dtype
     if tol <= 0.0:
         tol = _tolerances(dtype)
 
-    tab, basis, phase = build_tableau(a, b, c)
+    tab, basis, phase = build_tableau(a, b, c, basis0)
     q = tab.shape[-1]
 
     elig = jnp.zeros((q,), bool).at[1 : 1 + n + m].set(True)
@@ -216,8 +222,15 @@ def solve_batched(
     x = jnp.zeros((bsz, n), dtype)
     x = x.at[jnp.arange(bsz)[:, None], var_idx].add(contrib)
     x = jnp.where((status == OPTIMAL)[:, None], x, 0.0)
-    return LPSolution(objective=objective, x=x, status=status, iterations=final.iters)
+    return LPSolution(
+        objective=objective,
+        x=x,
+        status=status,
+        iterations=final.iters,
+        basis=final.basis,
+    )
 
 
 def solve(batch: LPBatch, **kw) -> LPSolution:
+    kw.setdefault("basis0", batch.basis0)
     return solve_batched(batch.a, batch.b, batch.c, **kw)

@@ -24,8 +24,8 @@ import numpy as np
 
 from . import dispatch as _dispatch
 from . import hyperbox as _hyperbox
-from .backends import SolveOptions
-from .lp import LPBatch
+from .backends import SolveOptions, SolveStats
+from .lp import LPBatch, LPSolution, OPTIMAL
 from .problem import LPProblem, canonicalize, uncanonicalize
 
 
@@ -59,15 +59,26 @@ class Polytope:
     def dim(self) -> int:
         return int(np.asarray(self.a).shape[-1])
 
-    def to_problem(self, directions) -> LPProblem:
-        """One general-form LP per direction: max l.x, Ax <= b, x free."""
+    def to_problem(self, directions, basis0=None) -> LPProblem:
+        """One general-form LP per direction: max l.x, Ax <= b, x free.
+
+        Parameters
+        ----------
+        directions : array_like
+            ``(K, n)`` directions; each row becomes one LP's objective.
+        basis0 : array_like, optional
+            Canonical-space warm-start basis (e.g. ``LPSolution.basis``
+            from the previous direction batch over this same polytope —
+            only the objective changes between directions, so a previous
+            optimal basis stays primal feasible and skips phase I).
+        """
         directions = np.asarray(directions)
         k, n = directions.shape
         a = np.broadcast_to(np.asarray(self.a), (k, *np.asarray(self.a).shape))
         bu = np.broadcast_to(np.asarray(self.b), (k, np.asarray(self.b).shape[0]))
         return LPProblem.make(
             c=directions, a=a, bu=bu, lo=-np.inf, hi=np.inf,
-            dtype=directions.dtype,
+            dtype=directions.dtype, basis0=basis0,
         )
 
     def to_lp_batch(self, directions) -> LPBatch:
@@ -75,10 +86,79 @@ class Polytope:
         standard-form API; equivalent to canonicalizing ``to_problem``)."""
         return canonicalize(self.to_problem(directions)).batch
 
+    def support_solutions(
+        self,
+        directions,
+        options: Optional[SolveOptions] = None,
+        basis0=None,
+        stats: Optional[SolveStats] = None,
+    ) -> LPSolution:
+        """Full solutions (not just support values) for the directions.
+
+        The returned ``LPSolution.basis`` is the warm-start currency for
+        the next direction batch over this polytope; ``basis0`` accepts
+        the previous batch's.
+        """
+        canon = canonicalize(self.to_problem(directions, basis0=basis0))
+        sol = _dispatch.solve_canonical(canon.batch, options, stats=stats)
+        return uncanonicalize(canon, sol)
+
     def support(self, directions, options: Optional[SolveOptions] = None):
-        canon = canonicalize(self.to_problem(directions))
-        sol = _dispatch.solve_canonical(canon.batch, options)
-        return uncanonicalize(canon, sol).objective
+        """rho_P(l) for each row of directions: (K, n) -> (K,)."""
+        return self.support_solutions(directions, options).objective
+
+    def support_sweep(
+        self,
+        direction_stack,
+        options: Optional[SolveOptions] = None,
+        warm_start: bool = True,
+        stats: Optional[SolveStats] = None,
+    ) -> jnp.ndarray:
+        """Support values over a sequence of direction batches, warm-started.
+
+        The reachability workload (core/reach.py) evaluates the SAME
+        polytope in S slowly-rotating direction batches: step s's
+        directions are step s-1's multiplied by the dynamics map Phi.
+        Because only the objective changes, the optimal basis of step s-1
+        is primal feasible for step s — each step after the first skips
+        phase I and usually needs only a handful of pivots (cuPDLP-style
+        restart machinery, arXiv:2311.12180, transplanted to the simplex).
+
+        Parameters
+        ----------
+        direction_stack : array_like
+            ``(S, K, n)`` direction batches, swept in order.
+        options : SolveOptions, optional
+            Backend/pipeline configuration for each step's batch.
+        warm_start : bool, default True
+            Reuse each step's optimal basis as the next step's ``basis0``.
+            Requires a backend that reports ``LPSolution.basis`` (xla,
+            pallas); with other backends the sweep silently runs cold.
+        stats : SolveStats, optional
+            Accumulates per-step iteration counts — the counter that
+            shows the warm-start win (fewer ``simplex_iterations`` than a
+            cold sweep, identical support values).
+
+        Returns
+        -------
+        jnp.ndarray
+            ``(S, K)`` support values, identical to solving every step
+            cold (a warm basis changes the starting point of the search,
+            never the optimum).
+        """
+        direction_stack = np.asarray(direction_stack)
+        outs = []
+        basis = None
+        for dirs in direction_stack:
+            if stats is not None and basis is not None:
+                stats.warm_started += int(np.asarray(basis > 0).any(axis=-1).sum())
+            sol = self.support_solutions(dirs, options, basis0=basis, stats=stats)
+            if warm_start and sol.basis is not None:
+                # Reuse only bases of LPs that actually converged; a 0
+                # entry is out of range, so build_tableau cold-starts it.
+                basis = jnp.where((sol.status == OPTIMAL)[:, None], sol.basis, 0)
+            outs.append(sol.objective)
+        return jnp.stack(outs)
 
 
 def box_to_polytope(box: Box) -> Polytope:

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.lp import LPSolution, build_tableau, num_cols
+from ..core.lp import LPSolution, auto_cap, build_tableau, num_cols
 from .hyperbox_pallas import hyperbox_pallas
 from .simplex_pallas import simplex_pallas
 
@@ -35,22 +35,26 @@ def simplex_solve(
     max_iters: int = 0,
     tile_b: int = 8,
     interpret: bool | None = None,
+    basis0: jnp.ndarray | None = None,
 ) -> LPSolution:
     """Solve a batch of LPs with the VMEM-resident Pallas kernel.
 
     a: (B, m, n), b: (B, m), c: (B, n); returns LPSolution like the core
     solver.  Batch is padded to a tile multiple; tableau columns pad to the
-    128-lane boundary; rows pad to the 8-sublane boundary.
+    128-lane boundary; rows pad to the 8-sublane boundary.  ``basis0`` is
+    an optional (B, m) warm-start basis — handled host-of-kernel in
+    ``build_tableau``, so warm rows enter the kernel already in phase II;
+    the final basis comes back in ``LPSolution.basis`` for reuse.
     """
     if interpret is None:
         interpret = not _on_tpu()
     bsz, m, n = a.shape
     if max_iters <= 0:
-        max_iters = 50 * (m + n)
+        max_iters = auto_cap(m, n)
     q = num_cols(m, n)
     dtype = a.dtype
 
-    tab, basis, phase = build_tableau(a, b, c)
+    tab, basis, phase = build_tableau(a, b, c, basis0)
 
     qp = _round_up(q, 128)
     m1p = _round_up(m + 1, 8)
@@ -67,7 +71,7 @@ def simplex_solve(
     phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(phase)
     c_ext = jnp.zeros((bp, qp), dtype).at[:bsz, 1 : 1 + n].set(c)
 
-    obj, x, status, iters = simplex_pallas(
+    obj, x, status, iters, basis_out = simplex_pallas(
         tab_p,
         basis_p,
         phase_p,
@@ -88,6 +92,7 @@ def simplex_solve(
         x=x[:bsz, :n],
         status=status[:bsz],
         iterations=iters[:bsz],
+        basis=basis_out[:bsz, :m],
     )
 
 

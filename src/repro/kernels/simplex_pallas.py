@@ -41,6 +41,7 @@ def _kernel(
     x_ref,  # out (TB, Np) f32
     status_ref,  # out (TB,) i32
     iters_ref,  # out (TB,) i32
+    basis_out_ref,  # out (TB, Mp) i32 — final basis (warm-start reuse)
     *,
     m: int,
     n: int,
@@ -158,6 +159,12 @@ def _kernel(
     x_ref[...] = x
     status_ref[...] = status
     iters_ref[...] = iters
+    # Static-slice stores: .at[...].set on a value would materialize an
+    # index constant the Pallas tracer refuses to capture.
+    mp = basis_out_ref.shape[1]
+    if mp > m:
+        basis_out_ref[:, m:] = jnp.zeros((tb, mp - m), jnp.int32)
+    basis_out_ref[:, :m] = basis
 
 
 def simplex_pallas(
@@ -197,12 +204,14 @@ def simplex_pallas(
             pl.BlockSpec((tile_b, n_padded), lambda i: (i, 0)),
             pl.BlockSpec((tile_b,), lambda i: (i,)),
             pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b, basis.shape[1]), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz,), tab.dtype),
             jax.ShapeDtypeStruct((bsz, n_padded), tab.dtype),
             jax.ShapeDtypeStruct((bsz,), jnp.int32),
             jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, basis.shape[1]), jnp.int32),
         ],
         interpret=interpret,
     )(tab, basis, phase, c_ext)

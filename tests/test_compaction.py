@@ -1,0 +1,248 @@
+"""Convergence compaction + warm-start basis reuse regression tests.
+
+Compaction acceptance (ISSUE 2): on a mixed feasible/infeasible/unbounded
+batch, every compaction mode must return bit-identical statuses and
+objectives (and, with the deterministic pivot rules, bit-identical primal
+points and iteration counts) versus ``compaction="off"``.  Warm starts
+must match the cold-start oracle while doing measurably fewer simplex
+iterations, observable through ``SolveStats``.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro import SolveOptions, SolveStats
+from repro.core import dispatch, lp, support
+from repro.core.backends import COMPACTION_MODES
+from repro.core.lp import LPBatch
+
+
+def _mixed_batch(dtype=np.float64) -> LPBatch:
+    """Feasible-start + infeasible-start + unbounded + infeasible LPs.
+
+    One (m=12, n=6) shape so everything lands in one canonical batch; the
+    iteration counts are strongly skewed (feasible-start LPs converge
+    quickly, the two-phase LPs drag the lockstep loop).
+    """
+    rng = np.random.default_rng(42)
+    m, n = 12, 6
+    easy = lp.random_lp_batch(rng, 24, m, n, True, dtype=dtype)
+    hard = lp.random_lp_batch(rng, 8, m, n, False, dtype=dtype)
+
+    # Unbounded: a <= 0 everywhere, all costs positive -> no finite ratio.
+    a_unb = -np.abs(rng.uniform(0.1, 1.0, size=(2, m, n)))
+    b_unb = np.ones((2, m))
+    c_unb = np.abs(rng.uniform(0.1, 1.0, size=(2, n)))
+
+    # Infeasible: x_0 <= 1 and -x_0 <= -3 (i.e. x_0 >= 3) conflict.
+    a_inf = np.zeros((2, m, n))
+    b_inf = np.ones((2, m))
+    a_inf[:, 0, 0] = 1.0
+    b_inf[:, 0] = 1.0
+    a_inf[:, 1, 0] = -1.0
+    b_inf[:, 1] = -3.0
+    c_inf = np.ones((2, n))
+
+    return LPBatch(
+        np.concatenate([easy.a, hard.a, a_unb, a_inf]).astype(dtype),
+        np.concatenate([easy.b, hard.b, b_unb, b_inf]).astype(dtype),
+        np.concatenate([easy.c, hard.c, c_unb, c_inf]).astype(dtype),
+    )
+
+
+def _assert_bit_identical(ref, sol):
+    assert np.array_equal(np.asarray(ref.status), np.asarray(sol.status))
+    np.testing.assert_array_equal(
+        np.asarray(ref.objective), np.asarray(sol.objective)
+    )
+    np.testing.assert_array_equal(np.asarray(ref.x), np.asarray(sol.x))
+    np.testing.assert_array_equal(
+        np.asarray(ref.iterations), np.asarray(sol.iterations)
+    )
+
+
+# ---------------------------------------------------------------------------
+# compaction == off equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["chunked", "every_k"])
+def test_compaction_bit_identical_on_mixed_batch(mode):
+    batch = _mixed_batch()
+    off = repro.solve(batch, SolveOptions(compaction="off"))
+    # the batch really is mixed
+    st = np.asarray(off.status)
+    assert (st == lp.OPTIMAL).any()
+    assert (st == lp.UNBOUNDED).any()
+    assert (st == lp.INFEASIBLE).any()
+
+    sol = repro.solve(
+        batch, SolveOptions(compaction=mode, compact_every=8, chunk_size=16)
+    )
+    _assert_bit_identical(off, sol)
+
+
+def test_compaction_auto_budget_and_whole_batch_chunk():
+    batch = _mixed_batch()
+    off = repro.solve(batch)
+    for mode in ("chunked", "every_k"):
+        sol = repro.solve(batch, SolveOptions(compaction=mode))  # all-auto knobs
+        _assert_bit_identical(off, sol)
+
+
+def test_compaction_honored_by_all_backends():
+    batch = _mixed_batch()
+    for backend in ("xla", "pallas", "reference"):
+        off = repro.solve(batch, SolveOptions(backend=backend))
+        sol = repro.solve(
+            batch,
+            SolveOptions(backend=backend, compaction="every_k", compact_every=8),
+        )
+        assert np.array_equal(np.asarray(off.status), np.asarray(sol.status)), backend
+        np.testing.assert_array_equal(
+            np.asarray(off.objective), np.asarray(sol.objective), err_msg=backend
+        )
+
+
+def test_compaction_unknown_mode_raises():
+    batch = _mixed_batch()
+    with pytest.raises(ValueError, match="compaction"):
+        repro.solve(batch, SolveOptions(compaction="sometimes"))
+
+
+def test_compaction_reduces_lockstep_work():
+    batch = _mixed_batch()
+    off_stats, comp_stats = SolveStats(), SolveStats()
+    repro.solve(batch, SolveOptions(), stats=off_stats)
+    repro.solve(
+        batch,
+        SolveOptions(compaction="every_k", compact_every=8),
+        stats=comp_stats,
+    )
+    # Same useful work (plus bounded re-work), strictly less lockstep drag.
+    assert comp_stats.lockstep_iterations < off_stats.lockstep_iterations
+    assert comp_stats.rounds > off_stats.rounds
+
+
+# ---------------------------------------------------------------------------
+# warm starts (basis0 -> basis round trip)
+# ---------------------------------------------------------------------------
+
+
+def test_basis0_resume_takes_zero_iterations():
+    rng = np.random.default_rng(7)
+    batch = lp.random_lp_batch(rng, 16, 10, 10, True, dtype=np.float64)
+    cold = repro.solve(batch)
+    assert cold.basis is not None
+    warm = repro.solve(LPBatch(batch.a, batch.b, batch.c, basis0=cold.basis))
+    assert np.array_equal(np.asarray(cold.status), np.asarray(warm.status))
+    ok = np.asarray(cold.status) == lp.OPTIMAL
+    assert (np.asarray(warm.iterations)[ok] == 0).all()
+    np.testing.assert_allclose(
+        np.asarray(warm.objective)[ok], np.asarray(cold.objective)[ok], rtol=1e-9
+    )
+
+
+def test_bad_basis0_falls_back_to_cold_start():
+    rng = np.random.default_rng(8)
+    batch = lp.random_lp_batch(rng, 8, 12, 6, False, dtype=np.float64)
+    cold = repro.solve(batch)
+    for bad in (
+        np.zeros((8, 12), np.int32),  # out of range
+        np.ones((8, 12), np.int32),  # duplicated -> singular
+        np.full((8, 12), 1000, np.int32),  # out of range high
+    ):
+        sol = repro.solve(LPBatch(batch.a, batch.b, batch.c, basis0=bad))
+        _assert_bit_identical(cold, sol)
+
+
+def test_warm_start_via_pallas_backend():
+    rng = np.random.default_rng(9)
+    batch = lp.random_lp_batch(rng, 8, 8, 8, True, dtype=np.float64)
+    opts = SolveOptions(backend="pallas")
+    cold = repro.solve(batch, opts)
+    assert cold.basis is not None
+    warm = repro.solve(LPBatch(batch.a, batch.b, batch.c, basis0=cold.basis), opts)
+    ok = np.asarray(cold.status) == lp.OPTIMAL
+    assert (np.asarray(warm.iterations)[ok] == 0).all()
+    np.testing.assert_allclose(
+        np.asarray(warm.objective)[ok], np.asarray(cold.objective)[ok], rtol=1e-9
+    )
+
+
+def test_reference_backend_ignores_basis0():
+    rng = np.random.default_rng(10)
+    batch = lp.random_lp_batch(rng, 4, 6, 6, True, dtype=np.float64)
+    cold = repro.solve(batch, SolveOptions(backend="reference"))
+    assert cold.basis is None  # the oracle does not track a basis
+    garbage = np.full((4, 6), 123, np.int32)
+    sol = repro.solve(
+        LPBatch(batch.a, batch.b, batch.c, basis0=garbage),
+        SolveOptions(backend="reference"),
+    )
+    _assert_bit_identical(cold, sol)
+
+
+# ---------------------------------------------------------------------------
+# warm-started support-function sweep (the reachability pattern)
+# ---------------------------------------------------------------------------
+
+
+def _rotating_direction_stack(steps=12, k=8, dim=4, seed=3):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(k, dim))
+    base /= np.linalg.norm(base, axis=1, keepdims=True)
+    theta = 0.15
+    rot = np.eye(dim)
+    rot[0, 0] = rot[1, 1] = np.cos(theta)
+    rot[0, 1], rot[1, 0] = -np.sin(theta), np.sin(theta)
+    out = np.empty((steps, k, dim))
+    cur = base
+    for s in range(steps):
+        out[s] = cur
+        cur = cur @ rot
+    return out
+
+
+def test_warm_sweep_matches_cold_with_fewer_iterations():
+    rng = np.random.default_rng(11)
+    dim = 4
+    a = np.concatenate([np.eye(dim), -np.eye(dim), rng.uniform(0, 1, (4, dim))])
+    b = np.concatenate([np.ones(dim), np.ones(dim), rng.uniform(2, 4, 4)])
+    poly = support.Polytope(a, b)
+    stack = _rotating_direction_stack(dim=dim)
+
+    cold_stats, warm_stats = SolveStats(), SolveStats()
+    cold = poly.support_sweep(stack, warm_start=False, stats=cold_stats)
+    warm = poly.support_sweep(stack, warm_start=True, stats=warm_stats)
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(cold), rtol=1e-9, atol=1e-9)
+    assert warm_stats.simplex_iterations < cold_stats.simplex_iterations
+    assert warm_stats.warm_started > 0
+
+
+def test_warm_reach_matches_cold_oracle():
+    from repro.core import reach
+
+    sys5 = reach.five_dim_model()
+    cold_stats, warm_stats = SolveStats(), SolveStats()
+    cold, _ = reach.reach_supports(
+        sys5, 0.05, 20, use_hyperbox=False, stats=cold_stats
+    )
+    warm, _ = reach.reach_supports(
+        sys5, 0.05, 20, use_hyperbox=False, warm_start=True, stats=warm_stats
+    )
+    np.testing.assert_allclose(warm, cold, rtol=1e-6, atol=1e-7)
+    assert warm_stats.simplex_iterations < cold_stats.simplex_iterations
+    # the hyperbox closed form is the independent oracle for box X0
+    box, _ = reach.reach_supports(sys5, 0.05, 20, use_hyperbox=True)
+    np.testing.assert_allclose(warm, box, rtol=1e-5, atol=1e-5)
+
+
+def test_stats_record_counts():
+    batch = _mixed_batch()
+    st = SolveStats()
+    sol = dispatch.solve_canonical(batch, SolveOptions(chunk_size=9), stats=st)
+    assert st.lps == batch.batch  # every LP recorded exactly once
+    assert st.rounds == int(np.ceil(batch.batch / 9))
+    assert st.simplex_iterations == int(np.asarray(sol.iterations).sum())

@@ -1,0 +1,66 @@
+"""Fail on broken intra-repo links in docs/*.md and README.md.
+
+Usage::
+
+    python tools/check_links.py
+
+Checks every markdown link/image target that is not an external URL or a
+pure in-page anchor: the referenced path must exist relative to the file
+containing the link (or the repo root as a fallback).  ``path#anchor``
+targets are checked for path existence only.  Exit code 1 lists every
+broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files():
+    yield ROOT / "README.md"
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.glob("*.md"))
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for match in LINK.finditer(line):
+            target = match.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            candidates = [path.parent / rel, ROOT / rel.lstrip("/")]
+            if not any(c.exists() for c in candidates):
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{lineno}: broken link -> {target}"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = []
+    checked = 0
+    for f in md_files():
+        if not f.exists():
+            continue
+        checked += 1
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"checked {checked} files: {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
