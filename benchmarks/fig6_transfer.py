@@ -10,7 +10,6 @@ O(m(n+2m)) tableau).
 
 from __future__ import annotations
 
-import time
 
 import jax
 import numpy as np

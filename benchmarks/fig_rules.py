@@ -1,0 +1,110 @@
+"""Pivot-rule ablation (paper Sec. 5 RPC study) -> BENCH_rules.json.
+
+The paper ablates LPC vs RPC on the GPU path only; with the shared
+iteration engine (``core/engine.py``) every rule runs on every backend,
+so the ablation sweeps the full (backend, rule) grid:
+
+  * rules: lpc (Dantzig, paper default) | rpc (randomized) | bland
+    (anti-cycling, beyond paper);
+  * backends: xla (lockstep while_loop) and pallas (VMEM kernel,
+    interpret mode off-TPU — same engine math, so iteration counts
+    match the xla column bit-for-bit).
+
+Per cell we record median wall seconds, mean/max simplex iterations, and
+the lockstep overhead (max/mean — what the slowest LP costs the batch).
+Two workloads: a feasible-start batch (phase II only) and a two-phase
+batch (the paper's "infeasible initial basic solution" class).
+
+Writes ``BENCH_rules.json`` next to the repo root (or $BENCH_DIR) and
+prints the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+RULES = ("lpc", "rpc", "bland")
+BACKENDS = ("xla", "pallas")
+
+
+def _bench_cell(batch, backend: str, rule: str):
+    """Time one (backend, rule) cell; returns (stats dict, iteration array)."""
+    import repro
+    from repro import SolveOptions
+    from repro.core import lp
+
+    opts = SolveOptions(backend=backend, rule=rule)
+
+    def run():
+        return repro.solve(batch, opts)
+
+    t = time_fn(run)
+    sol = run()
+    iters = np.asarray(sol.iterations)
+    status = np.asarray(sol.status)
+    mean_it = float(iters.mean())
+    max_it = int(iters.max())
+    overhead = float(max_it / max(mean_it, 1.0))
+    return {
+        "seconds": t,
+        "mean_iterations": mean_it,
+        "max_iterations": max_it,
+        "lockstep_overhead": overhead,
+        "optimal": int((status == lp.OPTIMAL).sum()),
+    }, iters
+
+
+def run(full: bool = False) -> None:
+    from repro.core import lp
+
+    rng = np.random.default_rng(1609)
+    bsz = 2048 if full else 256
+    m, n = (40, 40) if full else (20, 20)
+
+    workloads = {
+        "feasible": lp.random_lp_batch(rng, bsz, m, n, True, dtype=np.float32),
+        "two_phase": lp.random_lp_batch(
+            rng, bsz, 2 * n + 4, n, False, dtype=np.float32
+        ),
+    }
+
+    print("# fig_rules: name,us_per_call,backend,rule,mean_iters,max_iters,overhead")
+    results: dict = {"batch": bsz, "m": m, "n": n, "cells": {}}
+    for wname, batch in workloads.items():
+        iter_counts: dict = {}
+        for backend in BACKENDS:
+            for rule in RULES:
+                cell, iters = _bench_cell(batch, backend, rule)
+                iter_counts[(backend, rule)] = iters
+                results["cells"][f"{wname}/{backend}/{rule}"] = cell
+                emit(
+                    f"rules_{wname}_{backend}_{rule}_b{bsz}",
+                    cell["seconds"],
+                    f"{backend},{rule},{cell['mean_iterations']:.1f},"
+                    f"{cell['max_iterations']},{cell['lockstep_overhead']:.2f}",
+                )
+        # Engine-parity record (no extra solves — compares the iteration
+        # arrays already in hand): every rule must match across backends.
+        for rule in RULES:
+            results["cells"][f"{wname}/parity/{rule}"] = bool(
+                np.array_equal(
+                    iter_counts[("xla", rule)], iter_counts[("pallas", rule)]
+                )
+            )
+
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_rules.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

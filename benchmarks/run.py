@@ -16,6 +16,7 @@ from . import (
     fig9_infeasible,
     fig10_cpu_threads,
     fig_compaction,
+    fig_rules,
     roofline,
     table1_hyperbox,
     table2_reach,
@@ -30,6 +31,7 @@ BENCHES = {
     "table1": table1_hyperbox.run,
     "table2": table2_reach.run,
     "compaction": fig_compaction.run,
+    "rules": fig_rules.run,
     "roofline": roofline.run,
 }
 

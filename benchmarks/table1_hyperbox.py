@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import lp, oracle
+from repro.core import oracle
 from repro.core.hyperbox import support
 from repro.core.support import Box, box_to_polytope
 

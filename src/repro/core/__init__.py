@@ -31,7 +31,7 @@ from .backends import (
     register_backend,
 )
 from .bucketing import Bucket, bucket_problems, scatter_solutions, shape_class
-from . import dispatch, hyperbox, oracle
+from . import dispatch, engine, hyperbox, oracle
 
 __all__ = [
     "LPBatch",
@@ -66,6 +66,7 @@ __all__ = [
     "RPC",
     "BLAND",
     "dispatch",
+    "engine",
     "hyperbox",
     "oracle",
 ]

@@ -44,6 +44,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from . import engine as _engine
 from . import hyperbox as _hyperbox
 from . import simplex as _simplex
 from .lp import LPBatch, LPSolution
@@ -65,13 +66,19 @@ class SolveOptions:
     rule : str, default "lpc"
         Pivot rule: ``"lpc"`` (largest positive coefficient, the paper
         default), ``"rpc"`` (randomized), or ``"bland"`` (anti-cycling).
+        Honored by every backend that iterates — the ``xla`` and
+        ``pallas`` paths drive the same ``core/engine.py`` blocks, so a
+        rule behaves identically on both (the ``reference`` oracle is
+        LPC-only by design and ignores this knob).
     max_iters : int, default 0
         Simplex iteration cap across both phases; 0 means the auto cap
         ``50 * (m + n)``.
     tolerance : float, default 0.0
         Reduced-cost/pivot tolerance; 0 means the dtype default (1e-9 for
-        float64, 1e-5 for float32).  Advisory for backends with a baked-in
-        tolerance (pallas kernel, reference oracle).
+        float64, 1e-5 for float32).  Honored by the ``xla`` and ``pallas``
+        backends alike (both resolve it through
+        ``core/engine.py:default_tolerance``); the float64 ``reference``
+        oracle keeps its own fixed 1e-9.
     unroll : int, default 1
         ``lax.while_loop`` body unroll factor (xla perf knob).
     chunk_size : int, optional
@@ -109,7 +116,7 @@ class SolveOptions:
     """
 
     backend: str = "xla"
-    rule: str = _simplex.LPC
+    rule: str = _engine.LPC
     max_iters: int = 0
     tolerance: float = 0.0
     unroll: int = 1
@@ -127,6 +134,11 @@ class SolveOptions:
             raise ValueError(
                 f"unknown compaction mode {self.compaction!r}; "
                 f"expected one of {COMPACTION_MODES}"
+            )
+        if self.rule not in _engine.RULES:
+            raise ValueError(
+                f"unknown pivot rule {self.rule!r}; "
+                f"expected one of {_engine.RULES}"
             )
 
     def replace(self, **kw) -> "SolveOptions":
@@ -312,7 +324,10 @@ def _pallas_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
         batch.a,
         batch.b,
         batch.c,
+        rule=options.rule,
         max_iters=options.max_iters,
+        seed=options.seed,
+        tol=options.tolerance,
         basis0=batch.basis0,
     )
 

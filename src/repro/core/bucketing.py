@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 
 from .lp import LPSolution
 from .problem import LPProblem, stack_problems

@@ -1,27 +1,43 @@
-"""Chunked, overlapped, mesh-aware dispatch of canonical LP batches.
+"""Round-scheduled, chunked, overlapped, mesh-aware dispatch of LP batches.
 
-This is the substrate under every front-end path (paper Sec. 4):
+This is the substrate under every front-end path (paper Sec. 4).  All of
+it is organized as ONE round-scheduler: a solve is a *round plan* — a
+short list of per-round iteration caps — executed by a single
+gather/dispatch/scatter loop (:func:`solve_canonical`).  Round 0 always
+dispatches the full batch; each later round gathers the LPs that hit the
+previous round's cap (``ITER_LIMIT``) into a dense sub-batch,
+re-dispatches only those, and scatters the results back in input order.
 
-  * split a megabatch into device-sized chunks (the paper's global-memory
-    capacity bound, eq. 5) — here the bound is ``SolveOptions.chunk_size``;
+The four historical execution paths are now just round plans
+(:func:`_round_plan`):
+
+  * plain chunked solving            -> one round at the full cap;
+  * legacy adaptive two-pass
+    (``SolveOptions.first_cap``)     -> rounds ``[first_cap, full]`` with
+    iteration counts carried across rounds (the historical semantics);
+  * ``compaction="chunked"``         -> rounds ``[k, full]``, re-solved
+    from scratch (bit-identical to ``"off"``);
+  * ``compaction="every_k"``         -> geometric rounds
+    ``[k, 2k, 4k, ..., full]``, re-solved from scratch.
+
+Each round goes through the one dispatch primitive
+(:func:`_dispatch_round`), which owns — exactly once — the paper's
+per-round machinery:
+
+  * split the (sub-)batch into device-sized chunks (the paper's
+    global-memory capacity bound, eq. 5; here ``SolveOptions.chunk_size``);
   * overlap host->device staging of chunk k+1 with the solve of chunk k
     (the paper's CUDA streams; here: JAX async dispatch + early device_put);
   * shard the batch dimension across a mesh's data axes when a mesh is
     supplied (one LP never spans devices — same invariant as one LP per
     CUDA block);
-  * convergence compaction (``SolveOptions.compaction``): between dispatch
-    rounds, read the status vector, gather the still-active LPs into a
-    dense sub-batch, re-dispatch it, and scatter results back — the
-    load-balancing the paper gets from independent CUDA blocks retiring
-    early, recovered for lockstep batching;
-  * the legacy adaptive two-pass solve (``SolveOptions.first_cap``) is the
-    degenerate single-round form of compaction and is kept for
-    compatibility.
+  * pad the batch to the mesh multiple and trim the padding replicas off
+    the result;
+  * thread warm-start bases (``LPBatch.basis0``) through gather/stage;
+  * record ``SolveStats`` counters per dispatch.
 
 The actual per-chunk solve is delegated to the registered backend
 (core/backends.py); empty batches short-circuit to an empty solution.
-An optional ``SolveStats`` instance records per-dispatch iteration
-counters (the observability hook for compaction/warm-start wins).
 """
 
 from __future__ import annotations
@@ -169,6 +185,33 @@ def _round_cap(batch: LPBatch, options: SolveOptions) -> int:
     return min(k, _full_cap(batch, options))
 
 
+def _round_plan(batch: LPBatch, options: SolveOptions) -> Tuple[Sequence[int], bool]:
+    """Lower ``options`` to a round plan: per-round iteration caps.
+
+    Returns ``(caps, carry_iters)``.  Round 0 dispatches the whole batch
+    with ``caps[0]``; round r > 0 re-dispatches the LPs that hit round
+    r-1's cap, with ``caps[r]``.  ``carry_iters`` is True only for the
+    legacy adaptive two-pass, whose historical contract *continues*
+    counting iterations across rounds; the compaction modes re-solve from
+    scratch so their results stay bit-identical to a single full solve.
+    """
+    full_cap = _full_cap(batch, options)
+    if options.compaction == "chunked":
+        cap = _round_cap(batch, options)
+        return ([cap, full_cap] if cap < full_cap else [cap]), False
+    if options.compaction == "every_k":
+        cap = _round_cap(batch, options)
+        caps = [cap]
+        while cap < full_cap:
+            cap = min(2 * cap, full_cap)
+            caps.append(cap)
+        return caps, False
+    if options.first_cap is not None:
+        first = options.first_cap or 8 * (batch.m + batch.n)
+        return [first, full_cap], True
+    return [full_cap], False
+
+
 def solve_canonical(
     batch: LPBatch,
     options: Optional[SolveOptions] = None,
@@ -176,7 +219,18 @@ def solve_canonical(
     batch_axes: Sequence[str] = ("data",),
     stats: Optional[SolveStats] = None,
 ) -> LPSolution:
-    """Solve a canonical batch through the chunked/overlapped pipeline.
+    """Solve a canonical batch: one round-scheduler over dispatch rounds.
+
+    The configured mode — plain chunked solve, legacy adaptive two-pass
+    (``options.first_cap``), or convergence compaction
+    (``options.compaction``) — is lowered by :func:`_round_plan` to a
+    list of per-round iteration caps, then executed by the single
+    gather/dispatch/scatter loop below.  Round 0 dispatches every LP;
+    each later round reads the status vector on the host, gathers the
+    LPs that hit the previous cap (``ITER_LIMIT``) into a dense
+    sub-batch, re-dispatches only those, and scatters the results back
+    in input order.  One plain round at the full cap never examines the
+    status vector at all (no host sync).
 
     Parameters
     ----------
@@ -206,20 +260,48 @@ def solve_canonical(
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
-    if options.compaction != "off":
-        return _solve_compacted(batch, options, mesh, batch_axes, stats)
-    if options.first_cap is not None:
-        return _solve_adaptive(batch, options, mesh, batch_axes, stats)
-    return _solve_chunked(batch, options, mesh, batch_axes, stats)
+    caps, carry_iters = _round_plan(batch, options)
+    base = options.replace(compaction="off", first_cap=None)
+
+    sol: Optional[LPSolution] = None
+    iter_offset = 0
+    for cap in caps:
+        if sol is None:
+            idx = None  # round 0: the whole batch
+            sub = batch
+        else:
+            active = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
+            if active.size == 0:
+                break
+            idx = jnp.asarray(active)
+            sub = _gather_batch(batch, idx)
+        part = _dispatch_round(
+            sub, base.replace(max_iters=cap), mesh, batch_axes, stats
+        )
+        sol = (
+            part
+            if idx is None
+            else _scatter_solution(sol, idx, part, iter_offset=iter_offset)
+        )
+        if carry_iters:
+            iter_offset += cap
+    return sol
 
 
-def _solve_chunked(
+def _dispatch_round(
     batch: LPBatch,
     options: SolveOptions,
     mesh,
     batch_axes: Sequence[str],
     stats: Optional[SolveStats] = None,
 ) -> LPSolution:
+    """One dispatch round: pad, shard, chunk, overlap, solve, trim, record.
+
+    The only place in the pipeline that talks to a backend.  Splits the
+    (sub-)batch into ``options.chunk_size`` chunks and stages chunk k+1
+    to the device while chunk k solves — the paper's CUDA-streams
+    discipline (Sec. 4.4).
+    """
     axes = _resolve_axes(mesh, batch_axes)
     mesh_div = 1
     if mesh and axes:
@@ -255,111 +337,6 @@ def _solve_chunked(
     if true_bsz != bsz:
         sol = _trim_solution(sol, true_bsz)
     return sol
-
-
-def _solve_compacted(
-    batch: LPBatch,
-    options: SolveOptions,
-    mesh,
-    batch_axes: Sequence[str],
-    stats: Optional[SolveStats],
-) -> LPSolution:
-    """Convergence compaction: drop converged LPs between dispatch rounds.
-
-    A lockstep dispatch makes every LP pay the slowest LP's iteration
-    count.  Compaction caps each round, reads the status vector, gathers
-    the LPs that hit the cap (``ITER_LIMIT``) into a dense sub-batch,
-    re-dispatches only those, and scatters results back in input order:
-
-    * ``"chunked"`` — one capped pass over all chunks, then ONE dense
-      re-dispatch of the pooled stragglers at the full cap (bounded
-      re-work; the generalized form of the legacy two-pass solve).
-    * ``"every_k"`` — geometric rounds over the shrinking active set with
-      caps k, 2k, 4k, ... up to the full cap, so the easy majority stops
-      paying for the hard tail after the first round while re-solve work
-      stays within 2x of a single full solve.
-
-    Re-dispatched LPs are re-solved from scratch, so under the
-    deterministic pivot rules every LP follows the exact pivot trajectory
-    it would follow with ``compaction="off"`` — statuses, objectives,
-    primal points, and iteration counts are bit-identical.
-    """
-    base = options.replace(compaction="off", first_cap=None)
-    full_cap = _full_cap(batch, options)
-    cap = _round_cap(batch, options)
-
-    if options.compaction == "chunked":
-        sol = _solve_chunked(
-            batch, base.replace(max_iters=cap), mesh, batch_axes, stats
-        )
-        if cap >= full_cap:
-            return sol
-        unfinished = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
-        if unfinished.size == 0:
-            return sol
-        idx = jnp.asarray(unfinished)
-        part = _solve_chunked(
-            _gather_batch(batch, idx),
-            base.replace(max_iters=full_cap),
-            mesh,
-            batch_axes,
-            stats,
-        )
-        return _scatter_solution(sol, idx, part)
-
-    # "every_k": geometric rounds over the shrinking active set.
-    sol = _solve_chunked(batch, base.replace(max_iters=cap), mesh, batch_axes, stats)
-    while cap < full_cap:
-        active = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
-        if active.size == 0:
-            break
-        cap = min(2 * cap, full_cap)
-        idx = jnp.asarray(active)
-        part = _solve_chunked(
-            _gather_batch(batch, idx),
-            base.replace(max_iters=cap),
-            mesh,
-            batch_axes,
-            stats,
-        )
-        sol = _scatter_solution(sol, idx, part)
-    return sol
-
-
-def _solve_adaptive(
-    batch: LPBatch,
-    options: SolveOptions,
-    mesh,
-    batch_axes: Sequence[str],
-    stats: Optional[SolveStats] = None,
-) -> LPSolution:
-    """Two-pass lockstep solve: early-exit analogue for SIMD batching.
-
-    A CUDA block retires as soon as its LP converges; lockstep batching
-    instead drags every LP to the slowest one's iteration count.  Pass 1
-    caps iterations at ~2x the *median* need (first_cap, default 8*(m+n));
-    the few LPs hitting ITER_LIMIT are compacted into a small second batch
-    and re-solved with the full cap.  Bounded re-work, most of the batch
-    stops early — EXPERIMENTS.md §Perf-LP.  Kept for compatibility; the
-    ``compaction`` modes generalize it (note the historical difference:
-    this path *continues* counting iterations across passes, compaction
-    re-solves from scratch for bit-identical trajectories).
-    """
-    m, n = batch.m, batch.n
-    first_cap = options.first_cap or 8 * (m + n)
-    sol1 = _solve_chunked(
-        batch, options.replace(max_iters=first_cap), mesh, batch_axes, stats
-    )
-    status = np.asarray(sol1.status)
-    unfinished = np.nonzero(status == ITER_LIMIT)[0]
-    if unfinished.size == 0:
-        return sol1
-    idx = jnp.asarray(unfinished)
-    sub = _gather_batch(batch, idx)
-    sol2 = _solve_chunked(
-        sub, options.replace(first_cap=None), mesh, batch_axes, stats
-    )
-    return _scatter_solution(sol1, idx, sol2, iter_offset=first_cap)
 
 
 def solve_hyperbox(

@@ -1,0 +1,367 @@
+"""Layout-agnostic batched simplex iteration engine.
+
+One implementation of the paper's pivot machinery (Sec. 3.1, 4.2-4.3),
+shared by every accelerated backend.  ``core/simplex.py`` (XLA lockstep)
+and ``kernels/simplex_pallas.py`` (VMEM-resident Mosaic kernel) are thin
+drivers over the building blocks here; only the NumPy oracle
+(``core/oracle.py``) stays independent, as the trusted cross-check.
+
+Every function is pure ``jax.numpy`` over batched tableaus and is
+formulated with ``broadcasted_iota`` + masked reductions — no scatters
+or 1-D iota — so the SAME code lowers cleanly both through XLA and
+through Mosaic inside a Pallas kernel body.  The only single-element
+extractions (pivot column, pivot row, basic costs) go through helpers
+taking a static ``gather`` flag: ``gather=True`` uses
+``take_along_axis`` (cheap under XLA — the XLA driver's choice),
+``gather=False`` a one-hot multiply-reduction (the only form Mosaic
+lowers — the Pallas kernel's choice).  Both forms extract the SAME
+value exactly (a one-hot sum has a single non-zero term), so the XLA
+and Pallas drivers agree bit-for-bit on pivot trajectories either way.
+
+Tableau conventions (see ``core/lp.py:build_tableau``): shape
+``(B, M1, Q)`` with ``M1 >= m + 1`` and ``Q >= q = 1 + n + 2m``; row
+``m`` is the objective row, column 0 the RHS/bound column.  Padding rows
+and columns (Pallas lane/sublane alignment) must be zero — every block
+below preserves that invariant, because a zero pivot-column entry leaves
+its row unchanged and padded columns are never eligible to enter.
+
+Pivot rules
+-----------
+``"lpc"``  largest positive coefficient (Dantzig; the paper's default).
+``"rpc"``  random positive coefficient (the paper's Sec. 5 ablation) —
+           a uniform choice among the eligible positive columns, driven
+           by the stateless counter hash :func:`rpc_noise` so the rule
+           runs identically under XLA and Mosaic.
+``"bland"`` Bland's smallest-index anti-cycling rule (beyond paper).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .lp import INFEASIBLE, OPTIMAL, RUNNING
+
+LPC = "lpc"
+RPC = "rpc"
+BLAND = "bland"
+
+#: Valid pivot rules, in paper order (lpc is the default everywhere).
+RULES = (LPC, RPC, BLAND)
+
+#: The paper's INT_MAX trick: masked-out ratios take this value so the
+#: min-reduction stays branch-free; ``min_ratio >= BIG / 2`` <=> unbounded.
+BIG = 1e30
+
+
+def default_tolerance(dtype) -> float:
+    """The library-wide reduced-cost/pivot tolerance for a tableau dtype."""
+    return 1e-9 if dtype == jnp.float64 else 1e-5
+
+
+def phase1_feasibility_tol(b: jnp.ndarray) -> jnp.ndarray:
+    """Per-LP threshold under which the phase-I optimum counts as feasible.
+
+    ``b``: (B, m) raw bounds.  Returns (B,) — ``1e-5 * max(1, max|b|)``,
+    the scale-aware test both accelerated drivers apply to the phase-I
+    objective value (``-z0``) when deciding feasible vs infeasible.
+    """
+    return 1e-5 * jnp.maximum(1.0, jnp.max(jnp.abs(b), axis=-1))
+
+
+def column_ids(q: int) -> jnp.ndarray:
+    """(1, q) int32 column indices (2-D iota — the Mosaic-safe form)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, q), 1)
+
+
+def eligible_mask(q_total: int, m: int, n: int) -> jnp.ndarray:
+    """(1, q_total) bool — columns allowed to enter the basis.
+
+    Column 0 (the RHS), the artificial block, and any lane padding beyond
+    the true ``q`` are never eligible; only originals and slacks are.
+    """
+    ids = column_ids(q_total)
+    return (ids >= 1) & (ids < 1 + n + m)
+
+
+# ---------------------------------------------------------------------------
+# RPC noise: stateless counter-based hash (SplitMix-style finalizer)
+# ---------------------------------------------------------------------------
+
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit avalanche finalizer (lowbias32): uint32 -> well-mixed uint32."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def rpc_noise(seed, step, row_offset, bsz: int, q: int, dtype) -> jnp.ndarray:
+    """(bsz, q) uniform noise in ``dtype`` for the RPC rule, counter-based.
+
+    Keyed on (seed, iteration step, global LP row, column) so the draw is
+    stateless — no PRNG key threading — and identical regardless of how
+    the batch is tiled (``row_offset`` is the driver's global row base,
+    e.g. ``program_id * tile_b`` in the Pallas kernel).  Pure uint32
+    shift/xor/multiply arithmetic, which lowers under both XLA and
+    Mosaic; the float conversion happens in the objective-row ``dtype``
+    (fixing the old float32-only Gumbel draw).
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bsz, q), 0).astype(jnp.uint32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bsz, q), 1).astype(jnp.uint32)
+    rows = rows + jnp.asarray(row_offset).astype(jnp.uint32)
+    key = jnp.asarray(seed).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    ctr = jnp.asarray(step).astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+    x = _mix32(rows * jnp.uint32(0xC2B2AE35) ^ cols ^ key ^ ctr)
+    # Top 24 bits -> uniform in [0, 1); exact in float32 and float64.
+    return (x >> jnp.uint32(8)).astype(dtype) * jnp.asarray(1.0 / (1 << 24), dtype)
+
+
+# ---------------------------------------------------------------------------
+# single-element extraction: gather (XLA) vs one-hot reduce (Mosaic)
+# ---------------------------------------------------------------------------
+#
+# Both forms produce bit-identical values (a one-hot sum has exactly one
+# non-zero term); the flag only selects the formulation the target
+# compiler handles well.  ``gather`` must be static.
+
+
+def take_col(mat: jnp.ndarray, j: jnp.ndarray, gather: bool) -> jnp.ndarray:
+    """Column ``j`` per batch element: (B, R, Q), (B,) -> (B, R)."""
+    if gather:
+        return jnp.take_along_axis(mat, j[:, None, None], axis=-1)[..., 0]
+    oh = column_ids(mat.shape[-1]) == j[:, None]
+    return jnp.sum(jnp.where(oh[:, None, :], mat, 0.0), axis=-1)
+
+
+def take_row(mat: jnp.ndarray, i: jnp.ndarray, gather: bool) -> jnp.ndarray:
+    """Row ``i`` per batch element: (B, R, Q), (B,) -> (B, Q)."""
+    if gather:
+        return jnp.take_along_axis(mat, i[:, None, None], axis=1)[:, 0, :]
+    oh = jax.lax.broadcasted_iota(jnp.int32, (1, mat.shape[1]), 1) == i[:, None]
+    return jnp.sum(jnp.where(oh[:, :, None], mat, 0.0), axis=1)
+
+
+def take_elem(vec: jnp.ndarray, i: jnp.ndarray, gather: bool) -> jnp.ndarray:
+    """Element ``i`` per batch element: (B, K), (B,) -> (B,)."""
+    if gather:
+        return jnp.take_along_axis(vec, i[:, None], axis=-1)[:, 0]
+    oh = jax.lax.broadcasted_iota(jnp.int32, (1, vec.shape[1]), 1) == i[:, None]
+    return jnp.sum(jnp.where(oh, vec, 0.0), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# iteration building blocks
+# ---------------------------------------------------------------------------
+
+
+def select_entering(
+    obj: jnp.ndarray,
+    elig: jnp.ndarray,
+    rule: str,
+    tol: float,
+    noise: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pick the entering column per LP under the given pivot rule.
+
+    Parameters
+    ----------
+    obj : (B, Q) objective row (reduced costs).
+    elig : (1, Q) or (B, Q) bool eligibility mask (:func:`eligible_mask`).
+    rule : ``"lpc"`` | ``"rpc"`` | ``"bland"`` (static).
+    tol : reduced-cost tolerance (static).
+    noise : (B, Q) uniform noise, required for ``"rpc"`` only
+        (:func:`rpc_noise`).
+
+    Returns
+    -------
+    e : (B,) int32 entering column index.
+    max_c : (B,) the LARGEST eligible reduced cost (not necessarily at
+        ``e`` for rpc/bland) — the optimality certificate:
+        ``max_c <= tol`` means no improving column exists under ANY rule.
+    """
+    cand = jnp.where(elig, obj, -BIG)
+    max_c = jnp.max(cand, axis=-1)
+    if rule == LPC:
+        e = jnp.argmax(cand, axis=-1).astype(jnp.int32)
+    elif rule == BLAND:
+        pos = elig & (obj > tol)
+        # argmax over bool returns the FIRST True -> smallest-index rule.
+        e = jnp.argmax(pos, axis=-1).astype(jnp.int32)
+    elif rule == RPC:
+        if noise is None:
+            raise ValueError("rpc rule needs a noise array (engine.rpc_noise)")
+        pos = elig & (obj > tol)
+        e = jnp.argmax(jnp.where(pos, noise, -BIG), axis=-1).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown pivot rule {rule!r}; expected one of {RULES}")
+    return e, max_c
+
+
+def phase2_objective(
+    tab: jnp.ndarray,
+    basis: jnp.ndarray,
+    c_ext: jnp.ndarray,
+    m: int,
+    gather: bool = False,
+) -> jnp.ndarray:
+    """The phase-II objective row for the current basis: ``c_ext - c_B . rows``.
+
+    ``c_ext``: (B, Q) phase-II costs (zeros except columns 1..n).  Column
+    0 of the result holds ``-c_B . b = -z0`` (the ``-z0`` convention).
+    The pricing contraction is a ``dot_general`` with
+    ``preferred_element_type`` pinned to the tableau dtype so XLA and
+    Mosaic accumulate identically.
+    """
+    if gather:
+        cb = jnp.take_along_axis(c_ext, basis, axis=-1)  # (B, m)
+    else:
+        qp = tab.shape[-1]
+        basis_oh = basis[:, :, None] == column_ids(qp)[None, :, :]  # (B, m, Q)
+        cb = jnp.sum(jnp.where(basis_oh, c_ext[:, None, :], 0.0), axis=-1)
+    priced = jax.lax.dot_general(
+        cb[:, None, :],
+        tab[:, :m, :],
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=tab.dtype,
+    )[:, 0, :]  # (B, Q)
+    return c_ext - priced
+
+
+def phase_transition(
+    tab: jnp.ndarray,
+    basis: jnp.ndarray,
+    phase: jnp.ndarray,
+    status: jnp.ndarray,
+    at_opt: jnp.ndarray,
+    c_ext: jnp.ndarray,
+    feas_tol: jnp.ndarray,
+    m: int,
+    gather: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Branch-free optimum bookkeeping: finish phase II, enter phase II.
+
+    For LPs at a phase-I optimum: feasible ones (``-z0 <= feas_tol``)
+    get their objective row rewritten in place via
+    :func:`phase2_objective` and continue into phase II (the paper does
+    this with a host round-trip between two kernel launches; here it is
+    a masked in-loop rewrite); infeasible ones terminate INFEASIBLE.
+    LPs at a phase-II optimum terminate OPTIMAL.
+
+    Returns the updated ``(tab, phase, status)``.
+    """
+    active = status == RUNNING
+    p1_done = active & at_opt & (phase == 1)
+    feasible = tab[:, m, 0] <= feas_tol
+    to_phase2 = p1_done & feasible
+    status = jnp.where(p1_done & ~feasible, INFEASIBLE, status)
+    status = jnp.where(active & at_opt & (phase == 2), OPTIMAL, status)
+    new_obj = phase2_objective(tab, basis, c_ext, m, gather)
+    tab = tab.at[:, m, :].set(jnp.where(to_phase2[:, None], new_obj, tab[:, m, :]))
+    phase = jnp.where(to_phase2, 2, phase)
+    return tab, phase, status
+
+
+def ratio_test(
+    tab: jnp.ndarray,
+    basis: jnp.ndarray,
+    e: jnp.ndarray,
+    m: int,
+    n: int,
+    tol: float,
+    gather: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Min-ratio leaving-row selection, branch-free (the INT_MAX trick).
+
+    Ratios with a non-positive pivot-column entry are replaced by
+    :data:`BIG` before the min-reduction; ``min_ratio >= BIG / 2`` then
+    certifies unboundedness.
+
+    Degenerate-artificial escape: after phase I a basic artificial can
+    sit at value 0 on a degenerate row.  A pivot whose column entry is
+    NEGATIVE there would make the artificial GROW — silently leaving the
+    feasible region.  Such rows are forced out at ratio 0 (``zero_art``):
+    a valid degenerate pivot on the negative element, since the RHS is 0.
+
+    Returns
+    -------
+    l : (B,) int32 leaving row.
+    min_ratio : (B,) the winning ratio (``>= BIG/2`` <=> unbounded).
+    full_col : (B, M1) the full entering column incl. the objective row —
+        reused by :func:`pivot_update`.
+    """
+    full_col = take_col(tab, e, gather)  # (B, M1)
+    col = full_col[:, :m]
+    rhs = tab[:, :m, 0]
+    ratios = jnp.where(col > tol, rhs / jnp.where(col > tol, col, 1.0), BIG)
+    zero_art = (basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
+    ratios = jnp.where(zero_art, 0.0, ratios)
+    l = jnp.argmin(ratios, axis=-1).astype(jnp.int32)
+    min_ratio = jnp.min(ratios, axis=-1)
+    return l, min_ratio, full_col
+
+
+def pivot_update(
+    tab: jnp.ndarray,
+    basis: jnp.ndarray,
+    e: jnp.ndarray,
+    l: jnp.ndarray,
+    full_col: jnp.ndarray,
+    do_pivot: jnp.ndarray,
+    m: int,
+    tol: float,
+    gather: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked rank-1 Gauss-Jordan step around pivot ``(l, e)``.
+
+    ``tab[l] /= tab[l, e]``; every other row subtracts its pivot-column
+    multiple of the normalized row.  LPs with ``do_pivot`` False keep
+    their tableau and basis unchanged (lockstep masking).  Zero padding
+    rows/columns are preserved: their pivot-column entry is 0.
+    ``full_col`` comes from :func:`ratio_test`; the pivot element is read
+    out of it (``full_col[l] == tab[l, e]`` exactly) rather than
+    re-extracted from the tableau.
+    """
+    m1p = tab.shape[1]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    l_oh_rows = row_ids == l[:, None]  # (B, m)
+    pr = take_row(tab[:, :m, :], l, gather)  # (B, Q)
+    pe = take_elem(full_col[:, :m], l, gather)  # (B,)
+    npr = pr / jnp.where(jnp.abs(pe) > tol, pe, 1.0)[:, None]
+    updated = tab - full_col[:, :, None] * npr[:, None, :]
+    row_ids_full = jax.lax.broadcasted_iota(jnp.int32, (1, m1p), 1)
+    l_row_sel = (row_ids_full == l[:, None])[:, :, None]  # (B, M1, 1)
+    updated = jnp.where(l_row_sel, npr[:, None, :], updated)
+    tab = jnp.where(do_pivot[:, None, None], updated, tab)
+    basis = jnp.where(do_pivot[:, None] & l_oh_rows, e[:, None], basis)
+    return tab, basis
+
+
+def extract_solution(
+    tab: jnp.ndarray,
+    basis: jnp.ndarray,
+    status: jnp.ndarray,
+    m: int,
+    n_out: int,
+    fill: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Objective value and primal point from a terminal tableau.
+
+    ``objective = -tab[:, m, 0]`` where OPTIMAL, else ``fill`` (the XLA
+    driver uses ``-inf``; the Pallas kernel uses a finite sentinel and
+    re-masks outside).  ``x``: (B, n_out) one-hot scatter of the RHS into
+    the original-variable slots (basis column ``j+1`` <-> ``x_j``);
+    non-optimal LPs report 0.
+    """
+    objective = jnp.where(status == OPTIMAL, -tab[:, m, 0], fill)
+    rhs = tab[:, :m, 0]  # (B, m)
+    var_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_out), 2)
+    hit = basis[:, :, None] == var_ids + 1
+    x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)  # (B, n_out)
+    x = jnp.where((status == OPTIMAL)[:, None], x, 0.0)
+    return objective, x

@@ -49,8 +49,10 @@ def _run_simplex(
         # silently leave the feasible region.  Force such rows to leave at
         # ratio 0 (a degenerate pivot on the negative element is valid:
         # rhs is 0, so feasibility is preserved and the artificial exits).
-        zero_art = (basis >= art_start) & (tab[:m, 0] <= _TOL) & (col < -_TOL)
-        ratios = np.where(zero_art, 0.0, ratios)
+        # Same escape as core/engine.py:ratio_test, implemented separately
+        # on purpose — the oracle stays an independent cross-check.
+        stuck_artificial = (basis >= art_start) & (tab[:m, 0] <= _TOL) & (col < -_TOL)
+        ratios = np.where(stuck_artificial, 0.0, ratios)
         l = int(np.argmin(ratios))
         if ratios[l] >= _BIG / 2:
             return UNBOUNDED, it

@@ -30,7 +30,7 @@ import numpy as np
 import scipy.linalg
 
 from .backends import SolveOptions, SolveStats
-from .support import Box, Polytope, box_to_polytope, template_directions
+from .support import Box, box_to_polytope, template_directions
 
 
 @dataclasses.dataclass(frozen=True)

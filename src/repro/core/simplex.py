@@ -8,18 +8,13 @@ tableau operations vectorized over the batch dimension (which lands on VPU
 lanes).  Finished LPs are masked inactive; the loop exits when every LP has
 terminated or the iteration cap is hit.
 
-Faithfulness notes
-------------------
-* Pivot rules: LPC (largest positive coefficient — paper default), RPC
-  (random positive coefficient — paper's ablation), plus Bland's rule
-  (anti-cycling; beyond paper).
-* Min-ratio masking: ratios that are negative/undefined are replaced by a
-  large constant before the min-reduction — the paper's INT_MAX trick to
-  keep the reduction branch-free (warp divergence there, predication here).
-* Two-phase: the paper launches two kernels with a host round-trip between
-  phases.  Here both phases live in ONE while_loop: when an LP reaches
-  phase-I optimality the objective row is rewritten in place (branch-free,
-  masked) and the LP continues into phase II — a beyond-paper improvement.
+This module is a thin DRIVER: the pivot machinery itself — entering-column
+selection for every rule, the min-ratio test with the degenerate-artificial
+escape, the in-loop phase transition, the rank-1 pivot update, and solution
+extraction — lives once in ``core/engine.py``, shared verbatim with the
+Pallas kernel (``kernels/simplex_pallas.py``).  The loop here only owns
+what is XLA-specific: the ``while_loop`` scaffolding, the unroll knob, and
+status/iteration bookkeeping.
 """
 
 from __future__ import annotations
@@ -30,13 +25,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .lp import INFEASIBLE, ITER_LIMIT, LPBatch, LPSolution, OPTIMAL, RUNNING, UNBOUNDED, auto_cap, build_tableau
-
-LPC = "lpc"
-RPC = "rpc"
-BLAND = "bland"
-
-_BIG = 1e30
+from . import engine
+from .engine import BLAND, LPC, RPC  # noqa: F401  (re-exported API)
+from .lp import ITER_LIMIT, LPBatch, LPSolution, RUNNING, UNBOUNDED, auto_cap, build_tableau
 
 
 class _State(NamedTuple):
@@ -46,43 +37,6 @@ class _State(NamedTuple):
     status: jnp.ndarray  # (B,) int32
     iters: jnp.ndarray  # (B,) int32
     step: jnp.ndarray  # () int32
-    key: jnp.ndarray  # PRNG key (RPC rule)
-
-
-def _tolerances(dtype) -> float:
-    return 1e-9 if dtype == jnp.float64 else 1e-5
-
-
-def _select_entering(obj, elig, rule, key):
-    """Pick the entering column per LP. obj: (B, q), elig: (q,) bool."""
-    if rule == LPC:
-        cand = jnp.where(elig[None, :], obj, -jnp.inf)
-        e = jnp.argmax(cand, axis=-1)
-    elif rule == BLAND:
-        tol = _tolerances(obj.dtype)
-        pos = elig[None, :] & (obj > tol)
-        # argmax over bool returns the FIRST True -> smallest index rule.
-        e = jnp.argmax(pos, axis=-1)
-        cand = jnp.where(elig[None, :], obj, -jnp.inf)
-    elif rule == RPC:
-        tol = _tolerances(obj.dtype)
-        pos = elig[None, :] & (obj > tol)
-        g = jax.random.gumbel(key, obj.shape, dtype=jnp.float32)
-        e = jnp.argmax(jnp.where(pos, g, -jnp.inf), axis=-1)
-        cand = jnp.where(elig[None, :], obj, -jnp.inf)
-    else:
-        raise ValueError(f"unknown pivot rule {rule!r}")
-    max_c = jnp.take_along_axis(cand, e[:, None], axis=-1)[:, 0]
-    return e, max_c
-
-
-def _phase2_objective(tab, basis, c_ext):
-    """Rewrite the objective row for phase II: c_ext - c_B . rows."""
-    m = tab.shape[1] - 1
-    cb = jnp.take_along_axis(c_ext, basis, axis=-1)  # (B, m)
-    priced = jnp.einsum("bm,bmq->bq", cb, tab[:, :m, :])
-    new_obj = c_ext - priced  # col 0: 0 - c_B.b = -z0 (the -z0 convention)
-    return new_obj
 
 
 @functools.partial(
@@ -106,6 +60,7 @@ def solve_batched(
       rule: "lpc" | "rpc" | "bland".
       max_iters: simplex iteration cap across both phases
         (default 50*(m+n), matching the oracle).
+      seed: RPC-rule noise seed (ignored by the deterministic rules).
       unroll: while_loop body unroll factor (perf knob).
       tol: reduced-cost/pivot tolerance (0 = dtype default).
       basis0: optional (B, m) warm-start basis; feasible rows skip
@@ -119,77 +74,46 @@ def solve_batched(
         max_iters = auto_cap(m, n)
     dtype = a.dtype
     if tol <= 0.0:
-        tol = _tolerances(dtype)
+        tol = engine.default_tolerance(dtype)
 
     tab, basis, phase = build_tableau(a, b, c, basis0)
     q = tab.shape[-1]
 
-    elig = jnp.zeros((q,), bool).at[1 : 1 + n + m].set(True)
+    elig = engine.eligible_mask(q, m, n)
     c_ext = jnp.zeros((bsz, q), dtype).at[:, 1 : 1 + n].set(c)
-    b_scale = jnp.maximum(1.0, jnp.max(jnp.abs(b), axis=-1))  # (B,)
+    feas_tol = engine.phase1_feasibility_tol(b)  # (B,)
 
     def cond(s: _State):
         return (s.step < max_iters) & jnp.any(s.status == RUNNING)
 
     def body(s: _State):
-        key, sub = jax.random.split(s.key)
         active = s.status == RUNNING
-
-        obj = s.tab[:, m, :]
-        e, max_c = _select_entering(obj, elig, rule, sub)
-
+        noise = (
+            engine.rpc_noise(seed, s.step, 0, bsz, q, dtype)
+            if rule == RPC
+            else None
+        )
+        e, max_c = engine.select_entering(s.tab[:, m, :], elig, rule, tol, noise)
         at_opt = max_c <= tol
 
-        # --- phase bookkeeping on LPs that reached an optimum ------------
-        p1_done = active & at_opt & (s.phase == 1)
-        feasible = s.tab[:, m, 0] <= 1e-5 * b_scale  # -z0 of phase I ~ 0
-        becomes_infeasible = p1_done & ~feasible
-        to_phase2 = p1_done & feasible
-        p2_done = active & at_opt & (s.phase == 2)
-
-        new_obj_row = _phase2_objective(s.tab, s.basis, c_ext)
-        tab = s.tab.at[:, m, :].set(
-            jnp.where(to_phase2[:, None], new_obj_row, s.tab[:, m, :])
+        tab, phase, status = engine.phase_transition(
+            s.tab, s.basis, s.phase, s.status, at_opt, c_ext, feas_tol, m,
+            gather=True,
         )
-        phase = jnp.where(to_phase2, 2, s.phase)
-        status = jnp.where(p2_done, OPTIMAL, s.status)
-        status = jnp.where(becomes_infeasible, INFEASIBLE, status)
 
-        # --- pivot for LPs still running and not at an optimum -----------
         pivoting = active & ~at_opt
-        bidx = jnp.arange(bsz)
-        col = jnp.take_along_axis(tab[:, :m, :], e[:, None, None], axis=-1)[..., 0]
-        rhs = tab[:, :m, 0]
-        ratios = jnp.where(col > tol, rhs / jnp.maximum(col, tol), _BIG)
-        # A basic artificial sits at 0 on degenerate rows after phase I; a
-        # pivot with a negative coefficient there would make it GROW (leave
-        # the feasible region unnoticed).  Force such rows out at ratio 0 —
-        # a valid degenerate pivot on the negative element (rhs is 0).
-        zero_art = (
-            (s.basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
+        l, min_ratio, full_col = engine.ratio_test(
+            tab, s.basis, e, m, n, tol, gather=True
         )
-        ratios = jnp.where(zero_art, 0.0, ratios)
-        l = jnp.argmin(ratios, axis=-1)
-        min_ratio = jnp.take_along_axis(ratios, l[:, None], axis=-1)[:, 0]
-        unbounded = pivoting & (min_ratio >= _BIG / 2)
+        unbounded = pivoting & (min_ratio >= engine.BIG / 2)
         status = jnp.where(unbounded, UNBOUNDED, status)
         do_pivot = pivoting & ~unbounded
 
-        pr = jnp.take_along_axis(tab, l[:, None, None], axis=1)[:, 0, :]  # (B, q)
-        pe = jnp.take_along_axis(pr, e[:, None], axis=-1)  # (B, 1)
-        npr = pr / jnp.where(jnp.abs(pe) > tol, pe, 1.0)
-        full_col = jnp.take_along_axis(tab, e[:, None, None], axis=-1)[..., 0]  # (B, m+1)
-        updated = tab - full_col[:, :, None] * npr[:, None, :]
-        row_sel = (jnp.arange(m + 1)[None, :] == l[:, None])[:, :, None]
-        updated = jnp.where(row_sel, npr[:, None, :], updated)
-        tab = jnp.where(do_pivot[:, None, None], updated, tab)
-        basis = jnp.where(
-            do_pivot[:, None] & (jnp.arange(m)[None, :] == l[:, None]),
-            e[:, None].astype(jnp.int32),
-            s.basis,
+        tab, basis = engine.pivot_update(
+            tab, s.basis, e, l, full_col, do_pivot, m, tol, gather=True
         )
         iters = s.iters + do_pivot.astype(jnp.int32)
-        return _State(tab, basis, phase, status, iters, s.step + 1, key)
+        return _State(tab, basis, phase, status, iters, s.step + 1)
 
     init = _State(
         tab=tab,
@@ -198,7 +122,6 @@ def solve_batched(
         status=jnp.full((bsz,), RUNNING, jnp.int32),
         iters=jnp.zeros((bsz,), jnp.int32),
         step=jnp.asarray(0, jnp.int32),
-        key=jax.random.PRNGKey(seed),
     )
     if unroll > 1:
         # while_loop has no unroll knob; do it manually. Each inner body is
@@ -213,15 +136,9 @@ def solve_batched(
     final = jax.lax.while_loop(cond, body, init)
 
     status = jnp.where(final.status == RUNNING, ITER_LIMIT, final.status)
-    # Extract objective and primal point.
-    objective = jnp.where(status == OPTIMAL, -final.tab[:, m, 0], -jnp.inf)
-    rhs = final.tab[:, :m, 0]  # (B, m)
-    is_var = (final.basis >= 1) & (final.basis <= n)
-    var_idx = jnp.clip(final.basis - 1, 0, n - 1)
-    contrib = jnp.where(is_var, rhs, 0.0)
-    x = jnp.zeros((bsz, n), dtype)
-    x = x.at[jnp.arange(bsz)[:, None], var_idx].add(contrib)
-    x = jnp.where((status == OPTIMAL)[:, None], x, 0.0)
+    objective, x = engine.extract_solution(
+        final.tab, final.basis, status, m, n, fill=-jnp.inf
+    )
     return LPSolution(
         objective=objective,
         x=x,

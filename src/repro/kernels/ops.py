@@ -10,8 +10,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ..core import engine
 from ..core.lp import LPSolution, auto_cap, build_tableau, num_cols
 from .hyperbox_pallas import hyperbox_pallas
 from .simplex_pallas import simplex_pallas
@@ -26,13 +26,16 @@ def _round_up(x: int, mult: int) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("max_iters", "tile_b", "interpret")
+    jax.jit, static_argnames=("rule", "max_iters", "seed", "tol", "tile_b", "interpret")
 )
 def simplex_solve(
     a: jnp.ndarray,
     b: jnp.ndarray,
     c: jnp.ndarray,
+    rule: str = engine.LPC,
     max_iters: int = 0,
+    seed: int = 0,
+    tol: float = 0.0,
     tile_b: int = 8,
     interpret: bool | None = None,
     basis0: jnp.ndarray | None = None,
@@ -41,10 +44,14 @@ def simplex_solve(
 
     a: (B, m, n), b: (B, m), c: (B, n); returns LPSolution like the core
     solver.  Batch is padded to a tile multiple; tableau columns pad to the
-    128-lane boundary; rows pad to the 8-sublane boundary.  ``basis0`` is
-    an optional (B, m) warm-start basis — handled host-of-kernel in
-    ``build_tableau``, so warm rows enter the kernel already in phase II;
-    the final basis comes back in ``LPSolution.basis`` for reuse.
+    128-lane boundary; rows pad to the 8-sublane boundary.  ``rule`` is any
+    of ``core.engine.RULES`` ("lpc" | "rpc" | "bland"), ``seed`` drives the
+    RPC noise, and ``tol`` is the reduced-cost/pivot tolerance (0 = dtype
+    default) — the same knobs, honored identically, as the XLA lockstep
+    path, since both drive ``core/engine.py``.  ``basis0`` is an optional
+    (B, m) warm-start basis — handled host-of-kernel in ``build_tableau``,
+    so warm rows enter the kernel already in phase II; the final basis
+    comes back in ``LPSolution.basis`` for reuse.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -53,6 +60,8 @@ def simplex_solve(
         max_iters = auto_cap(m, n)
     q = num_cols(m, n)
     dtype = a.dtype
+    if tol <= 0.0:
+        tol = engine.default_tolerance(dtype)
 
     tab, basis, phase = build_tableau(a, b, c, basis0)
 
@@ -70,19 +79,23 @@ def simplex_solve(
     # Padded batch entries: trivially optimal empty LPs (phase 2, zero obj).
     phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(phase)
     c_ext = jnp.zeros((bp, qp), dtype).at[:bsz, 1 : 1 + n].set(c)
+    feas = engine.phase1_feasibility_tol(b).astype(dtype)
+    feas_p = jnp.ones((bp,), dtype).at[:bsz].set(feas)
 
     obj, x, status, iters, basis_out = simplex_pallas(
         tab_p,
         basis_p,
         phase_p,
         c_ext,
+        feas_p,
         m=m,
         n=n,
-        q=q,
         n_padded=np_pad,
         max_iters=max_iters,
+        rule=rule,
+        seed=seed,
         tile_b=tile_b,
-        tol=1e-9 if dtype == jnp.float64 else 1e-5,
+        tol=tol,
         interpret=interpret,
     )
     neg_inf = jnp.asarray(-jnp.inf, dtype)

@@ -13,10 +13,13 @@ Layout: (TB, m+1, q_padded) per block with q padded to the 128-lane
 boundary — the batch dim is the paper's "column-major" axis reborn: every
 element-wise tableau op is contiguous across lanes.
 
-All per-LP control flow (pivot choice, phase switch, termination) is
-branch-free and masked, mirroring the paper's INT_MAX trick for the
-min-ratio reduction; gathers are expressed as one-hot multiply-reductions,
-which lower to VPU-friendly selects on Mosaic.
+The iteration math itself — entering-column selection (all three pivot
+rules), the min-ratio test with the degenerate-artificial escape, the
+in-loop phase transition, and the rank-1 pivot — is NOT implemented here:
+the kernel body drives ``core/engine.py``, the same building blocks the
+XLA lockstep path uses.  The engine is written in broadcasted-iota +
+one-hot form, which lowers to VPU-friendly selects under Mosaic, so the
+kernel and the XLA path agree bit-for-bit under deterministic rules.
 """
 
 from __future__ import annotations
@@ -27,9 +30,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.lp import INFEASIBLE, ITER_LIMIT, OPTIMAL, RUNNING, UNBOUNDED
+from ..core import engine
+from ..core.lp import ITER_LIMIT, RUNNING, UNBOUNDED
 
-_BIG = 1e30
+_BIG = engine.BIG
 
 
 def _kernel(
@@ -37,6 +41,7 @@ def _kernel(
     basis_ref,  # (TB, Mp) i32 VMEM
     phase_ref,  # (TB,) i32 VMEM
     cext_ref,  # (TB, Qp) f32 VMEM — phase-II costs
+    feas_ref,  # (TB,) f32 VMEM — per-LP phase-I feasibility threshold
     obj_ref,  # out (TB,) f32
     x_ref,  # out (TB, Np) f32
     status_ref,  # out (TB,) i32
@@ -45,7 +50,8 @@ def _kernel(
     *,
     m: int,
     n: int,
-    q: int,
+    rule: str,
+    seed: int,
     max_iters: int,
     tol: float,
 ):
@@ -56,81 +62,41 @@ def _kernel(
     basis = basis_ref[...][:, :m]
     phase = phase_ref[...]
     c_ext = cext_ref[...]
+    feas_tol = feas_ref[...]
+    dtype = tab.dtype
 
-    col_ids = jax.lax.broadcasted_iota(jnp.int32, (1, qp), 1)  # (1, Qp)
-    row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)  # (1, m)
-    elig = (col_ids >= 1) & (col_ids < 1 + n + m)  # (1, Qp) — b/artificial cols never enter
-
-    b_scale = jnp.maximum(1.0, jnp.max(tab[:, :m, 0], axis=-1))  # (TB,)
-    feas_tol = 1e-5 * b_scale
+    elig = engine.eligible_mask(qp, m, n)  # padded lanes never enter
+    # Global row base of this tile: keys the RPC noise so the draw is
+    # independent of the tiling (and bitwise-equal to the XLA driver's).
+    row0 = pl.program_id(0) * tb
 
     def body(state):
         tab, basis, phase, status, iters, step = state
         active = status == RUNNING
 
-        obj_row = tab[:, m, :]  # (TB, Qp)
-        cand = jnp.where(elig, obj_row, -_BIG)
-        e = jnp.argmax(cand, axis=-1).astype(jnp.int32)  # (TB,)
-        max_c = jnp.max(cand, axis=-1)
+        noise = (
+            engine.rpc_noise(seed, step, row0, tb, qp, dtype)
+            if rule == engine.RPC
+            else None
+        )
+        e, max_c = engine.select_entering(tab[:, m, :], elig, rule, tol, noise)
         at_opt = max_c <= tol
 
-        # ---- phase bookkeeping (branch-free) -----------------------------
-        p1_done = active & at_opt & (phase == 1)
-        feasible = tab[:, m, 0] <= feas_tol
-        to_phase2 = p1_done & feasible
-        status = jnp.where(p1_done & ~feasible, INFEASIBLE, status)
-        status = jnp.where(active & at_opt & (phase == 2), OPTIMAL, status)
-
-        # Phase-II objective rewrite: cb = c_ext[basis] via one-hot reduce.
-        basis_oh = (
-            basis[:, :, None] == col_ids[None, :, :]
-        )  # (TB, m, Qp) bool
-        cb = jnp.sum(jnp.where(basis_oh, c_ext[:, None, :], 0.0), axis=-1)  # (TB, m)
-        priced = jax.lax.dot_general(
-            cb[:, None, :],
-            tab[:, :m, :],
-            (((2,), (1,)), ((0,), (0,))),
-            preferred_element_type=jnp.float32,
-        )[:, 0, :]  # (TB, Qp)
-        new_obj = c_ext - priced
-        tab = tab.at[:, m, :].set(
-            jnp.where(to_phase2[:, None], new_obj, tab[:, m, :])
+        tab, phase, status = engine.phase_transition(
+            tab, basis, phase, status, at_opt, c_ext, feas_tol, m,
+            gather=False,  # Mosaic: one-hot reductions only
         )
-        phase = jnp.where(to_phase2, 2, phase)
 
-        # ---- pivot selection ---------------------------------------------
         pivoting = active & ~at_opt
-        e_oh = col_ids == e[:, None]  # (TB, Qp)
-        full_col = jnp.sum(jnp.where(e_oh[:, None, :], tab, 0.0), axis=-1)  # (TB, M1p)
-        col = full_col[:, :m]
-        rhs = tab[:, :m, 0]
-        ratios = jnp.where(col > tol, rhs / jnp.where(col > tol, col, 1.0), _BIG)
-        # Basic artificials at 0 (degenerate rows after phase I) must leave
-        # at ratio 0 when the entering column is negative there — otherwise
-        # the pivot grows the artificial and exits the feasible region.
-        zero_art = (basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
-        ratios = jnp.where(zero_art, 0.0, ratios)
-        l = jnp.argmin(ratios, axis=-1).astype(jnp.int32)  # (TB,)
-        min_ratio = jnp.min(ratios, axis=-1)
+        l, min_ratio, full_col = engine.ratio_test(
+            tab, basis, e, m, n, tol, gather=False
+        )
         unbounded = pivoting & (min_ratio >= _BIG / 2)
         status = jnp.where(unbounded, UNBOUNDED, status)
         do_pivot = pivoting & ~unbounded
 
-        # ---- rank-1 pivot update ------------------------------------------
-        l_oh_rows = row_ids == l[:, None]  # (TB, m)
-        pr = jnp.sum(
-            jnp.where(l_oh_rows[:, :, None], tab[:, :m, :], 0.0), axis=1
-        )  # (TB, Qp)
-        pe = jnp.sum(jnp.where(e_oh, pr, 0.0), axis=-1)  # (TB,)
-        npr = pr / jnp.where(jnp.abs(pe) > tol, pe, 1.0)[:, None]
-        updated = tab - full_col[:, :, None] * npr[:, None, :]
-        m1p = tab.shape[1]
-        row_ids_full = jax.lax.broadcasted_iota(jnp.int32, (1, m1p), 1)
-        l_row_sel = (row_ids_full == l[:, None])[:, :, None]  # (TB, M1p, 1)
-        updated = jnp.where(l_row_sel, npr[:, None, :], updated)
-        tab = jnp.where(do_pivot[:, None, None], updated, tab)
-        basis = jnp.where(
-            do_pivot[:, None] & l_oh_rows, e[:, None], basis
+        tab, basis = engine.pivot_update(
+            tab, basis, e, l, full_col, do_pivot, m, tol, gather=False
         )
         iters = iters + do_pivot.astype(jnp.int32)
         return tab, basis, phase, status, iters, step + 1
@@ -146,14 +112,11 @@ def _kernel(
     )
     status = jnp.where(status == RUNNING, ITER_LIMIT, status)
 
-    # ---- solution extraction (one-hot scatter of rhs into x) -------------
-    objective = jnp.where(status == OPTIMAL, -tab[:, m, 0], -_BIG)
-    rhs = tab[:, :m, 0]  # (TB, m)
-    np_ = x_ref.shape[1]
-    var_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, np_), 2)  # cols of x
-    hit = basis[:, :, None] == (var_ids + 1)  # basis col j+1 <-> x_j
-    x = jnp.sum(jnp.where(hit, rhs[:, :, None], 0.0), axis=1)  # (TB, Np)
-    x = jnp.where((status == OPTIMAL)[:, None], x, 0.0)
+    # Finite sentinel instead of -inf inside the kernel; the wrapper
+    # (kernels/ops.py) re-masks non-optimal objectives to -inf outside.
+    objective, x = engine.extract_solution(
+        tab, basis, status, m, x_ref.shape[1], fill=-_BIG
+    )
 
     obj_ref[...] = objective
     x_ref[...] = x
@@ -172,12 +135,14 @@ def simplex_pallas(
     basis: jnp.ndarray,  # (B, Mp) int32 padded
     phase: jnp.ndarray,  # (B,) int32
     c_ext: jnp.ndarray,  # (B, Qp)
+    feas_tol: jnp.ndarray,  # (B,) phase-I feasibility threshold
     *,
     m: int,
     n: int,
-    q: int,
     n_padded: int,
     max_iters: int,
+    rule: str = engine.LPC,
+    seed: int = 0,
     tile_b: int = 8,
     tol: float = 1e-5,
     interpret: bool = False,
@@ -188,7 +153,7 @@ def simplex_pallas(
     grid = (bsz // tile_b,)
 
     kernel = functools.partial(
-        _kernel, m=m, n=n, q=q, max_iters=max_iters, tol=tol
+        _kernel, m=m, n=n, rule=rule, seed=seed, max_iters=max_iters, tol=tol
     )
     return pl.pallas_call(
         kernel,
@@ -198,6 +163,7 @@ def simplex_pallas(
             pl.BlockSpec((tile_b, basis.shape[1]), lambda i: (i, 0)),
             pl.BlockSpec((tile_b,), lambda i: (i,)),
             pl.BlockSpec((tile_b, qp), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((tile_b,), lambda i: (i,)),
@@ -214,4 +180,4 @@ def simplex_pallas(
             jax.ShapeDtypeStruct((bsz, basis.shape[1]), jnp.int32),
         ],
         interpret=interpret,
-    )(tab, basis, phase, c_ext)
+    )(tab, basis, phase, c_ext, feas_tol)

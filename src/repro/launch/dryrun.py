@@ -24,13 +24,12 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import ARCH_IDS, SHAPES, Shape, cell_is_applicable, get_config, input_specs
+from ..configs import ARCH_IDS, SHAPES, cell_is_applicable, get_config, input_specs
 from ..models.model import Model
 from ..sharding import partition, rules as prules
 from ..train import optimizer as opt_mod

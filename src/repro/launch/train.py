@@ -14,18 +14,14 @@ XLA latency-hiding / async-collective flags for real TPU runs are set in
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..data.pipeline import DataConfig, SyntheticLM
 from ..models.model import Model
 from ..runtime.fault import DriverConfig, TrainDriver
-from ..sharding import partition, rules as prules
+from ..sharding import partition
 from ..train import optimizer as opt_mod
 from ..train.train_step import make_train_step
 from .mesh import make_local_mesh

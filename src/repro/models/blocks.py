@@ -20,12 +20,10 @@ are shared across application sites but each site has its own KV cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List
 
-import jax
-import jax.numpy as jnp
 
-from ..sharding import ParamSpec, partition
+from ..sharding import partition
 from . import attention as attn
 from . import mamba2 as mb
 from . import moe as moe_mod

@@ -9,7 +9,7 @@ shared experts and MLA attention), pure SSM (Mamba2/SSD), hybrid
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,7 +16,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..sharding import ParamSpec, partition
 from .config import ModelConfig

@@ -8,17 +8,14 @@ mamba sub-stacks (one python-level group per application site).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..sharding import ParamSpec, partition, rules as prules
-from . import attention as attn_mod
 from . import blocks as blk
-from . import mamba2 as mb
 from .config import ModelConfig
 from .layers import embed, rmsnorm, rmsnorm_spec, sinusoidal_positions, unembed
 

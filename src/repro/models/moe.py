@@ -16,7 +16,7 @@ router scores.  This is the in-model integration of the paper's technique
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

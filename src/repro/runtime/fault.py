@@ -12,8 +12,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
 
-import jax
-import numpy as np
 
 from ..ckpt import checkpoint as ckpt
 

@@ -10,7 +10,6 @@ straggler-mitigated workers from ``runtime/straggler.py``)."""
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax

@@ -15,7 +15,6 @@ when manual overlap scheduling is wanted.
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

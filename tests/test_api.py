@@ -11,7 +11,7 @@ from scipy.optimize import linprog
 import repro
 from repro import LPBatch, LPProblem, SolveOptions
 from repro.core import bucketing, lp, oracle
-from repro.core.problem import canonicalize, uncanonicalize
+from repro.core.problem import canonicalize
 
 
 def _oracle_general(p: LPProblem, i: int = 0):

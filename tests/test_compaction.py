@@ -14,7 +14,6 @@ import pytest
 import repro
 from repro import SolveOptions, SolveStats
 from repro.core import dispatch, lp, support
-from repro.core.backends import COMPACTION_MODES
 from repro.core.lp import LPBatch
 
 

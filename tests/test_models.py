@@ -106,8 +106,6 @@ def test_mamba2_state_continuity():
 
 def test_moe_router_lp_vs_topk():
     """LP-balanced routing runs and changes expert loads toward balance."""
-    from repro.models import moe as moe_mod
-
     cfg = dataclasses.replace(
         get_config("dbrx-132b", reduced=True), router="lp", router_groups=4
     )
