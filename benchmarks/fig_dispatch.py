@@ -1,0 +1,134 @@
+"""Compile-once dispatch + round-resume benchmark -> BENCH_dispatch.json.
+
+A grid over the round-scheduler's two new axes on the skewed 90/10
+megabatch (the convergence-compaction workload of ``fig_compaction``):
+
+  * ``resume``:  ``"scratch"`` (re-solve survivors from iteration 0 each
+    round) vs ``"basis"`` (continue each survivor's exact carried state —
+    lockstep work collapses toward the true-pivot floor);
+  * caps: ``dynamic`` (iteration cap is a traced scalar — ONE executable
+    serves every geometric round cap per shape bucket) vs ``static`` (the
+    pre-compile-once baseline: each distinct cap mints its own
+    executable, ``SolveOptions.dynamic_caps=False``).
+
+Per cell: steady-state wall-clock, compile count + cache hits (via the
+backend compile-cache hooks), dispatch rounds, and lockstep vs true
+simplex iterations.  Every cell's results must be bit-identical to
+``compaction="off"`` (statuses, objectives, primal points) — recorded as
+the ``bit_identical`` flag CI asserts on.
+
+``BENCH_SMOKE=1`` shrinks the batch so the whole grid runs in seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+from .fig_compaction import _skewed_batch, _smoke
+
+
+def _grid(full: bool, rng) -> dict:
+    import jax
+
+    import repro
+    from repro import SolveOptions, SolveStats
+
+    bsz = 256 if _smoke() else (8192 if full else 1024)
+    m, n = 24, 12
+    batch = _skewed_batch(bsz, m, n, hard_frac=0.1, rng=rng)
+
+    off_stats = SolveStats()
+    off = repro.solve(batch, SolveOptions(), stats=off_stats)
+    off_np = (
+        np.asarray(off.status),
+        np.asarray(off.objective),
+        np.asarray(off.x),
+    )
+
+    cells = []
+    bit_identical = True
+    for resume in ("scratch", "basis"):
+        for caps in ("static", "dynamic"):
+            opts = SolveOptions(
+                compaction="every_k",
+                compact_every=n + 2,
+                resume=resume,
+                dynamic_caps=(caps == "dynamic"),
+            )
+            # The jit caches are process-wide; start each cell cold so
+            # its 'compiles' column measures what THIS configuration
+            # needs, not what earlier cells (or fig_compaction in the
+            # same run) happened to pre-warm.
+            jax.clear_caches()
+            stats = SolveStats()
+            sol = repro.solve(batch, opts, stats=stats)
+            same = (
+                np.array_equal(off_np[0], np.asarray(sol.status))
+                and np.array_equal(off_np[1], np.asarray(sol.objective))
+                and np.array_equal(off_np[2], np.asarray(sol.x))
+            )
+            bit_identical = bit_identical and same
+            # Steady-state wall-clock: the warm-up above already paid the
+            # compiles this configuration needs.
+            wall_s = time_fn(lambda: repro.solve(batch, opts), warmup=0, iters=3)
+            name = f"dispatch_{resume}_{caps}_b{bsz}"
+            emit(
+                name,
+                wall_s,
+                f"{stats.compiles} compiles, "
+                f"{stats.lockstep_iterations} lockstep",
+            )
+            cells.append(
+                {
+                    "resume": resume,
+                    "caps": caps,
+                    "wall_s": wall_s,
+                    "rounds": stats.rounds,
+                    "compiles": stats.compiles,
+                    "cache_hits": stats.cache_hits,
+                    "resumed_lps": stats.resumed,
+                    "lockstep_iterations": stats.lockstep_iterations,
+                    "simplex_iterations": stats.simplex_iterations,
+                    "bit_identical": same,
+                }
+            )
+
+    basis_cell = next(
+        c for c in cells if c["resume"] == "basis" and c["caps"] == "dynamic"
+    )
+    return {
+        "batch": bsz,
+        "m": m,
+        "n": n,
+        "hard_frac": 0.1,
+        "off_lockstep_iterations": off_stats.lockstep_iterations,
+        "true_simplex_iterations": off_stats.simplex_iterations,
+        # Acceptance: basis-resume lockstep work within 1.5x of the true
+        # pivot count (scratch re-work is what it eliminates).
+        "basis_lockstep_over_true": (
+            basis_cell["lockstep_iterations"]
+            / max(1, off_stats.simplex_iterations)
+        ),
+        "bit_identical": bit_identical,
+        "grid": cells,
+    }
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(1802)
+    results = _grid(full, rng)
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_dispatch.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,7 @@ from . import (
     fig9_infeasible,
     fig10_cpu_threads,
     fig_compaction,
+    fig_dispatch,
     fig_rules,
     roofline,
     table1_hyperbox,
@@ -31,6 +32,7 @@ BENCHES = {
     "table1": table1_hyperbox.run,
     "table2": table2_reach.run,
     "compaction": fig_compaction.run,
+    "dispatch": fig_dispatch.run,
     "rules": fig_rules.run,
     "roofline": roofline.run,
 }

@@ -21,8 +21,9 @@ from .core.backends import (
     get_backend,
     register_backend,
 )
-from .core.lp import LPBatch, LPSolution
+from .core.lp import LPBatch, LPSolution, ResumeState
 from .core.problem import LPProblem
+from .core.session import SolveSession
 
 __all__ = [
     "solve",
@@ -30,6 +31,8 @@ __all__ = [
     "LPProblem",
     "LPBatch",
     "LPSolution",
+    "ResumeState",
+    "SolveSession",
     "SolveOptions",
     "SolveStats",
     "Backend",

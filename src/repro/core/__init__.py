@@ -7,12 +7,14 @@ from .lp import (
     LPSolution,
     OPTIMAL,
     RUNNING,
+    ResumeState,
     STATUS_NAMES,
     UNBOUNDED,
     build_tableau,
     random_hyperbox_batch,
     random_lp_batch,
 )
+from .session import SolveSession
 from .simplex import BLAND, LPC, RPC, solve_batched
 from .problem import (
     Canonicalized,
@@ -36,6 +38,8 @@ from . import dispatch, engine, hyperbox, oracle
 __all__ = [
     "LPBatch",
     "LPSolution",
+    "ResumeState",
+    "SolveSession",
     "LPProblem",
     "Canonicalized",
     "canonicalize",

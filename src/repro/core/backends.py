@@ -47,11 +47,14 @@ import numpy as np
 from . import engine as _engine
 from . import hyperbox as _hyperbox
 from . import simplex as _simplex
-from .lp import LPBatch, LPSolution
+from .lp import LPBatch, LPSolution, ResumeState
 
 
 #: Valid values of :attr:`SolveOptions.compaction`.
 COMPACTION_MODES = ("off", "chunked", "every_k")
+
+#: Valid values of :attr:`SolveOptions.resume`.
+RESUME_MODES = ("scratch", "basis")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +114,30 @@ class SolveOptions:
     compact_every : int, default 0
         Iteration budget per compaction round (the cap ``k`` above);
         0 means the auto budget ``8 * (m + n)``.
+    resume : str, default "scratch"
+        How compaction rounds treat the LPs that survive a capped round:
+
+        * ``"scratch"`` — round r+1 re-solves survivors from iteration 0
+          with a doubled cap (the historical behavior; re-work grows with
+          the round count).
+        * ``"basis"`` — round r+1 CONTINUES each survivor from the exact
+          simplex state (tableau/basis/phase) round r stopped at, so the
+          per-round step budgets sum to one full solve and no pivot is
+          ever repeated.  Because the carried state is exact, results —
+          including per-LP iteration counts — are bit-identical to
+          ``compaction="off"`` under the deterministic pivot rules
+          (lpc/bland; the rpc rule keys its noise on the loop step and
+          batch row, which any compaction mode perturbs).  Honored by
+          backends that implement the state protocol (``xla``,
+          ``pallas``); others — and solves with ``unroll > 1``, whose
+          step grouping cannot be split mid-round — silently fall back
+          to ``"scratch"``.
+    dynamic_caps : bool, default True
+        When True (the compile-once contract) the iteration cap is a
+        traced scalar: every round cap over one tableau shape runs ONE
+        compiled executable.  False re-specializes the executable on each
+        concrete cap — the pre-compile-once behavior, kept as a benchmark
+        baseline (``benchmarks/fig_dispatch.py``).
     seed : int, default 0
         PRNG seed for the randomized (RPC) pivot rule.
     """
@@ -124,6 +151,8 @@ class SolveOptions:
     first_cap: Optional[int] = None
     compaction: str = "off"
     compact_every: int = 0
+    resume: str = "scratch"
+    dynamic_caps: bool = True
     seed: int = 0
 
     def __post_init__(self):
@@ -134,6 +163,11 @@ class SolveOptions:
             raise ValueError(
                 f"unknown compaction mode {self.compaction!r}; "
                 f"expected one of {COMPACTION_MODES}"
+            )
+        if self.resume not in RESUME_MODES:
+            raise ValueError(
+                f"unknown resume mode {self.resume!r}; "
+                f"expected one of {RESUME_MODES}"
             )
         if self.rule not in _engine.RULES:
             raise ValueError(
@@ -184,6 +218,19 @@ class SolveStats:
         Compaction shrinks this toward ``simplex_iterations``.
     warm_started : int
         LPs that entered a dispatch with a usable warm-start basis.
+    resumed : int
+        LPs that entered a dispatch round carrying exact mid-solve state
+        (``SolveOptions.resume="basis"``) instead of restarting from
+        scratch.
+    compiles : int
+        New solver executables compiled by the dispatches this record
+        observed (measured through the backend's compile-cache hook).
+        Under the compile-once contract this stays at one per tableau
+        shape bucket no matter how many rounds/caps/sweep steps run.
+    cache_hits : int
+        Dispatches that reused an already-compiled executable.  The
+        steady-state counter: a warmed-up serving loop or sweep should
+        accumulate only cache hits.
     """
 
     lps: int = 0
@@ -191,6 +238,23 @@ class SolveStats:
     simplex_iterations: int = 0
     lockstep_iterations: int = 0
     warm_started: int = 0
+    resumed: int = 0
+    compiles: int = 0
+    cache_hits: int = 0
+
+    def record_cache(self, before: int, after: int) -> None:
+        """Attribute one backend call's compile-cache delta.
+
+        The single implementation of the compiles-vs-hits rule, shared by
+        the dispatch round loop and the compiled sweep session: a grown
+        cache books the growth as ``compiles``, an unchanged cache books
+        one ``cache_hits``.
+        """
+        delta = after - before
+        if delta > 0:
+            self.compiles += delta
+        else:
+            self.cache_hits += 1
 
     def record(self, sol: LPSolution) -> None:
         """Accumulate one dispatch's ``LPSolution`` into the counters.
@@ -228,11 +292,39 @@ class Backend:
     solve_hyperbox : callable
         ``(lo, hi, directions, SolveOptions) -> LPSolution`` — the
         closed-form box path (paper Sec. 6).
+    start_canonical : callable, optional
+        ``(LPBatch, SolveOptions) -> (LPSolution, ResumeState)`` — like
+        ``solve_canonical`` but also reporting the exact terminal solver
+        state, so a capped round can be continued.  None means the
+        backend cannot produce state; the dispatch layer then falls back
+        to scratch-mode rounds.
+    resume_canonical : callable, optional
+        ``(LPBatch, ResumeState, SolveOptions) -> (LPSolution,
+        ResumeState)`` — continue the batch from carried state for
+        ``options.max_iters`` ADDITIONAL steps.  ``batch.a`` is ignored
+        (the tableau already encodes it); ``batch.b``/``batch.c``
+        re-derive the cost row and feasibility threshold bit-identically.
+    cache_size : callable, optional
+        ``() -> int`` — number of solver executables this backend has
+        compiled so far.  The dispatch layer diffs it around each call to
+        maintain ``SolveStats.compiles`` / ``SolveStats.cache_hits``.
     """
 
     name: str
     solve_canonical: Callable[[LPBatch, SolveOptions], LPSolution]
     solve_hyperbox: Callable[..., LPSolution]
+    start_canonical: Optional[
+        Callable[[LPBatch, SolveOptions], Tuple[LPSolution, ResumeState]]
+    ] = None
+    resume_canonical: Optional[
+        Callable[[LPBatch, ResumeState, SolveOptions], Tuple[LPSolution, ResumeState]]
+    ] = None
+    cache_size: Optional[Callable[[], int]] = None
+
+    @property
+    def supports_resume(self) -> bool:
+        """True when the backend implements the exact-state round protocol."""
+        return self.start_canonical is not None and self.resume_canonical is not None
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -299,7 +391,9 @@ def available_backends() -> Tuple[str, ...]:
 # ---------------------------------------------------------------------------
 
 
-def _xla_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+def _xla_solve(
+    batch: LPBatch, options: SolveOptions, want_state: bool = False
+):
     return _simplex.solve_batched(
         batch.a,
         batch.b,
@@ -310,6 +404,27 @@ def _xla_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
         unroll=options.unroll,
         tol=options.tolerance,
         basis0=batch.basis0,
+        want_state=want_state,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _xla_start(batch: LPBatch, options: SolveOptions):
+    return _xla_solve(batch, options, want_state=True)
+
+
+def _xla_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
+    return _simplex.resume_batched(
+        batch.b,
+        batch.c,
+        state,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        unroll=options.unroll,
+        tol=options.tolerance,
+        want_state=True,
+        dynamic_cap=options.dynamic_caps,
     )
 
 
@@ -317,7 +432,9 @@ def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
     return _hyperbox.solve_batched(lo, hi, directions)
 
 
-def _pallas_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
+def _pallas_solve(
+    batch: LPBatch, options: SolveOptions, want_state: bool = False
+):
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
     return kernel_ops.simplex_solve(
@@ -329,7 +446,35 @@ def _pallas_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
         seed=options.seed,
         tol=options.tolerance,
         basis0=batch.basis0,
+        want_state=want_state,
+        dynamic_cap=options.dynamic_caps,
     )
+
+
+def _pallas_start(batch: LPBatch, options: SolveOptions):
+    return _pallas_solve(batch, options, want_state=True)
+
+
+def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops.simplex_resume(
+        batch.b,
+        batch.c,
+        state,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        tol=options.tolerance,
+        want_state=True,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _pallas_cache_size() -> int:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops.compile_cache_size()
 
 
 def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
@@ -385,6 +530,26 @@ def _reference_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution
     )
 
 
-register_backend(Backend("xla", _xla_solve, _xla_hyperbox))
-register_backend(Backend("pallas", _pallas_solve, _pallas_hyperbox))
+register_backend(
+    Backend(
+        "xla",
+        _xla_solve,
+        _xla_hyperbox,
+        start_canonical=_xla_start,
+        resume_canonical=_xla_resume,
+        cache_size=_simplex.compile_cache_size,
+    )
+)
+register_backend(
+    Backend(
+        "pallas",
+        _pallas_solve,
+        _pallas_hyperbox,
+        start_canonical=_pallas_start,
+        resume_canonical=_pallas_resume,
+        cache_size=_pallas_cache_size,
+    )
+)
+# The float64 oracle neither tracks mid-solve state nor compiles anything:
+# resume="basis" on it falls back to scratch rounds in the dispatch layer.
 register_backend(Backend("reference", _reference_solve, _reference_hyperbox))

@@ -15,10 +15,30 @@ The four historical execution paths are now just round plans
   * legacy adaptive two-pass
     (``SolveOptions.first_cap``)     -> rounds ``[first_cap, full]`` with
     iteration counts carried across rounds (the historical semantics);
-  * ``compaction="chunked"``         -> rounds ``[k, full]``, re-solved
-    from scratch (bit-identical to ``"off"``);
+  * ``compaction="chunked"``         -> rounds ``[k, full]``;
   * ``compaction="every_k"``         -> geometric rounds
-    ``[k, 2k, 4k, ..., full]``, re-solved from scratch.
+    ``[k, 2k, 4k, ..., full]``.
+
+The compaction modes come in two resume flavors
+(``SolveOptions.resume``): ``"scratch"`` re-solves survivors from
+iteration 0 each round (each cap is a from-scratch cap), while
+``"basis"`` CONTINUES survivors from the exact solver state the previous
+round stopped at (each cap is an *incremental* step budget; the budgets
+sum to one full solve), carried as :class:`~repro.core.lp.ResumeState`
+through the backend state protocol.  Both are bit-identical to
+``compaction="off"`` under the deterministic pivot rules.
+
+Compile-once discipline, end to end:
+
+  * iteration caps are traced scalars inside every backend
+    (``SolveOptions.dynamic_caps``), so the geometric caps ``[k, 2k,
+    4k, ...]`` all hit ONE executable per tableau shape;
+  * every gathered sub-batch after round 0 is rounded up to a power-of-two
+    size class (``core/bucketing.py:next_pow2``), so round r reuses round
+    r-1's compiled executable instead of minting one per active-set size;
+  * the status read-back is the single host sync per round;
+  * ``SolveStats.compiles`` / ``cache_hits`` observe the contract through
+    the backends' compile-cache hooks.
 
 Each round goes through the one dispatch primitive
 (:func:`_dispatch_round`), which owns — exactly once — the paper's
@@ -31,8 +51,9 @@ per-round machinery:
   * shard the batch dimension across a mesh's data axes when a mesh is
     supplied (one LP never spans devices — same invariant as one LP per
     CUDA block);
-  * pad the batch to the mesh multiple and trim the padding replicas off
-    the result;
+  * pad the batch (and any carried resume state) to the round's size
+    class and the mesh multiple, trimming the padding replicas off every
+    result;
   * thread warm-start bases (``LPBatch.basis0``) through gather/stage;
   * record ``SolveStats`` counters per dispatch.
 
@@ -49,8 +70,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backends import SolveOptions, SolveStats, get_backend
-from .lp import ITER_LIMIT, LPBatch, LPSolution, auto_cap
+from .backends import Backend, SolveOptions, SolveStats, get_backend
+from .bucketing import next_pow2
+from .lp import ITER_LIMIT, LPBatch, LPSolution, ResumeState, auto_cap
 
 
 def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
@@ -77,7 +99,7 @@ def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
 
 
 def _trim_solution(sol: LPSolution, k: int) -> LPSolution:
-    """First k rows of a solution batch (drop mesh-padding replicas)."""
+    """First k rows of a solution batch (drop padding replicas)."""
     return LPSolution(
         objective=sol.objective[:k],
         x=sol.x[:k],
@@ -95,6 +117,14 @@ def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
         status=jnp.concatenate([p.status for p in parts]),
         iterations=jnp.concatenate([p.iterations for p in parts]),
         basis=jnp.concatenate(bases) if all(b is not None for b in bases) else None,
+    )
+
+
+def _concat_states(parts: Sequence[ResumeState]) -> ResumeState:
+    return ResumeState(
+        tab=jnp.concatenate([p.tab for p in parts]),
+        basis=jnp.concatenate([p.basis for p in parts]),
+        phase=jnp.concatenate([p.phase for p in parts]),
     )
 
 
@@ -128,6 +158,14 @@ def _stage_batch(batch: LPBatch, lo: int, hi: int, mesh, axes) -> LPBatch:
     )
 
 
+def _stage_state(state: ResumeState, lo: int, hi: int, mesh, axes) -> ResumeState:
+    return ResumeState(
+        _stage(state.tab[lo:hi], mesh, axes),
+        _stage(state.basis[lo:hi], mesh, axes),
+        _stage(state.phase[lo:hi], mesh, axes),
+    )
+
+
 def _gather_batch(batch: LPBatch, idx: jnp.ndarray) -> LPBatch:
     return LPBatch(
         batch.a[idx],
@@ -138,40 +176,66 @@ def _gather_batch(batch: LPBatch, idx: jnp.ndarray) -> LPBatch:
 
 
 def _scatter_solution(
-    full: LPSolution, idx: jnp.ndarray, part: LPSolution, iter_offset: int = 0
+    full: LPSolution,
+    idx: jnp.ndarray,
+    part: LPSolution,
+    iter_offset: int = 0,
+    accumulate: bool = False,
 ) -> LPSolution:
-    """Overwrite rows ``idx`` of ``full`` with ``part`` (compaction scatter)."""
+    """Overwrite rows ``idx`` of ``full`` with ``part`` (compaction scatter).
+
+    ``accumulate`` adds the part's iteration counts onto the rows' prior
+    totals instead of replacing them — resumed rounds report only their
+    own incremental pivots, and the sum over rounds is the true per-LP
+    count (bit-identical to an uninterrupted solve's).
+    """
     basis = full.basis
     if basis is not None and part.basis is not None:
         basis = basis.at[idx].set(part.basis)
     elif part.basis is not None:
         basis = None  # mixed provenance: drop rather than fabricate
+    if accumulate:
+        iterations = full.iterations.at[idx].add(part.iterations)
+    else:
+        iterations = full.iterations.at[idx].set(part.iterations + iter_offset)
     return LPSolution(
         objective=full.objective.at[idx].set(part.objective),
         x=full.x.at[idx].set(part.x),
         status=full.status.at[idx].set(part.status),
-        iterations=full.iterations.at[idx].set(part.iterations + iter_offset),
+        iterations=iterations,
         basis=basis,
     )
 
 
-def _pad_batch(batch: LPBatch, multiple: int) -> Tuple[LPBatch, int]:
+def _pad_rows(x: jnp.ndarray, pad: int) -> jnp.ndarray:
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, mode="edge")
+
+
+def _pad_batch_to(batch: LPBatch, size: int) -> Tuple[LPBatch, int]:
+    """Edge-pad the batch dimension up to ``size`` (replica rows, trimmed
+    off every output)."""
     bsz = batch.batch
-    padded = math.ceil(bsz / multiple) * multiple
-    if padded == bsz:
+    if size <= bsz:
         return batch, bsz
-    pad = padded - bsz
-
-    def p(x):
-        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-        return jnp.pad(x, widths, mode="edge")
-
+    pad = size - bsz
     return LPBatch(
-        p(batch.a),
-        p(batch.b),
-        p(batch.c),
-        None if batch.basis0 is None else p(batch.basis0),
+        _pad_rows(batch.a, pad),
+        _pad_rows(batch.b, pad),
+        _pad_rows(batch.c, pad),
+        None if batch.basis0 is None else _pad_rows(batch.basis0, pad),
     ), bsz
+
+
+def _pad_state_to(state: ResumeState, size: int) -> ResumeState:
+    pad = size - state.batch
+    if pad <= 0:
+        return state
+    return ResumeState(
+        _pad_rows(state.tab, pad),
+        _pad_rows(state.basis, pad),
+        _pad_rows(state.phase, pad),
+    )
 
 
 def _full_cap(batch: LPBatch, options: SolveOptions) -> int:
@@ -185,26 +249,42 @@ def _round_cap(batch: LPBatch, options: SolveOptions) -> int:
     return min(k, _full_cap(batch, options))
 
 
-def _round_plan(batch: LPBatch, options: SolveOptions) -> Tuple[Sequence[int], bool]:
+def _round_plan(
+    batch: LPBatch, options: SolveOptions, incremental: bool = False
+) -> Tuple[Sequence[int], bool]:
     """Lower ``options`` to a round plan: per-round iteration caps.
 
     Returns ``(caps, carry_iters)``.  Round 0 dispatches the whole batch
     with ``caps[0]``; round r > 0 re-dispatches the LPs that hit round
-    r-1's cap, with ``caps[r]``.  ``carry_iters`` is True only for the
-    legacy adaptive two-pass, whose historical contract *continues*
-    counting iterations across rounds; the compaction modes re-solve from
-    scratch so their results stay bit-identical to a single full solve.
+    r-1's cap, with ``caps[r]``.
+
+    With ``incremental`` False (scratch resume) each cap is a
+    from-scratch cap: the compaction modes re-solve survivors from
+    iteration 0, so any LP's final result comes from one uninterrupted
+    solve (the bit-identical-to-``"off"`` argument).  With ``incremental``
+    True (basis resume) each cap is the round's ADDITIONAL step budget
+    and the budgets sum exactly to the full cap — the cumulative budget
+    after round r matches the scratch plan's cap for round r, and the
+    exact carried state makes the spliced rounds replay one uninterrupted
+    solve arithmetic-for-arithmetic.
+
+    ``carry_iters`` is True only for the legacy adaptive two-pass, whose
+    historical contract *continues* counting iterations across rounds.
     """
     full_cap = _full_cap(batch, options)
     if options.compaction == "chunked":
         cap = _round_cap(batch, options)
-        return ([cap, full_cap] if cap < full_cap else [cap]), False
+        if cap >= full_cap:
+            return [cap], False
+        return ([cap, full_cap - cap] if incremental else [cap, full_cap]), False
     if options.compaction == "every_k":
         cap = _round_cap(batch, options)
         caps = [cap]
-        while cap < full_cap:
-            cap = min(2 * cap, full_cap)
-            caps.append(cap)
+        cum = cap
+        while cum < full_cap:
+            inc = min(cum, full_cap - cum)  # doubling cumulative budget
+            caps.append(inc if incremental else cum + inc)
+            cum += inc
         return caps, False
     if options.first_cap is not None:
         first = options.first_cap or 8 * (batch.m + batch.n)
@@ -223,13 +303,16 @@ def solve_canonical(
 
     The configured mode — plain chunked solve, legacy adaptive two-pass
     (``options.first_cap``), or convergence compaction
-    (``options.compaction``) — is lowered by :func:`_round_plan` to a
-    list of per-round iteration caps, then executed by the single
+    (``options.compaction``, scratch or basis-resumed per
+    ``options.resume``) — is lowered by :func:`_round_plan` to a list of
+    per-round iteration caps, then executed by the single
     gather/dispatch/scatter loop below.  Round 0 dispatches every LP;
-    each later round reads the status vector on the host, gathers the
-    LPs that hit the previous cap (``ITER_LIMIT``) into a dense
-    sub-batch, re-dispatches only those, and scatters the results back
-    in input order.  One plain round at the full cap never examines the
+    each later round reads the status vector on the host (the one host
+    sync per round), gathers the LPs that hit the previous cap
+    (``ITER_LIMIT``) into a dense sub-batch padded up to a power-of-two
+    size class, re-dispatches only those — continuing their carried
+    solver state in basis-resume mode — and scatters the results back in
+    input order.  One plain round at the full cap never examines the
     status vector at all (no host sync).
 
     Parameters
@@ -240,7 +323,8 @@ def solve_canonical(
     options : SolveOptions, optional
         Pipeline + backend configuration; defaults to ``SolveOptions()``.
         ``options.compaction`` selects the convergence-compaction mode
-        (see :class:`repro.core.backends.SolveOptions`); it takes
+        and ``options.resume`` its scratch/continue flavor (see
+        :class:`repro.core.backends.SolveOptions`); compaction takes
         precedence over the legacy ``options.first_cap`` two-pass solve.
     mesh : jax.sharding.Mesh, optional
         When given, the batch dimension is sharded across the mesh axes
@@ -260,29 +344,66 @@ def solve_canonical(
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
-    caps, carry_iters = _round_plan(batch, options)
-    base = options.replace(compaction="off", first_cap=None)
+    backend = get_backend(options.backend)
+    # unroll > 1 groups loop steps in blocks of `unroll`; a mid-round
+    # split would re-align the grouping and change the total step count,
+    # so basis-resume falls back to scratch rounds there.
+    use_resume = (
+        options.resume == "basis"
+        and options.compaction != "off"
+        and options.unroll <= 1
+        and backend.supports_resume
+    )
+    caps, carry_iters = _round_plan(batch, options, incremental=use_resume)
+    base = options.replace(compaction="off", first_cap=None, resume="scratch")
 
     sol: Optional[LPSolution] = None
+    state: Optional[ResumeState] = None
+    state_idx: Optional[np.ndarray] = None  # global rows held in `state`
     iter_offset = 0
-    for cap in caps:
+    for r, cap in enumerate(caps):
+        want_state = use_resume and r < len(caps) - 1
         if sol is None:
             idx = None  # round 0: the whole batch
             sub = batch
+            sub_state = None
+            size_class = None
         else:
             active = np.nonzero(np.asarray(sol.status) == ITER_LIMIT)[0]
             if active.size == 0:
                 break
             idx = jnp.asarray(active)
             sub = _gather_batch(batch, idx)
-        part = _dispatch_round(
-            sub, base.replace(max_iters=cap), mesh, batch_axes, stats
+            if state is not None:
+                # Survivors are a subset of the rows the previous round
+                # dispatched, so their state rows are found by position.
+                local = active if state_idx is None else np.searchsorted(
+                    state_idx, active
+                )
+                sub_state = state.take(jnp.asarray(local))
+            else:
+                sub_state = None
+            size_class = next_pow2(int(active.size))
+        part, part_state = _dispatch_round(
+            sub,
+            base.replace(max_iters=cap),
+            mesh,
+            batch_axes,
+            stats,
+            state=sub_state,
+            want_state=want_state,
+            size_class=size_class,
         )
-        sol = (
-            part
-            if idx is None
-            else _scatter_solution(sol, idx, part, iter_offset=iter_offset)
-        )
+        if stats is not None and sub_state is not None:
+            stats.resumed += sub.batch
+        if idx is None:
+            sol = part
+        else:
+            sol = _scatter_solution(
+                sol, idx, part, iter_offset=iter_offset, accumulate=use_resume
+            )
+            state_idx = active
+        state = part_state
         if carry_iters:
             iter_offset += cap
     return sol
@@ -294,19 +415,30 @@ def _dispatch_round(
     mesh,
     batch_axes: Sequence[str],
     stats: Optional[SolveStats] = None,
-) -> LPSolution:
+    state: Optional[ResumeState] = None,
+    want_state: bool = False,
+    size_class: Optional[int] = None,
+) -> Tuple[LPSolution, Optional[ResumeState]]:
     """One dispatch round: pad, shard, chunk, overlap, solve, trim, record.
 
     The only place in the pipeline that talks to a backend.  Splits the
     (sub-)batch into ``options.chunk_size`` chunks and stages chunk k+1
     to the device while chunk k solves — the paper's CUDA-streams
-    discipline (Sec. 4.4).
+    discipline (Sec. 4.4).  ``size_class`` rounds the batch up to the
+    scheduler's power-of-two class (executable reuse across rounds);
+    ``state``/``want_state`` thread the exact-resume protocol.  Padding
+    replica rows are trimmed off the solution, the carried state, AND the
+    stats before anything leaves this function.
     """
     axes = _resolve_axes(mesh, batch_axes)
     mesh_div = 1
     if mesh and axes:
         mesh_div = int(np.prod([mesh.shape[a] for a in axes]))
-    batch, true_bsz = _pad_batch(batch, max(mesh_div, 1))
+    target = max(batch.batch, size_class or 0)
+    target = math.ceil(target / max(mesh_div, 1)) * max(mesh_div, 1)
+    batch, true_bsz = _pad_batch_to(batch, target)
+    if state is not None:
+        state = _pad_state_to(state, target)
 
     backend = get_backend(options.backend)
 
@@ -314,29 +446,70 @@ def _dispatch_round(
     chunk = options.chunk_size or bsz
     chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
     parts = []
+    state_parts = []
     # Stage chunk 0, then for each chunk: kick off the solve (async under
     # XLA) and immediately stage chunk k+1 so transfer overlaps compute —
     # the CUDA-streams discipline from paper Sec. 4.4.
     staged = None
     for lo in range(0, bsz, chunk):
         hi = min(lo + chunk, bsz)
-        cur = staged or _stage_batch(batch, lo, hi, mesh, axes)
-        out = backend.solve_canonical(cur, options)
+        cur = staged or _stage_round_inputs(batch, state, lo, hi, mesh, axes)
+        out, out_state = _solve_chunk(backend, cur, options, want_state, stats)
         nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
         staged = (
-            _stage_batch(batch, nxt_lo, nxt_hi, mesh, axes) if nxt_lo < bsz else None
+            _stage_round_inputs(batch, state, nxt_lo, nxt_hi, mesh, axes)
+            if nxt_lo < bsz
+            else None
         )
         if stats is not None:
-            # Don't let mesh-padding replica rows (edge-mode duplicates in
-            # the trailing chunk) inflate the counters.
+            # Don't let padding replica rows (edge-mode duplicates in the
+            # trailing chunk) inflate the counters.
             valid = min(hi, true_bsz) - lo
             if valid > 0:
                 stats.record(out if valid == hi - lo else _trim_solution(out, valid))
         parts.append(out)
+        if out_state is not None:
+            state_parts.append(out_state)
     sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
+    if want_state:
+        out_state = (
+            state_parts[0] if len(state_parts) == 1 else _concat_states(state_parts)
+        )
+    else:
+        out_state = None
     if true_bsz != bsz:
         sol = _trim_solution(sol, true_bsz)
-    return sol
+        if out_state is not None:
+            out_state = out_state.take(slice(None, true_bsz))
+    return sol, out_state
+
+
+def _stage_round_inputs(batch, state, lo, hi, mesh, axes):
+    return (
+        _stage_batch(batch, lo, hi, mesh, axes),
+        None if state is None else _stage_state(state, lo, hi, mesh, axes),
+    )
+
+
+def _solve_chunk(
+    backend: Backend,
+    cur: Tuple[LPBatch, Optional[ResumeState]],
+    options: SolveOptions,
+    want_state: bool,
+    stats: Optional[SolveStats],
+) -> Tuple[LPSolution, Optional[ResumeState]]:
+    """Run one chunk through the backend, attributing compiles vs hits."""
+    cur_batch, cur_state = cur
+    before = backend.cache_size() if stats is not None and backend.cache_size else None
+    if cur_state is not None:
+        out, out_state = backend.resume_canonical(cur_batch, cur_state, options)
+    elif want_state:
+        out, out_state = backend.start_canonical(cur_batch, options)
+    else:
+        out, out_state = backend.solve_canonical(cur_batch, options), None
+    if before is not None:
+        stats.record_cache(before, backend.cache_size())
+    return out, out_state
 
 
 def solve_hyperbox(
@@ -361,7 +534,8 @@ def solve_hyperbox(
     mesh, batch_axes
         As for :func:`solve_canonical`.
     stats : SolveStats, optional
-        Counters to accumulate into (box LPs record 0 iterations).
+        Counters to accumulate into (box LPs record 0 iterations) — the
+        paper-style "No. of LPs" accounting counts hyperbox LPs too.
 
     Returns
     -------

@@ -90,6 +90,38 @@ class LPBatch:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class ResumeState:
+    """Mid-solve simplex state, carried between dispatch rounds.
+
+    The simplex tableau is fully determined by its basis, but only up to
+    floating-point rebuild error — so the resume path
+    (``SolveOptions.resume="basis"``) carries the EXACT iteration state
+    (tableau, basis, phase) between capped rounds instead of re-deriving
+    it.  Continuing from a carried state replays the same arithmetic an
+    uninterrupted solve would have performed, which is what makes
+    round-resumed results bit-identical to a single full solve.
+
+    Both accelerated drivers produce and accept this state: the XLA
+    lockstep loop carries it through ``while_loop`` and the Pallas kernel
+    writes it back as extra outputs (``want_state``).  All arrays are
+    unpadded (true ``m``/``q``); drivers re-apply their own padding.
+    """
+
+    tab: jnp.ndarray  # (B, m+1, q) tableau at interruption
+    basis: jnp.ndarray  # (B, m) int32 current basis
+    phase: jnp.ndarray  # (B,) int32 simplex phase (1 or 2)
+
+    @property
+    def batch(self) -> int:
+        return self.tab.shape[0]
+
+    def take(self, idx) -> "ResumeState":
+        """Gather state rows (compaction gather between rounds)."""
+        return ResumeState(self.tab[idx], self.basis[idx], self.phase[idx])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class LPSolution:
     """Result batch: objective, primal point, status, iterations used.
 

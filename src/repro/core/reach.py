@@ -94,7 +94,9 @@ def reach_supports(
         iterations (observable through ``stats``).  Ignored on the
         hyperbox path, which does no iterations to begin with.
     stats : SolveStats, optional
-        Accumulates LP/iteration counters across all solves.
+        Accumulates LP/iteration counters across all solves — including
+        the closed-form hyperbox LPs (0 iterations each), so the
+        paper-style "No. of LPs" accounting is complete.
 
     Returns
     -------
@@ -115,7 +117,9 @@ def reach_supports(
     # starts are requested on the polytope path — a sequential sweep that
     # carries the optimal basis from step to step.
     if use_hyperbox:
-        x0_sup = np.asarray(sys.x0.support(flat.astype(np.float32), options))
+        x0_sup = np.asarray(
+            sys.x0.support(flat.astype(np.float32), options, stats=stats)
+        )
         x0_sup = x0_sup.reshape(steps, k)
     elif warm_start:
         poly = box_to_polytope(sys.x0)
@@ -138,7 +142,9 @@ def reach_supports(
     u_lo = np.asarray(sys.u.lo) * delta
     u_hi = np.asarray(sys.u.hi) * delta
     v = Box(u_lo, u_hi)
-    v_sup = np.asarray(v.support(flat.astype(np.float32), options)).reshape(steps, k)
+    v_sup = np.asarray(
+        v.support(flat.astype(np.float32), options, stats=stats)
+    ).reshape(steps, k)
     v_cum = np.concatenate(
         [np.zeros((1, k)), np.cumsum(v_sup, axis=0)[:-1]], axis=0
     )

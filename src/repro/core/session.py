@@ -1,0 +1,327 @@
+"""Persistent solve sessions: compile-once serving and swept workloads.
+
+Two steady-state workloads dominate the library's traffic profile:
+
+  * **serving** (``serve/engine.py:LPEngine``) — an endless stream of
+    heterogeneous problems, bucketed into recurring power-of-two shape
+    classes.  Once every class has been seen, no call should compile
+    anything: :class:`SolveSession` pins the options, funnels every solve
+    through one ``SolveStats`` record, and makes the contract observable
+    via the ``compiles`` / ``cache_hits`` counters the dispatch layer
+    maintains.
+
+  * **sweeps** (``core/support.py:Polytope.support_sweep``) — the SAME
+    polytope evaluated in S slowly-rotating direction batches, each step
+    warm-started from the previous step's optimal basis.  A python loop
+    pays per-step dispatch overhead S times (the 27x steady-state
+    regression of BENCH_compaction.json); :func:`sweep_problems` instead
+    compiles the WHOLE sweep once — ``lax.scan`` over steps, the step
+    body being exactly the canonicalize -> lockstep-solve ->
+    uncanonicalize pipeline the python path runs — so a steady-state
+    sweep is one executable call with zero per-step host work.
+
+Both reuse the shape-class discipline of ``core/bucketing.py``: a
+session's executables are keyed by padded shape class, and a sweep is one
+shape class by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine as _engine
+from . import simplex as _simplex
+from .backends import SolveOptions, SolveStats
+from .bucketing import ShapeGrid
+from .lp import LPBatch, LPSolution, OPTIMAL, build_tableau
+from .problem import LPProblem, canonicalize, uncanonicalize
+
+
+class SolveSession:
+    """A pinned-options solve context that makes executable reuse observable.
+
+    Wraps :func:`repro.solve` with a fixed ``SolveOptions`` / mesh / shape
+    grid and one persistent :class:`SolveStats` record, so a serving loop
+    can assert its steady state ("after warm-up, ``stats.compiles`` stops
+    moving and only ``cache_hits`` grow").  The executable cache itself is
+    process-wide (JAX's jit cache keyed by shape class and static
+    options), so sessions are cheap: create one per traffic profile.
+
+    Parameters
+    ----------
+    options : SolveOptions, optional
+        Pinned solver configuration for every call.
+    mesh : jax.sharding.Mesh, optional
+        Mesh for batch-dimension sharding, as for :func:`repro.solve`.
+    grid : sequence of (int, int), optional
+        Caller-pinned shape classes for list inputs
+        (``core.bucketing.shape_class``); None = power-of-two classes.
+    stats : SolveStats, optional
+        The record to accumulate into; a fresh one is created by default.
+    """
+
+    def __init__(
+        self,
+        options: Optional[SolveOptions] = None,
+        *,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        grid: Optional[ShapeGrid] = None,
+        stats: Optional[SolveStats] = None,
+    ):
+        self.options = options or SolveOptions()
+        self.mesh = mesh
+        self.grid = grid
+        self.stats = stats if stats is not None else SolveStats()
+
+    def solve(
+        self, problem: Union[LPProblem, LPBatch, Sequence[LPProblem]]
+    ) -> Union[LPSolution, List[LPSolution]]:
+        """Solve through the pinned configuration, recording into ``stats``."""
+        from .. import api  # lazy: api imports this package
+
+        return api.solve(
+            problem,
+            self.options,
+            mesh=self.mesh,
+            grid=self.grid,
+            stats=self.stats,
+        )
+
+    def solve_hyperbox(self, lo, hi, directions) -> LPSolution:
+        """Box-LP batch through the pinned configuration (paper Sec. 6)."""
+        from . import dispatch as _dispatch
+
+        return _dispatch.solve_hyperbox(
+            lo, hi, directions, self.options, mesh=self.mesh, stats=self.stats
+        )
+
+
+# ---------------------------------------------------------------------------
+# compiled warm-started sweeps
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rule", "unroll", "tol", "maximize", "split", "row_lower", "var_upper"
+    ),
+)
+def _sweep_jit(
+    c_stack,  # (S, K, n) per-step user objectives
+    a, bl, bu, lo, hi,  # (K, ...) problem data, constant across steps
+    cap,  # () int32 traced iteration cap
+    seed,
+    *,
+    rule, unroll, tol, maximize, split, row_lower, var_upper,
+):
+    """The whole warm-started sweep as ONE executable: scan over steps.
+
+    The step body mirrors the python path — construct the step's
+    ``LPProblem`` (only ``c`` varies), ``canonicalize``, run the shared
+    lockstep loop (``simplex._iterate``), ``uncanonicalize`` — but the
+    warm start carries the previous step's TERMINAL TABLEAU, not just its
+    basis: the constraints never change across a sweep, so the carried
+    body rows stay valid verbatim and only the objective row needs
+    re-pricing for the new costs (``engine.phase2_objective``).  That
+    replaces the per-step ``B^-1 [b | A | I]`` rebuild (a batched
+    ``linalg.solve``) with one dot product — the same optimum, reached
+    from the same vertex, minus the rebuild cost.  LPs whose previous
+    step did not converge fall back to the cold two-phase start.
+    """
+
+    def body(carry, c_s):
+        prev_tab, prev_basis, warm = carry
+        prob = LPProblem(
+            c=c_s, a=a, bl=bl, bu=bu, lo=lo, hi=hi, basis0=None,
+            maximize=maximize, split=split, boxlike=False,
+            row_lower=row_lower, var_upper=var_upper,
+        )
+        canon = canonicalize(prob)
+        ac, bc, cc = canon.batch.a, canon.batch.b, canon.batch.c
+        m = ac.shape[1]
+        cold_tab, cold_basis, cold_phase = build_tableau(ac, bc, cc)
+        c_ext = _simplex._phase2_costs(cc, m)
+        # Re-price the carried tableau's objective row for this step's
+        # costs; body rows are reused as-is (same constraints).
+        warm_obj = _engine.phase2_objective(
+            prev_tab, prev_basis, c_ext, m, gather=True
+        )
+        warm_tab = prev_tab.at[:, m, :].set(warm_obj)
+        tab = jnp.where(warm[:, None, None], warm_tab, cold_tab)
+        basis = jnp.where(warm[:, None], prev_basis, cold_basis)
+        phase = jnp.where(warm, 2, cold_phase)
+        sol, state = _simplex._iterate(
+            tab, basis, phase, c_ext, _engine.phase1_feasibility_tol(bc),
+            cap, seed, rule=rule, unroll=unroll, tol=tol, static_cap=None,
+        )
+        out = uncanonicalize(canon, sol)
+        # Carry only states of LPs that actually converged; the rest
+        # cold-start next step (same gating as the python path).
+        nxt = (state.tab, state.basis, sol.status == OPTIMAL)
+        return nxt, (out.objective, sol.status, sol.iterations, warm.sum())
+
+    k = c_stack.shape[1]
+    prob0 = LPProblem(
+        c=c_stack[0], a=a, bl=bl, bu=bu, lo=lo, hi=hi, basis0=None,
+        maximize=maximize, split=split, boxlike=False,
+        row_lower=row_lower, var_upper=var_upper,
+    )
+    batch0 = canonicalize(prob0).batch
+    m1, q = batch0.m + 1, 1 + batch0.n + 2 * batch0.m
+    carry0 = (
+        jnp.zeros((k, m1, q), c_stack.dtype),
+        jnp.zeros((k, batch0.m), jnp.int32),
+        jnp.zeros((k,), bool),
+    )
+    _, (objs, statuses, iters, warm_counts) = jax.lax.scan(body, carry0, c_stack)
+    return objs, statuses, iters, warm_counts
+
+
+def sweep_compile_cache_size() -> int:
+    """Compiled sweep executables so far (the session observability hook)."""
+    return int(_sweep_jit._cache_size())
+
+
+def sweep_supported(options: SolveOptions) -> bool:
+    """Whether :func:`sweep_problems` can honor the given options.
+
+    The compiled sweep drives the XLA lockstep core directly, so it
+    covers exactly the configurations the plain python sweep would lower
+    to a single uncompacted ``xla`` dispatch per step.
+    """
+    return (
+        options.backend == "xla"
+        and options.compaction == "off"
+        and options.first_cap is None
+        and options.chunk_size is None
+        and options.dynamic_caps
+    )
+
+
+def sweep_problems(
+    template: LPProblem,
+    c_stack,
+    options: Optional[SolveOptions] = None,
+    stats: Optional[SolveStats] = None,
+):
+    """Warm-started sweep over problems differing only in their objective.
+
+    Parameters
+    ----------
+    template : LPProblem
+        The step-0 problem batch (any general form, batch K).  Every
+        step reuses its rows/bounds/static flags; only ``c`` changes.
+    c_stack : array_like
+        ``(S, K, n)`` per-step objectives (``c_stack[0]`` should equal
+        ``template.c`` for the usual sweep semantics, but any stack is
+        accepted).
+    options : SolveOptions, optional
+        Must satisfy :func:`sweep_supported`; defaults do.
+    stats : SolveStats, optional
+        Accumulates the same counters the per-step python path records —
+        per step: K LPs, one round, the step's simplex/lockstep
+        iterations, warm-started LPs — plus the sweep-level
+        ``compiles``/``cache_hits`` attribution.
+
+    Returns
+    -------
+    jnp.ndarray
+        ``(S, K)`` objective values in user coordinates.  Each step
+        reaches the same optimum as solving it through
+        :func:`repro.solve` with the previous step's basis, but from a
+        tableau carried verbatim rather than rebuilt from the basis, so
+        values can differ from the python path at float level (and, on a
+        degenerate optimum, a different optimal vertex may be reported).
+
+    Raises
+    ------
+    ValueError
+        If the options demand a configuration the compiled sweep cannot
+        honor (use the python path in ``Polytope.support_sweep`` then).
+    """
+    options = options or SolveOptions()
+    if not sweep_supported(options):
+        raise ValueError(
+            "sweep_problems supports the plain xla path only "
+            "(no compaction/two-pass/chunking); got incompatible options"
+        )
+    c_stack = jnp.asarray(c_stack, template.dtype)
+    canon0 = canonicalize(template)  # fixes the canonical shape (m', n')
+    k = template.batch
+    cap = _simplex.resolve_cap(options.max_iters, canon0.batch.m, canon0.batch.n)
+    tol = options.tolerance
+    if tol <= 0.0:
+        tol = _engine.default_tolerance(template.dtype)
+
+    before = sweep_compile_cache_size() if stats is not None else 0
+    objs, statuses, iters, warm_counts = _sweep_jit(
+        c_stack,
+        template.a, template.bl, template.bu, template.lo, template.hi,
+        jnp.int32(cap),
+        options.seed,
+        rule=options.rule,
+        unroll=options.unroll,
+        tol=tol,
+        maximize=template.maximize,
+        split=template.split,
+        row_lower=template.row_lower,
+        var_upper=template.var_upper,
+    )
+    if stats is not None:
+        stats.record_cache(before, sweep_compile_cache_size())
+        it = np.asarray(iters)
+        steps = it.shape[0]
+        stats.lps += steps * k
+        stats.rounds += steps
+        stats.simplex_iterations += int(it.sum())
+        stats.lockstep_iterations += int(it.max(axis=1).sum()) * k
+        stats.warm_started += int(np.asarray(warm_counts).sum())
+    return objs
+
+
+def sweep_polytope_supports(
+    a,
+    b,
+    direction_stack,
+    options: Optional[SolveOptions] = None,
+    stats: Optional[SolveStats] = None,
+):
+    """Support values of ``{x : Ax <= b, x free}`` over a direction sweep.
+
+    The compiled counterpart of ``Polytope.support_sweep``'s python loop:
+    one executable runs all S steps, carrying each step's optimal basis
+    into the next (see :func:`sweep_problems`).
+
+    Parameters
+    ----------
+    a, b : array_like
+        Polytope rows ``(m, n)`` and bounds ``(m,)``.
+    direction_stack : array_like
+        ``(S, K, n)`` direction batches, swept in order.
+    options, stats
+        As for :func:`sweep_problems`.
+
+    Returns
+    -------
+    jnp.ndarray
+        ``(S, K)`` support values.
+    """
+    direction_stack = np.asarray(direction_stack)
+    s, k, n = direction_stack.shape
+    a = np.asarray(a)
+    bu = np.asarray(b)
+    template = LPProblem.make(
+        c=direction_stack[0],
+        a=np.broadcast_to(a, (k, *a.shape)),
+        bu=np.broadcast_to(bu, (k, bu.shape[0])),
+        lo=-np.inf,
+        hi=np.inf,
+        dtype=direction_stack.dtype,
+    )
+    return sweep_problems(template, direction_stack, options, stats)

@@ -15,6 +15,15 @@ extraction — lives once in ``core/engine.py``, shared verbatim with the
 Pallas kernel (``kernels/simplex_pallas.py``).  The loop here only owns
 what is XLA-specific: the ``while_loop`` scaffolding, the unroll knob, and
 status/iteration bookkeeping.
+
+Compile-once dispatch: the iteration cap is a TRACED scalar, not a static
+argument — the geometric round caps of the compaction scheduler
+(``[k, 2k, 4k, ...]``) all execute the SAME compiled program per tableau
+shape.  Two jit entry points exist per shape: :func:`solve_batched` (cold
+start: build the tableau, iterate) and :func:`resume_batched` (continue a
+carried :class:`~repro.core.lp.ResumeState` exactly where a previous
+capped round stopped).  ``dynamic_cap=False`` restores the pre-traced
+behavior (one executable per distinct cap) as a benchmark baseline.
 """
 
 from __future__ import annotations
@@ -24,10 +33,20 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import engine
 from .engine import BLAND, LPC, RPC  # noqa: F401  (re-exported API)
-from .lp import ITER_LIMIT, LPBatch, LPSolution, RUNNING, UNBOUNDED, auto_cap, build_tableau
+from .lp import (
+    ITER_LIMIT,
+    LPBatch,
+    LPSolution,
+    RUNNING,
+    ResumeState,
+    UNBOUNDED,
+    auto_cap,
+    build_tableau,
+)
 
 
 class _State(NamedTuple):
@@ -39,81 +58,70 @@ class _State(NamedTuple):
     step: jnp.ndarray  # () int32
 
 
-@functools.partial(
-    jax.jit, static_argnames=("rule", "max_iters", "unroll", "tol")
-)
-def solve_batched(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    c: jnp.ndarray,
-    rule: str = LPC,
-    max_iters: int = 0,
-    seed: int = 0,
-    unroll: int = 1,
-    tol: float = 0.0,
-    basis0: Optional[jnp.ndarray] = None,
-) -> LPSolution:
-    """Solve a batch of LPs (max c.x, Ax <= b, x >= 0) in lockstep.
+def resolve_cap(max_iters, m: int, n: int):
+    """The host-side 0 -> auto rule, shared by both driver entry points."""
+    if isinstance(max_iters, (int, np.integer)):
+        return auto_cap(m, n) if max_iters <= 0 else int(max_iters)
+    return max_iters  # already a traced/array value
 
-    Args:
-      a, b, c: (B, m, n), (B, m), (B, n).
-      rule: "lpc" | "rpc" | "bland".
-      max_iters: simplex iteration cap across both phases
-        (default 50*(m+n), matching the oracle).
-      seed: RPC-rule noise seed (ignored by the deterministic rules).
-      unroll: while_loop body unroll factor (perf knob).
-      tol: reduced-cost/pivot tolerance (0 = dtype default).
-      basis0: optional (B, m) warm-start basis; feasible rows skip
-        phase I entirely (see ``build_tableau``).
 
-    The returned ``LPSolution.basis`` holds the final basis, reusable as
-    the next solve's ``basis0`` (warm-start sweeps, core/support.py).
+def _phase2_costs(c: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(B, q) extended phase-II cost row (zeros outside columns 1..n)."""
+    bsz, n = c.shape
+    q = 1 + n + 2 * m
+    return jnp.zeros((bsz, q), c.dtype).at[:, 1 : 1 + n].set(c)
+
+
+def _iterate(
+    tab, basis, phase, c_ext, feas_tol, cap, seed, *, rule, unroll, tol, static_cap
+):
+    """The lockstep iteration loop, shared by the cold and resume paths.
+
+    ``cap`` is a traced int32 scalar unless ``static_cap`` overrides it
+    with a trace-time constant (the ``dynamic_cap=False`` baseline).
+    Returns ``(LPSolution, ResumeState)`` — callers drop the state when
+    they don't need it.
     """
-    bsz, m, n = a.shape
-    if max_iters <= 0:
-        max_iters = auto_cap(m, n)
-    dtype = a.dtype
-    if tol <= 0.0:
-        tol = engine.default_tolerance(dtype)
+    m1 = tab.shape[1]
+    m = m1 - 1
+    n = (tab.shape[2] - 1 - 2 * m)
+    bsz = tab.shape[0]
+    dtype = tab.dtype
+    limit = static_cap if static_cap is not None else cap
 
-    tab, basis, phase = build_tableau(a, b, c, basis0)
-    q = tab.shape[-1]
-
-    elig = engine.eligible_mask(q, m, n)
-    c_ext = jnp.zeros((bsz, q), dtype).at[:, 1 : 1 + n].set(c)
-    feas_tol = engine.phase1_feasibility_tol(b)  # (B,)
+    elig = engine.eligible_mask(tab.shape[2], m, n)
 
     def cond(s: _State):
-        return (s.step < max_iters) & jnp.any(s.status == RUNNING)
+        return (s.step < limit) & jnp.any(s.status == RUNNING)
 
     def body(s: _State):
         active = s.status == RUNNING
         noise = (
-            engine.rpc_noise(seed, s.step, 0, bsz, q, dtype)
+            engine.rpc_noise(seed, s.step, 0, bsz, tab.shape[2], dtype)
             if rule == RPC
             else None
         )
         e, max_c = engine.select_entering(s.tab[:, m, :], elig, rule, tol, noise)
         at_opt = max_c <= tol
 
-        tab, phase, status = engine.phase_transition(
+        new_tab, new_phase, status = engine.phase_transition(
             s.tab, s.basis, s.phase, s.status, at_opt, c_ext, feas_tol, m,
             gather=True,
         )
 
         pivoting = active & ~at_opt
         l, min_ratio, full_col = engine.ratio_test(
-            tab, s.basis, e, m, n, tol, gather=True
+            new_tab, s.basis, e, m, n, tol, gather=True
         )
         unbounded = pivoting & (min_ratio >= engine.BIG / 2)
         status = jnp.where(unbounded, UNBOUNDED, status)
         do_pivot = pivoting & ~unbounded
 
-        tab, basis = engine.pivot_update(
-            tab, s.basis, e, l, full_col, do_pivot, m, tol, gather=True
+        new_tab, new_basis = engine.pivot_update(
+            new_tab, s.basis, e, l, full_col, do_pivot, m, tol, gather=True
         )
         iters = s.iters + do_pivot.astype(jnp.int32)
-        return _State(tab, basis, phase, status, iters, s.step + 1)
+        return _State(new_tab, new_basis, new_phase, status, iters, s.step + 1)
 
     init = _State(
         tab=tab,
@@ -139,12 +147,151 @@ def solve_batched(
     objective, x = engine.extract_solution(
         final.tab, final.basis, status, m, n, fill=-jnp.inf
     )
-    return LPSolution(
+    sol = LPSolution(
         objective=objective,
         x=x,
         status=status,
         iterations=final.iters,
         basis=final.basis,
+    )
+    return sol, ResumeState(final.tab, final.basis, final.phase)
+
+
+def solve_traced(
+    a, b, c, basis0, cap, seed, *, rule, unroll, tol, static_cap=None
+):
+    """Pure traced cold solve: build the tableau, then iterate.
+
+    The un-jitted composition shared by :func:`solve_batched` and the
+    compiled sweep session (``core/session.py``), so both produce
+    identical arithmetic.  ``tol`` must already be resolved (> 0) and
+    ``cap`` is a traced scalar (or ``static_cap`` a constant).
+    Returns ``(LPSolution, ResumeState)``.
+    """
+    m = a.shape[1]
+    tab, basis, phase = build_tableau(a, b, c, basis0)
+    c_ext = _phase2_costs(c, m)
+    feas_tol = engine.phase1_feasibility_tol(b)
+    return _iterate(
+        tab, basis, phase, c_ext, feas_tol, cap, seed,
+        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rule", "unroll", "tol", "want_state", "static_cap")
+)
+def _solve_jit(a, b, c, basis0, cap, seed, *, rule, unroll, tol, want_state, static_cap):
+    sol, state = solve_traced(
+        a, b, c, basis0, cap, seed,
+        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+    )
+    return (sol, state) if want_state else sol
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rule", "unroll", "tol", "want_state", "static_cap")
+)
+def _resume_jit(b, c, state, cap, seed, *, rule, unroll, tol, want_state, static_cap):
+    m = state.basis.shape[1]
+    c_ext = _phase2_costs(c, m)
+    feas_tol = engine.phase1_feasibility_tol(b)
+    sol, out_state = _iterate(
+        state.tab, state.basis, state.phase, c_ext, feas_tol, cap, seed,
+        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+    )
+    return (sol, out_state) if want_state else sol
+
+
+def compile_cache_size() -> int:
+    """Number of XLA-driver executables compiled so far (cold + resume).
+
+    The observability hook behind ``SolveStats.compiles`` /
+    ``SolveStats.cache_hits`` for the ``xla`` backend: the dispatch layer
+    reads it before and after each backend call and attributes the delta.
+    """
+    return int(_solve_jit._cache_size()) + int(_resume_jit._cache_size())
+
+
+def solve_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    rule: str = LPC,
+    max_iters: int = 0,
+    seed: int = 0,
+    unroll: int = 1,
+    tol: float = 0.0,
+    basis0: Optional[jnp.ndarray] = None,
+    want_state: bool = False,
+    dynamic_cap: bool = True,
+) -> LPSolution:
+    """Solve a batch of LPs (max c.x, Ax <= b, x >= 0) in lockstep.
+
+    Args:
+      a, b, c: (B, m, n), (B, m), (B, n).
+      rule: "lpc" | "rpc" | "bland".
+      max_iters: simplex iteration cap across both phases
+        (default 50*(m+n), matching the oracle).  Passed to the compiled
+        program as a TRACED scalar: different caps over the same tableau
+        shape reuse one executable (the compile-once dispatch contract).
+      seed: RPC-rule noise seed (ignored by the deterministic rules).
+      unroll: while_loop body unroll factor (perf knob).
+      tol: reduced-cost/pivot tolerance (0 = dtype default).
+      basis0: optional (B, m) warm-start basis; feasible rows skip
+        phase I entirely (see ``build_tableau``).
+      want_state: also return the terminal :class:`ResumeState` —
+        ``(LPSolution, ResumeState)`` — for round-resumed dispatch.
+      dynamic_cap: False re-specializes the executable on the concrete
+        cap value (the pre-compile-once behavior; benchmark baseline).
+
+    The returned ``LPSolution.basis`` holds the final basis, reusable as
+    the next solve's ``basis0`` (warm-start sweeps, core/support.py).
+    """
+    bsz, m, n = a.shape
+    cap = resolve_cap(max_iters, m, n)
+    if tol <= 0.0:
+        tol = engine.default_tolerance(a.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    return _solve_jit(
+        a, b, c, basis0, jnp.int32(cap if dynamic_cap else 0), seed,
+        rule=rule, unroll=unroll, tol=tol,
+        want_state=want_state, static_cap=static_cap,
+    )
+
+
+def resume_batched(
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    state: ResumeState,
+    rule: str = LPC,
+    max_iters: int = 0,
+    seed: int = 0,
+    unroll: int = 1,
+    tol: float = 0.0,
+    want_state: bool = True,
+    dynamic_cap: bool = True,
+):
+    """Continue a batch from a carried :class:`ResumeState`.
+
+    ``b``/``c`` are the same canonical arrays the interrupted solve used
+    (they re-derive the phase-II costs and the phase-I feasibility
+    threshold bit-identically); ``max_iters`` is the ADDITIONAL step
+    budget for this round.  Returns ``(LPSolution, ResumeState)`` when
+    ``want_state``, else just the solution.  Because the carried state is
+    exact, a sequence of resumed rounds whose budgets sum to ``K`` ends
+    bit-identical to one uninterrupted solve with cap ``K``.
+    """
+    m = state.basis.shape[1]
+    n = c.shape[-1]
+    cap = resolve_cap(max_iters, m, n)
+    if tol <= 0.0:
+        tol = engine.default_tolerance(state.tab.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    return _resume_jit(
+        b, c, state, jnp.int32(cap if dynamic_cap else 0), seed,
+        rule=rule, unroll=unroll, tol=tol,
+        want_state=want_state, static_cap=static_cap,
     )
 
 

@@ -24,6 +24,7 @@ import numpy as np
 
 from . import dispatch as _dispatch
 from . import hyperbox as _hyperbox
+from . import session as _session
 from .backends import SolveOptions, SolveStats
 from .lp import LPBatch, LPSolution, OPTIMAL
 from .problem import LPProblem, canonicalize, uncanonicalize
@@ -38,13 +39,25 @@ class Box:
     def dim(self) -> int:
         return int(np.asarray(self.lo).shape[-1])
 
-    def support(self, directions, options: Optional[SolveOptions] = None):
-        """rho_B(l) for each row of directions: (K, n) -> (K,)."""
+    def support(
+        self,
+        directions,
+        options: Optional[SolveOptions] = None,
+        stats: Optional[SolveStats] = None,
+    ):
+        """rho_B(l) for each row of directions: (K, n) -> (K,).
+
+        ``stats`` records the box LPs (paper-style "No. of LPs"
+        accounting counts the closed-form solves too); every backend
+        routes through ``dispatch.solve_hyperbox`` when it is supplied.
+        """
         directions = jnp.asarray(directions)
         lo = jnp.broadcast_to(jnp.asarray(self.lo), directions.shape)
         hi = jnp.broadcast_to(jnp.asarray(self.hi), directions.shape)
-        if options is not None and options.backend != "xla":
-            return _dispatch.solve_hyperbox(lo, hi, directions, options).objective
+        if stats is not None or (options is not None and options.backend != "xla"):
+            return _dispatch.solve_hyperbox(
+                lo, hi, directions, options, stats=stats
+            ).objective
         return _hyperbox.support(lo, hi, directions)
 
 
@@ -142,11 +155,28 @@ class Polytope:
         Returns
         -------
         jnp.ndarray
-            ``(S, K)`` support values, identical to solving every step
-            cold (a warm basis changes the starting point of the search,
-            never the optimum).
+            ``(S, K)`` support values — the same optima as solving every
+            step cold (a warm start changes the starting point of the
+            search, never the optimum), agreeing to solver tolerance;
+            a warm search may stop at a different vertex of a non-unique
+            optimum.
+
+        Notes
+        -----
+        When the options lower to the plain ``xla`` path (the default),
+        the sweep runs through the compiled sweep session
+        (``core/session.py:sweep_problems``): ONE executable executes all
+        S steps with the basis carried on-device, so a steady-state sweep
+        pays zero compiles and zero per-step dispatch overhead.  Other
+        configurations fall back to the per-step python loop below.
         """
         direction_stack = np.asarray(direction_stack)
+        opts = options or SolveOptions()
+        if warm_start and _session.sweep_supported(opts):
+            template = self.to_problem(direction_stack[0])
+            return _session.sweep_problems(
+                template, direction_stack, opts, stats=stats
+            )
         outs = []
         basis = None
         for dirs in direction_stack:

@@ -2,6 +2,13 @@
 
 ``interpret`` defaults to True off-TPU so the kernels execute (and are
 tested) on CPU; on a TPU backend the same calls compile through Mosaic.
+
+The simplex wrappers follow the compile-once dispatch contract: the
+iteration cap is a traced kernel input (see ``simplex_pallas.py``), so
+:func:`simplex_solve` calls with different ``max_iters`` over one shape
+share one executable, and :func:`simplex_resume` continues a carried
+``ResumeState`` exactly (padding re-applied here, stripped on the way
+out).
 """
 
 from __future__ import annotations
@@ -12,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core import engine
-from ..core.lp import LPSolution, auto_cap, build_tableau, num_cols
+from ..core.lp import LPSolution, ResumeState, build_tableau, num_cols
+from ..core.simplex import resolve_cap
 from .hyperbox_pallas import hyperbox_pallas
 from .simplex_pallas import simplex_pallas
 
@@ -25,9 +33,141 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def _pad_shapes(bsz: int, m: int, n: int, tile_b: int):
+    q = num_cols(m, n)
+    return (
+        _round_up(q, 128),
+        _round_up(m + 1, 8),
+        _round_up(m, 8),
+        _round_up(n, 128),
+        _round_up(bsz, tile_b),
+    )
+
+
+def _pad_launch_inputs(tab, basis, phase, b, c, m: int, n: int, tile_b: int):
+    """Tile/lane-pad an unpadded (tableau, basis, phase) triple + costs.
+
+    Shared by the cold and resume entry points so a resumed round re-pads
+    the carried state exactly the way the cold launch padded its tableau:
+    padded batch entries are trivially optimal empty LPs (phase 2, zero
+    objective row), padded lanes/sublanes are zero.
+    """
+    bsz = tab.shape[0]
+    q = num_cols(m, n)
+    dtype = tab.dtype
+    qp, m1p, mp, np_pad, bp = _pad_shapes(bsz, m, n, tile_b)
+
+    tab_p = jnp.zeros((bp, m1p, qp), dtype)
+    # Keep the objective row at index m (kernel uses static m); padding rows
+    # sit AFTER it and stay zero (never selected: their pivot column is 0).
+    tab_p = tab_p.at[:bsz, : m + 1, :q].set(tab)
+    basis_p = jnp.zeros((bp, mp), jnp.int32).at[:bsz, :m].set(basis)
+    phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(phase)
+    c_ext = jnp.zeros((bp, qp), dtype).at[:bsz, 1 : 1 + n].set(c)
+    feas = engine.phase1_feasibility_tol(b).astype(dtype)
+    feas_p = jnp.ones((bp,), dtype).at[:bsz].set(feas)
+    return tab_p, basis_p, phase_p, c_ext, feas_p, np_pad
+
+
+def _launch(
+    tab_p, basis_p, phase_p, c_ext, feas_p, cap, *,
+    bsz, m, n, np_pad, rule, seed, tile_b, tol, static_cap, want_state, interpret,
+):
+    """Run the kernel and strip the padding off every output."""
+    outs = simplex_pallas(
+        tab_p,
+        basis_p,
+        phase_p,
+        c_ext,
+        feas_p,
+        cap,
+        m=m,
+        n=n,
+        n_padded=np_pad,
+        rule=rule,
+        seed=seed,
+        tile_b=tile_b,
+        tol=tol,
+        static_cap=static_cap,
+        want_state=want_state,
+        interpret=interpret,
+    )
+    obj, x, status, iters, basis_out = outs[:5]
+    dtype = tab_p.dtype
+    neg_inf = jnp.asarray(-jnp.inf, dtype)
+    objective = jnp.where(status[:bsz] == 1, obj[:bsz], neg_inf)
+    sol = LPSolution(
+        objective=objective,
+        x=x[:bsz, :n],
+        status=status[:bsz],
+        iterations=iters[:bsz],
+        basis=basis_out[:bsz, :m],
+    )
+    if not want_state:
+        return sol
+    tab_out, phase_out = outs[5:]
+    q = num_cols(m, n)
+    state = ResumeState(
+        tab=tab_out[:bsz, : m + 1, :q],
+        basis=basis_out[:bsz, :m],
+        phase=phase_out[:bsz],
+    )
+    return sol, state
+
+
 @functools.partial(
-    jax.jit, static_argnames=("rule", "max_iters", "seed", "tol", "tile_b", "interpret")
+    jax.jit,
+    static_argnames=(
+        "rule", "seed", "tol", "tile_b", "static_cap", "want_state", "interpret"
+    ),
 )
+def _solve_jit(
+    a, b, c, basis0, cap, *,
+    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+):
+    bsz, m, n = a.shape
+    tab, basis, phase = build_tableau(a, b, c, basis0)
+    tab_p, basis_p, phase_p, c_ext, feas_p, np_pad = _pad_launch_inputs(
+        tab, basis, phase, b, c, m, n, tile_b
+    )
+    return _launch(
+        tab_p, basis_p, phase_p, c_ext, feas_p, cap,
+        bsz=bsz, m=m, n=n, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
+        tol=tol, static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rule", "seed", "tol", "tile_b", "static_cap", "want_state", "interpret"
+    ),
+)
+def _resume_jit(
+    b, c, state, cap, *,
+    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+):
+    bsz, m = state.basis.shape
+    n = c.shape[-1]
+    tab_p, basis_p, phase_p, c_ext, feas_p, np_pad = _pad_launch_inputs(
+        state.tab, state.basis, state.phase, b, c, m, n, tile_b
+    )
+    return _launch(
+        tab_p, basis_p, phase_p, c_ext, feas_p, cap,
+        bsz=bsz, m=m, n=n, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
+        tol=tol, static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+def compile_cache_size() -> int:
+    """Pallas-driver executables compiled so far (cold + resume paths).
+
+    The ``pallas`` backend's hook behind ``SolveStats.compiles`` /
+    ``SolveStats.cache_hits``.
+    """
+    return int(_solve_jit._cache_size()) + int(_resume_jit._cache_size())
+
+
 def simplex_solve(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -39,7 +179,9 @@ def simplex_solve(
     tile_b: int = 8,
     interpret: bool | None = None,
     basis0: jnp.ndarray | None = None,
-) -> LPSolution:
+    want_state: bool = False,
+    dynamic_cap: bool = True,
+):
     """Solve a batch of LPs with the VMEM-resident Pallas kernel.
 
     a: (B, m, n), b: (B, m), c: (B, n); returns LPSolution like the core
@@ -52,60 +194,59 @@ def simplex_solve(
     (B, m) warm-start basis — handled host-of-kernel in ``build_tableau``,
     so warm rows enter the kernel already in phase II; the final basis
     comes back in ``LPSolution.basis`` for reuse.
+
+    ``max_iters`` is a traced kernel scalar: calls with different caps over
+    one shape share one executable (``dynamic_cap=False`` restores the
+    cap-specialized baseline).  ``want_state`` additionally returns the
+    exact terminal :class:`ResumeState` for :func:`simplex_resume`.
     """
     if interpret is None:
         interpret = not _on_tpu()
     bsz, m, n = a.shape
-    if max_iters <= 0:
-        max_iters = auto_cap(m, n)
-    q = num_cols(m, n)
-    dtype = a.dtype
+    cap = resolve_cap(max_iters, m, n)
     if tol <= 0.0:
-        tol = engine.default_tolerance(dtype)
-
-    tab, basis, phase = build_tableau(a, b, c, basis0)
-
-    qp = _round_up(q, 128)
-    m1p = _round_up(m + 1, 8)
-    mp = _round_up(m, 8)
-    np_pad = _round_up(n, 128)
-    bp = _round_up(bsz, tile_b)
-
-    tab_p = jnp.zeros((bp, m1p, qp), dtype)
-    # Keep the objective row at index m (kernel uses static m); padding rows
-    # sit AFTER it and stay zero (never selected: their pivot column is 0).
-    tab_p = tab_p.at[:bsz, : m + 1, :q].set(tab)
-    basis_p = jnp.zeros((bp, mp), jnp.int32).at[:bsz, :m].set(basis)
-    # Padded batch entries: trivially optimal empty LPs (phase 2, zero obj).
-    phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(phase)
-    c_ext = jnp.zeros((bp, qp), dtype).at[:bsz, 1 : 1 + n].set(c)
-    feas = engine.phase1_feasibility_tol(b).astype(dtype)
-    feas_p = jnp.ones((bp,), dtype).at[:bsz].set(feas)
-
-    obj, x, status, iters, basis_out = simplex_pallas(
-        tab_p,
-        basis_p,
-        phase_p,
-        c_ext,
-        feas_p,
-        m=m,
-        n=n,
-        n_padded=np_pad,
-        max_iters=max_iters,
-        rule=rule,
-        seed=seed,
-        tile_b=tile_b,
-        tol=tol,
-        interpret=interpret,
+        tol = engine.default_tolerance(a.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _solve_jit(
+        a, b, c, basis0, cap_arr,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
-    neg_inf = jnp.asarray(-jnp.inf, dtype)
-    objective = jnp.where(status[:bsz] == 1, obj[:bsz], neg_inf)
-    return LPSolution(
-        objective=objective,
-        x=x[:bsz, :n],
-        status=status[:bsz],
-        iterations=iters[:bsz],
-        basis=basis_out[:bsz, :m],
+
+
+def simplex_resume(
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    state: ResumeState,
+    rule: str = engine.LPC,
+    max_iters: int = 0,
+    seed: int = 0,
+    tol: float = 0.0,
+    tile_b: int = 8,
+    interpret: bool | None = None,
+    want_state: bool = True,
+    dynamic_cap: bool = True,
+):
+    """Continue a batch from a carried :class:`ResumeState` in the kernel.
+
+    The state round-trips through the same padding the cold launch uses,
+    so a sequence of resumed rounds whose step budgets sum to ``K`` is
+    bit-identical to one uninterrupted kernel run with cap ``K``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m = state.basis.shape[1]
+    n = c.shape[-1]
+    cap = resolve_cap(max_iters, m, n)
+    if tol <= 0.0:
+        tol = engine.default_tolerance(state.tab.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _resume_jit(
+        b, c, state, cap_arr,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 
 

@@ -20,11 +20,20 @@ the kernel body drives ``core/engine.py``, the same building blocks the
 XLA lockstep path uses.  The engine is written in broadcasted-iota +
 one-hot form, which lowers to VPU-friendly selects under Mosaic, so the
 kernel and the XLA path agree bit-for-bit under deterministic rules.
+
+Compile-once dispatch: the iteration cap enters the kernel as a SCALAR
+INPUT (``cap_ref``, like ``feas_ref``), not a trace-time constant — the
+compaction scheduler's geometric round caps all run the one compiled
+kernel per tableau shape.  ``static_cap`` restores the old cap-specialized
+lowering as a benchmark baseline, and ``want_state`` adds tableau/phase
+outputs so an interrupted round can be resumed exactly
+(``core/lp.py:ResumeState``).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,18 +51,20 @@ def _kernel(
     phase_ref,  # (TB,) i32 VMEM
     cext_ref,  # (TB, Qp) f32 VMEM — phase-II costs
     feas_ref,  # (TB,) f32 VMEM — per-LP phase-I feasibility threshold
+    cap_ref,  # (1,) i32 — iteration cap (scalar input: compile-once caps)
     obj_ref,  # out (TB,) f32
     x_ref,  # out (TB, Np) f32
     status_ref,  # out (TB,) i32
     iters_ref,  # out (TB,) i32
     basis_out_ref,  # out (TB, Mp) i32 — final basis (warm-start reuse)
-    *,
+    *state_out_refs,  # want_state: out (TB, M1p, Qp) f32 tab, (TB,) i32 phase
     m: int,
     n: int,
     rule: str,
     seed: int,
-    max_iters: int,
     tol: float,
+    static_cap: Optional[int],
+    want_state: bool,
 ):
     tb = tab_ref.shape[0]
     qp = tab_ref.shape[2]
@@ -64,6 +75,7 @@ def _kernel(
     c_ext = cext_ref[...]
     feas_tol = feas_ref[...]
     dtype = tab.dtype
+    limit = static_cap if static_cap is not None else cap_ref[0]
 
     elig = engine.eligible_mask(qp, m, n)  # padded lanes never enter
     # Global row base of this tile: keys the RPC noise so the draw is
@@ -103,7 +115,7 @@ def _kernel(
 
     def cond(state):
         _, _, _, status, _, step = state
-        return jnp.logical_and(step < max_iters, jnp.any(status == RUNNING))
+        return jnp.logical_and(step < limit, jnp.any(status == RUNNING))
 
     status0 = jnp.full((tb,), RUNNING, jnp.int32)
     iters0 = jnp.zeros((tb,), jnp.int32)
@@ -128,6 +140,10 @@ def _kernel(
     if mp > m:
         basis_out_ref[:, m:] = jnp.zeros((tb, mp - m), jnp.int32)
     basis_out_ref[:, :m] = basis
+    if want_state:
+        tab_out_ref, phase_out_ref = state_out_refs
+        tab_out_ref[...] = tab
+        phase_out_ref[...] = phase
 
 
 def simplex_pallas(
@@ -136,25 +152,63 @@ def simplex_pallas(
     phase: jnp.ndarray,  # (B,) int32
     c_ext: jnp.ndarray,  # (B, Qp)
     feas_tol: jnp.ndarray,  # (B,) phase-I feasibility threshold
+    cap: jnp.ndarray,  # (1,) int32 iteration cap (traced scalar input)
     *,
     m: int,
     n: int,
     n_padded: int,
-    max_iters: int,
     rule: str = engine.LPC,
     seed: int = 0,
     tile_b: int = 8,
     tol: float = 1e-5,
+    static_cap: Optional[int] = None,
+    want_state: bool = False,
     interpret: bool = False,
 ):
-    """Launch the VMEM-resident simplex kernel over batch tiles."""
+    """Launch the VMEM-resident simplex kernel over batch tiles.
+
+    ``cap`` rides in as a (1,) scalar input shared by every tile;
+    ``static_cap`` (a trace-time int) overrides it for the cap-specialized
+    baseline.  With ``want_state`` the kernel also writes the terminal
+    tableau and phase (padded) so a capped round can be resumed exactly.
+    """
     bsz, m1p, qp = tab.shape
     assert bsz % tile_b == 0, (bsz, tile_b)
     grid = (bsz // tile_b,)
 
     kernel = functools.partial(
-        _kernel, m=m, n=n, rule=rule, seed=seed, max_iters=max_iters, tol=tol
+        _kernel,
+        m=m,
+        n=n,
+        rule=rule,
+        seed=seed,
+        tol=tol,
+        static_cap=static_cap,
+        want_state=want_state,
     )
+    out_specs = [
+        pl.BlockSpec((tile_b,), lambda i: (i,)),
+        pl.BlockSpec((tile_b, n_padded), lambda i: (i, 0)),
+        pl.BlockSpec((tile_b,), lambda i: (i,)),
+        pl.BlockSpec((tile_b,), lambda i: (i,)),
+        pl.BlockSpec((tile_b, basis.shape[1]), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz,), tab.dtype),
+        jax.ShapeDtypeStruct((bsz, n_padded), tab.dtype),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, basis.shape[1]), jnp.int32),
+    ]
+    if want_state:
+        out_specs += [
+            pl.BlockSpec((tile_b, m1p, qp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((bsz, m1p, qp), tab.dtype),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ]
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -164,20 +218,9 @@ def simplex_pallas(
             pl.BlockSpec((tile_b,), lambda i: (i,)),
             pl.BlockSpec((tile_b, qp), lambda i: (i, 0)),
             pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
         ],
-        out_specs=[
-            pl.BlockSpec((tile_b,), lambda i: (i,)),
-            pl.BlockSpec((tile_b, n_padded), lambda i: (i, 0)),
-            pl.BlockSpec((tile_b,), lambda i: (i,)),
-            pl.BlockSpec((tile_b,), lambda i: (i,)),
-            pl.BlockSpec((tile_b, basis.shape[1]), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bsz,), tab.dtype),
-            jax.ShapeDtypeStruct((bsz, n_padded), tab.dtype),
-            jax.ShapeDtypeStruct((bsz,), jnp.int32),
-            jax.ShapeDtypeStruct((bsz,), jnp.int32),
-            jax.ShapeDtypeStruct((bsz, basis.shape[1]), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(tab, basis, phase, c_ext, feas_tol)
+    )(tab, basis, phase, c_ext, feas_tol, cap)

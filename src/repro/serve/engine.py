@@ -15,11 +15,11 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .. import api
-from ..core.backends import SolveOptions
+from ..core.backends import SolveOptions, SolveStats
 from ..core.bucketing import ShapeGrid
 from ..core.lp import LPSolution
 from ..core.problem import LPProblem
+from ..core.session import SolveSession
 from ..models.model import Model
 
 
@@ -72,8 +72,14 @@ class LPEngine:
 
     Requests (general-form ``LPProblem``s, any shapes) accumulate until
     ``flush_every`` are pending or ``flush()`` is called; each flush is one
-    ``repro.solve(list)`` call — shape-bucketed megabatches under the hood.
-    Ticket numbers map responses back to callers in submission order.
+    solve through a persistent :class:`~repro.core.session.SolveSession` —
+    shape-bucketed megabatches under the hood.  Because the session pins
+    the options and the bucketing pins power-of-two shape classes, a
+    warmed-up engine compiles nothing on the steady-state path; the
+    session's ``stats`` (``engine.stats``) expose the
+    ``compiles``/``cache_hits`` trajectory alongside the LP/iteration
+    counters.  Ticket numbers map responses back to callers in submission
+    order.
     """
 
     def __init__(
@@ -82,14 +88,23 @@ class LPEngine:
         flush_every: int = 256,
         grid: Optional[ShapeGrid] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
+        stats: Optional[SolveStats] = None,
     ):
         self.options = options or SolveOptions()
         self.flush_every = flush_every
         self.grid = grid
         self.mesh = mesh
+        self.session = SolveSession(
+            self.options, mesh=mesh, grid=grid, stats=stats
+        )
         self._pending: List[Tuple[int, LPProblem]] = []
         self._results: Dict[int, LPSolution] = {}
         self._next_ticket = 0
+
+    @property
+    def stats(self) -> SolveStats:
+        """Cumulative counters for every flush this engine performed."""
+        return self.session.stats
 
     def submit(self, problem: LPProblem) -> int:
         """Queue one request; returns a ticket redeemable after a flush."""
@@ -106,9 +121,7 @@ class LPEngine:
             return 0
         tickets = [t for t, _ in self._pending]
         problems = [p for _, p in self._pending]
-        sols = api.solve(
-            problems, self.options, mesh=self.mesh, grid=self.grid
-        )
+        sols = self.session.solve(problems)
         # Clear only after the solve succeeds: a raising solve (bad problem,
         # backend error) must not silently drop the other queued requests.
         self._pending = []

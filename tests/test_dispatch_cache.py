@@ -1,0 +1,331 @@
+"""Compile-once dispatch, pow-2 round padding, and basis-resume tests.
+
+The ISSUE-4 acceptance surface:
+
+* resume="basis" continues survivors from exact carried state, so its
+  results — objectives, primal points, statuses AND per-LP iteration
+  counts — are bit-identical to resume="scratch" and compaction="off",
+  on both accelerated backends;
+* iteration caps are traced scalars and gathered sub-batches round up to
+  power-of-two size classes, so a multi-round every_k solve and a long
+  support sweep each compile the solver exactly once per shape bucket
+  (asserted through the drivers' compile-cache hooks);
+* the pow-2 padding rows never leak into results or SolveStats.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro import SolveOptions, SolveStats
+from repro.core import dispatch, lp, session, simplex, support
+from repro.core.lp import LPBatch
+
+
+def _mixed_batch(dtype=np.float64) -> LPBatch:
+    """Feasible-start + infeasible-start + unbounded + infeasible LPs.
+
+    Same recipe as tests/test_compaction.py: one (m=12, n=6) shape with
+    strongly skewed iteration counts, so compaction rounds actually
+    trigger and every terminal status is exercised.
+    """
+    rng = np.random.default_rng(42)
+    m, n = 12, 6
+    easy = lp.random_lp_batch(rng, 24, m, n, True, dtype=dtype)
+    hard = lp.random_lp_batch(rng, 8, m, n, False, dtype=dtype)
+
+    a_unb = -np.abs(rng.uniform(0.1, 1.0, size=(2, m, n)))
+    b_unb = np.ones((2, m))
+    c_unb = np.abs(rng.uniform(0.1, 1.0, size=(2, n)))
+
+    a_inf = np.zeros((2, m, n))
+    b_inf = np.ones((2, m))
+    a_inf[:, 0, 0] = 1.0
+    b_inf[:, 0] = 1.0
+    a_inf[:, 1, 0] = -1.0
+    b_inf[:, 1] = -3.0
+    c_inf = np.ones((2, n))
+
+    return LPBatch(
+        np.concatenate([easy.a, hard.a, a_unb, a_inf]).astype(dtype),
+        np.concatenate([easy.b, hard.b, b_unb, b_inf]).astype(dtype),
+        np.concatenate([easy.c, hard.c, c_unb, c_inf]).astype(dtype),
+    )
+
+
+def _assert_bit_identical(ref, sol, iterations=True):
+    assert np.array_equal(np.asarray(ref.status), np.asarray(sol.status))
+    np.testing.assert_array_equal(
+        np.asarray(ref.objective), np.asarray(sol.objective)
+    )
+    np.testing.assert_array_equal(np.asarray(ref.x), np.asarray(sol.x))
+    if iterations:
+        np.testing.assert_array_equal(
+            np.asarray(ref.iterations), np.asarray(sol.iterations)
+        )
+
+
+# ---------------------------------------------------------------------------
+# (a) resume="basis" bit-identity across backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_resume_modes_bit_identical(backend):
+    batch = _mixed_batch()
+    off = repro.solve(batch, SolveOptions(backend=backend))
+    st = np.asarray(off.status)
+    assert (st == lp.OPTIMAL).any()
+    assert (st == lp.UNBOUNDED).any()
+    assert (st == lp.INFEASIBLE).any()
+
+    scratch = repro.solve(
+        batch,
+        SolveOptions(
+            backend=backend, compaction="every_k", compact_every=8,
+            resume="scratch",
+        ),
+    )
+    basis = repro.solve(
+        batch,
+        SolveOptions(
+            backend=backend, compaction="every_k", compact_every=8,
+            resume="basis",
+        ),
+    )
+    _assert_bit_identical(off, scratch)
+    # Exact state carry: even the per-LP iteration counts match "off".
+    _assert_bit_identical(off, basis)
+    _assert_bit_identical(scratch, basis)
+
+
+@pytest.mark.parametrize("mode", ["chunked", "every_k"])
+def test_resume_basis_with_chunking_bit_identical(mode):
+    batch = _mixed_batch()
+    off = repro.solve(batch)
+    sol = repro.solve(
+        batch,
+        SolveOptions(
+            compaction=mode, compact_every=8, chunk_size=16, resume="basis"
+        ),
+    )
+    _assert_bit_identical(off, sol)
+
+
+def test_resume_basis_reduces_lockstep_work():
+    batch = _mixed_batch()
+    scratch, basis = SolveStats(), SolveStats()
+    opts = SolveOptions(compaction="every_k", compact_every=8)
+    repro.solve(batch, opts, stats=scratch)
+    repro.solve(batch, opts.replace(resume="basis"), stats=basis)
+    # Resumed rounds never replay pivots, so total lockstep work shrinks
+    # and every re-dispatched LP is counted as resumed.
+    assert basis.lockstep_iterations < scratch.lockstep_iterations
+    assert basis.resumed > 0
+    assert scratch.resumed == 0
+
+
+def test_resume_basis_on_reference_backend_falls_back_to_scratch():
+    batch = _mixed_batch()
+    off = repro.solve(batch, SolveOptions(backend="reference"))
+    sol = repro.solve(
+        batch,
+        SolveOptions(
+            backend="reference", compaction="every_k", compact_every=8,
+            resume="basis",
+        ),
+    )
+    # The oracle has no state protocol; results still match "off".
+    assert np.array_equal(np.asarray(off.status), np.asarray(sol.status))
+    np.testing.assert_array_equal(
+        np.asarray(off.objective), np.asarray(sol.objective)
+    )
+
+
+def test_unknown_resume_mode_raises():
+    with pytest.raises(ValueError, match="resume"):
+        SolveOptions(resume="sometimes")
+
+
+def test_resume_basis_with_unroll_falls_back_to_scratch():
+    # unroll groups loop steps; a mid-round split would change the total
+    # step count, so basis-resume must fall back to scratch rounds.
+    batch = _mixed_batch()
+    off = repro.solve(batch, SolveOptions(unroll=2))
+    stats = SolveStats()
+    sol = repro.solve(
+        batch,
+        SolveOptions(
+            unroll=2, compaction="every_k", compact_every=8, resume="basis"
+        ),
+        stats=stats,
+    )
+    _assert_bit_identical(off, sol)
+    assert stats.resumed == 0  # scratch fallback: no state was carried
+
+
+# ---------------------------------------------------------------------------
+# (b) trace counts: one compile per shape bucket
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("resume", ["scratch", "basis"])
+def test_every_k_compiles_once_per_shape_bucket(backend, resume):
+    from repro.core.backends import get_backend
+
+    batch = _mixed_batch()
+    opts = SolveOptions(
+        backend=backend, compaction="every_k", compact_every=8, resume=resume
+    )
+    plan, _ = dispatch._round_plan(batch, opts, incremental=(resume == "basis"))
+    assert len(plan) >= 3  # the fixture really is a multi-round solve
+
+    warm_stats = SolveStats()
+    repro.solve(batch, opts, stats=warm_stats)  # absorb per-shape compiles
+
+    cache_size = get_backend(backend).cache_size
+    steady = SolveStats()
+    before = cache_size()
+    repro.solve(batch, opts, stats=steady)
+    # Dynamic caps: rounds 2.. reuse round 1's executable (same pow-2
+    # size class), and a repeat solve compiles NOTHING anywhere.
+    assert cache_size() == before
+    assert steady.compiles == 0
+    assert steady.cache_hits == steady.rounds
+
+
+def test_static_caps_baseline_recompiles_per_cap():
+    batch = _mixed_batch()
+    static8 = SolveOptions(
+        compaction="every_k", compact_every=8, dynamic_caps=False
+    )
+    repro.solve(batch, static8)
+    before = simplex.compile_cache_size()
+    repro.solve(batch, static8)  # identical caps: fully cached
+    assert simplex.compile_cache_size() == before
+    # A different compact_every changes every round cap: the static-cap
+    # baseline must mint new executables even at identical shapes...
+    repro.solve(batch, static8.replace(compact_every=9))
+    assert simplex.compile_cache_size() > before
+    # ...while under dynamic caps the cap value is not part of the cache
+    # key at all: once a cap schedule's shape classes are warm, rerunning
+    # it compiles nothing.
+    dyn9 = SolveOptions(compaction="every_k", compact_every=9)
+    repro.solve(batch, dyn9)  # may add new pow-2 classes, once
+    before = simplex.compile_cache_size()
+    repro.solve(batch, dyn9)
+    assert simplex.compile_cache_size() == before
+
+
+def test_sweep_compiles_once_across_steps_and_repeats():
+    rng = np.random.default_rng(11)
+    dim = 4
+    a = np.concatenate([np.eye(dim), -np.eye(dim), rng.uniform(0, 1, (4, dim))])
+    b = np.concatenate([np.ones(dim), np.ones(dim), rng.uniform(2, 4, 4)])
+    poly = support.Polytope(a, b)
+
+    base = rng.normal(size=(8, dim))
+    base /= np.linalg.norm(base, axis=1, keepdims=True)
+    rot = np.eye(dim)
+    theta = 0.15
+    rot[0, 0] = rot[1, 1] = np.cos(theta)
+    rot[0, 1], rot[1, 0] = -np.sin(theta), np.sin(theta)
+    stack = np.empty((60, 8, dim))
+    cur = base
+    for s in range(60):
+        stack[s] = cur
+        cur = cur @ rot
+
+    first = SolveStats()
+    warm = poly.support_sweep(stack, warm_start=True, stats=first)
+    # 60 steps, at most one fresh sweep executable (0 if an earlier test
+    # already compiled this shape).
+    assert first.compiles <= 1
+    assert first.rounds == 60
+
+    second = SolveStats()
+    again = poly.support_sweep(stack, warm_start=True, stats=second)
+    assert second.compiles == 0
+    assert second.cache_hits == 1
+    np.testing.assert_array_equal(np.asarray(warm), np.asarray(again))
+
+    # The compiled sweep must agree with the per-step python loop.
+    cold = poly.support_sweep(stack, warm_start=False)
+    np.testing.assert_allclose(
+        np.asarray(warm), np.asarray(cold), rtol=1e-9, atol=1e-9
+    )
+    assert first.simplex_iterations < 0.5 * 60 * 8 * 10  # warm start pays
+    assert first.warm_started > 0
+
+
+# ---------------------------------------------------------------------------
+# (c) pow-2 round padding never leaks
+# ---------------------------------------------------------------------------
+
+
+def test_round_padding_leaks_nothing_into_results_or_stats():
+    # 5 identical hard LPs: every round's active count is 5, padded to 8.
+    rng = np.random.default_rng(13)
+    hard = lp.random_lp_batch(rng, 1, 12, 6, False, dtype=np.float64)
+    batch = LPBatch(
+        np.repeat(np.asarray(hard.a), 5, axis=0),
+        np.repeat(np.asarray(hard.b), 5, axis=0),
+        np.repeat(np.asarray(hard.c), 5, axis=0),
+    )
+    off = repro.solve(batch)
+    need = int(np.asarray(off.iterations).max())
+    assert need > 4  # multi-round under the tiny cap below
+
+    for resume in ("scratch", "basis"):
+        stats = SolveStats()
+        opts = SolveOptions(compaction="every_k", compact_every=2, resume=resume)
+        sol = repro.solve(batch, opts, stats=stats)
+        assert sol.objective.shape == (5,)
+        assert sol.x.shape == (5, 6)
+        _assert_bit_identical(off, sol, iterations=(resume == "basis"))
+        plan, _ = dispatch._round_plan(
+            batch, opts, incremental=(resume == "basis")
+        )
+        rounds_run = stats.rounds
+        # Every recorded round counted exactly the 5 true LPs — the 3
+        # pow-2 padding replicas of rounds > 0 never reach the counters.
+        assert stats.lps == 5 * rounds_run
+        assert rounds_run <= len(plan)
+
+
+def test_odd_batch_with_chunks_counts_every_lp_once():
+    batch = _mixed_batch()  # 36 LPs
+    st = SolveStats()
+    sol = dispatch.solve_canonical(batch, SolveOptions(chunk_size=9), stats=st)
+    assert st.lps == batch.batch
+    assert st.rounds == int(np.ceil(batch.batch / 9))
+    assert st.simplex_iterations == int(np.asarray(sol.iterations).sum())
+
+
+def test_resume_state_round_trip_is_exact():
+    # Interrupt a solve, resume it, and compare against the straight run:
+    # the carried ResumeState must splice the two halves bit-exactly.
+    batch = _mixed_batch()
+    full, _ = simplex.solve_batched(
+        batch.a, batch.b, batch.c, max_iters=40, want_state=True
+    )
+    half, state = simplex.solve_batched(
+        batch.a, batch.b, batch.c, max_iters=15, want_state=True
+    )
+    rest, _ = simplex.resume_batched(batch.b, batch.c, state, max_iters=25)
+    _assert_bit_identical(full, rest, iterations=False)
+    # The resumed segment reports only its own pivots; the halves sum to
+    # the uninterrupted count.
+    np.testing.assert_array_equal(
+        np.asarray(full.iterations),
+        np.asarray(half.iterations) + np.asarray(rest.iterations),
+    )
+
+
+def test_session_sweep_rejects_unsupported_options():
+    with pytest.raises(ValueError, match="sweep_problems"):
+        session.sweep_polytope_supports(
+            np.eye(2), np.ones(2), np.ones((3, 4, 2)),
+            SolveOptions(backend="pallas"),
+        )
