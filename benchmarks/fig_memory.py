@@ -1,0 +1,136 @@
+"""Tableau storage layer benchmark -> BENCH_memory.json.
+
+The memory axis of the paper's follow-up ("Simultaneous Solving of
+Batched Linear Programs on a GPU", arXiv:1802.08557): per-LP tableau
+storage is what caps batch size and LP size on a fixed-memory device.
+Three measurements over the paper's size grid (m = n in 5/28/100/200),
+dense vs compact layout (``core/tableau.py``):
+
+1. **bytes/LP** — ``TableauSpec.bytes_per_lp`` (analytic; the compact
+   layout drops the artificial block, ~33% on square LPs).
+2. **max batch at fixed device memory** — how many tableaus fit in a
+   nominal HBM budget, and how many LPs fit one Pallas VMEM tile
+   (``kernels/ops.auto_tile_b``): the knobs the smaller layout directly
+   enlarges.
+3. **wall-clock** — dense vs compact solve time on a like-for-like
+   batch, with a bit-identity cross-check (the layouts must agree
+   exactly; the delta is pure storage/flops, never trajectory).
+
+Writes ``BENCH_memory.json`` next to the repo root (or $BENCH_DIR).
+``BENCH_SMOKE=1`` times only the small sizes so the CI bench-smoke job
+finishes in seconds; the analytic rows always cover the full grid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+#: Nominal fixed device memory for the max-batch accounting (one v4 core's
+#: HBM share; the ratio between layouts is budget-independent).
+DEVICE_MEMORY_BYTES = 8 * 2**30
+
+SIZES = (5, 28, 100, 200)
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _grid_row(size: int) -> dict:
+    from repro import TableauSpec
+    from repro.kernels import ops
+
+    compact = TableauSpec(size, size, "compact")
+    dense = compact.with_layout("dense")
+    cb, db = compact.bytes_per_lp(np.float32), dense.bytes_per_lp(np.float32)
+    return {
+        "m": size,
+        "n": size,
+        "dense_bytes_per_lp": db,
+        "compact_bytes_per_lp": cb,
+        "bytes_ratio": cb / db,
+        "dense_max_batch": DEVICE_MEMORY_BYTES // db,
+        "compact_max_batch": DEVICE_MEMORY_BYTES // cb,
+        "dense_tile_b": ops.auto_tile_b(1 << 20, dense),
+        "compact_tile_b": ops.auto_tile_b(1 << 20, compact),
+        "dense_fits_vmem": ops.fits_vmem(size, size, layout="dense"),
+        "compact_fits_vmem": ops.fits_vmem(size, size, layout="compact"),
+    }
+
+
+def _time_row(row: dict, bsz: int, rng) -> None:
+    import repro
+    from repro import SolveOptions
+    from repro.core import lp
+
+    size = row["m"]
+    batch = lp.random_lp_batch(rng, bsz, size, size, feasible_start=True)
+
+    def run(layout):
+        return repro.solve(batch, SolveOptions(layout=layout))
+
+    t_dense = time_fn(run, "dense")
+    t_compact = time_fn(run, "compact")
+    sol_d, sol_c = run("dense"), run("compact")
+    identical = bool(
+        np.array_equal(np.asarray(sol_d.status), np.asarray(sol_c.status))
+        and np.array_equal(np.asarray(sol_d.objective), np.asarray(sol_c.objective))
+        and np.array_equal(
+            np.asarray(sol_d.iterations), np.asarray(sol_c.iterations)
+        )
+    )
+    row.update(
+        {
+            "batch": bsz,
+            "dense_s": t_dense,
+            "compact_s": t_compact,
+            "compact_speedup": t_dense / t_compact,
+            "bit_identical": identical,
+        }
+    )
+    emit(
+        f"memory_m{size}_b{bsz}",
+        t_compact,
+        f"dense {t_dense:.4f}s, {row['bytes_ratio']:.3f}x bytes, "
+        f"identical={identical}",
+    )
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(414)
+    timed_sizes = (5, 28) if _smoke() else ((5, 28, 100, 200) if full else (5, 28, 100))
+    batch_for = {5: 512, 28: 256, 100: 64, 200: 16}
+    if _smoke():
+        batch_for = {5: 64, 28: 32}
+
+    grid = []
+    for size in SIZES:
+        row = _grid_row(size)
+        emit(
+            f"memory_bytes_m{size}",
+            0.0,
+            f"compact {row['compact_bytes_per_lp']}B/LP vs dense "
+            f"{row['dense_bytes_per_lp']}B/LP ({row['bytes_ratio']:.3f}x), "
+            f"max batch {row['compact_max_batch']} vs {row['dense_max_batch']}",
+        )
+        if size in timed_sizes:
+            _time_row(row, batch_for[size], rng)
+        grid.append(row)
+
+    results = {"device_memory_bytes": DEVICE_MEMORY_BYTES, "grid": grid}
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_memory.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

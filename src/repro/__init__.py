@@ -24,6 +24,7 @@ from .core.backends import (
 from .core.lp import LPBatch, LPSolution, ResumeState
 from .core.problem import LPProblem
 from .core.session import SolveSession
+from .core.tableau import TableauSpec
 
 __all__ = [
     "solve",
@@ -32,6 +33,7 @@ __all__ = [
     "LPBatch",
     "LPSolution",
     "ResumeState",
+    "TableauSpec",
     "SolveSession",
     "SolveOptions",
     "SolveStats",

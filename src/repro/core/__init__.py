@@ -33,7 +33,8 @@ from .backends import (
     register_backend,
 )
 from .bucketing import Bucket, bucket_problems, scatter_solutions, shape_class
-from . import dispatch, engine, hyperbox, oracle
+from .tableau import DEFAULT_LAYOUT, LAYOUTS, TableauSpec
+from . import dispatch, engine, hyperbox, oracle, tableau
 
 __all__ = [
     "LPBatch",
@@ -69,8 +70,12 @@ __all__ = [
     "LPC",
     "RPC",
     "BLAND",
+    "TableauSpec",
+    "DEFAULT_LAYOUT",
+    "LAYOUTS",
     "dispatch",
     "engine",
     "hyperbox",
     "oracle",
+    "tableau",
 ]

@@ -39,6 +39,7 @@ into.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -48,6 +49,7 @@ from . import engine as _engine
 from . import hyperbox as _hyperbox
 from . import simplex as _simplex
 from .lp import LPBatch, LPSolution, ResumeState
+from .tableau import DEFAULT_LAYOUT, LAYOUTS, TableauSpec
 
 
 #: Valid values of :attr:`SolveOptions.compaction`.
@@ -138,6 +140,22 @@ class SolveOptions:
         compiled executable.  False re-specializes the executable on each
         concrete cap — the pre-compile-once behavior, kept as a benchmark
         baseline (``benchmarks/fig_dispatch.py``).
+    layout : str, default "compact"
+        Tableau storage layout (``core/tableau.py``):
+
+        * ``"compact"`` — the artificial block is implicit (basis IDs
+          only); ``q = 1 + n + m`` columns.  ~25–33% less tableau
+          memory and pivot-update work on square LPs, larger Pallas
+          tiles per VMEM budget.
+        * ``"dense"`` — the paper's explicit column map with the
+          artificial identity block (``q = 1 + n + 2m``); kept
+          selectable so the compact win stays benchmarkable.
+
+        Both layouts produce BIT-IDENTICAL objectives, statuses, bases,
+        and per-LP iteration counts on the ``xla`` and ``pallas``
+        backends under every pivot rule: the artificial columns are
+        write-only lanes that no pricing/ratio/feasibility decision ever
+        reads.  The float64 ``reference`` oracle ignores the knob.
     seed : int, default 0
         PRNG seed for the randomized (RPC) pivot rule.
     """
@@ -153,6 +171,7 @@ class SolveOptions:
     compact_every: int = 0
     resume: str = "scratch"
     dynamic_caps: bool = True
+    layout: str = DEFAULT_LAYOUT
     seed: int = 0
 
     def __post_init__(self):
@@ -173,6 +192,11 @@ class SolveOptions:
             raise ValueError(
                 f"unknown pivot rule {self.rule!r}; "
                 f"expected one of {_engine.RULES}"
+            )
+        if self.layout not in LAYOUTS:
+            raise ValueError(
+                f"unknown tableau layout {self.layout!r}; "
+                f"expected one of {LAYOUTS}"
             )
 
     def replace(self, **kw) -> "SolveOptions":
@@ -231,6 +255,18 @@ class SolveStats:
         Dispatches that reused an already-compiled executable.  The
         steady-state counter: a warmed-up serving loop or sweep should
         accumulate only cache hits.
+    tableau_bytes : int
+        PEAK per-round LOGICAL tableau footprint (bytes) across the
+        recorded dispatches: padded batch size times the UNPADDED per-LP
+        tableau bytes under the configured :attr:`SolveOptions.layout`
+        (``TableauSpec.bytes_per_lp``).  Exact for the ``xla`` driver's
+        ``(B, m+1, q)`` arrays; backend-internal padding (the Pallas
+        kernel's 128-lane/8-sublane alignment, which can dominate at
+        small ``q``, or the ``reference`` oracle's own dense float64
+        copies) is not included.  The memory counterpart of the
+        iteration counters — sessions and benchmarks report it alongside
+        iterations/compiles, and it is what the compact layout drives
+        down (~33% on square LPs).
     """
 
     lps: int = 0
@@ -241,6 +277,17 @@ class SolveStats:
     resumed: int = 0
     compiles: int = 0
     cache_hits: int = 0
+    tableau_bytes: int = 0
+
+    def record_tableau(self, nbytes: int) -> None:
+        """Fold one dispatch round's tableau footprint into the peak.
+
+        Parameters
+        ----------
+        nbytes : int
+            The round's total tableau bytes (padded batch x bytes/LP).
+        """
+        self.tableau_bytes = max(self.tableau_bytes, int(nbytes))
 
     def record_cache(self, before: int, after: int) -> None:
         """Attribute one backend call's compile-cache delta.
@@ -406,6 +453,7 @@ def _xla_solve(
         basis0=batch.basis0,
         want_state=want_state,
         dynamic_cap=options.dynamic_caps,
+        layout=options.layout,
     )
 
 
@@ -432,9 +480,51 @@ def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
     return _hyperbox.solve_batched(lo, hi, directions)
 
 
+_VMEM_FALLBACK_WARNED: set = set()
+
+
+def _pallas_vmem_fallback(
+    m: int, n: int, dtype, options: SolveOptions, layout: Optional[str] = None
+) -> bool:
+    """True when this shape must route to ``xla`` instead of the kernel.
+
+    A shape whose SINGLE-LP tableau exceeds the kernel's VMEM budget
+    cannot run as a Pallas tile at any ``tile_b`` — historically those
+    shapes just failed inside Mosaic.  Routing is safe because the two
+    accelerated backends are bit-identical by construction (they drive
+    the same ``core/engine.py`` blocks), so the fallback changes where
+    the arithmetic runs, never what it computes.  Resume states are
+    likewise interchangeable between the two.
+
+    ``layout`` overrides ``options.layout`` for the footprint estimate —
+    a resume runs in the layout of its CARRIED state, which a cross-
+    layout caller's options need not match.
+    """
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    layout = layout or options.layout
+    # want_state=True is the conservative (largest-footprint) estimate, so
+    # the start/resume rounds of a basis-resumed solve route consistently.
+    if kernel_ops.fits_vmem(m, n, dtype, layout, want_state=True):
+        return False
+    key = (m, n, str(jnp.dtype(dtype)), layout)
+    if key not in _VMEM_FALLBACK_WARNED:
+        _VMEM_FALLBACK_WARNED.add(key)
+        warnings.warn(
+            f"pallas backend: single-LP tableau for shape (m={m}, n={n}, "
+            f"{key[2]}, layout={layout!r}) exceeds the VMEM budget "
+            f"({kernel_ops.VMEM_BUDGET_BYTES} bytes); routing to the xla "
+            "backend (bit-identical results)",
+            stacklevel=3,
+        )
+    return True
+
+
 def _pallas_solve(
     batch: LPBatch, options: SolveOptions, want_state: bool = False
 ):
+    if _pallas_vmem_fallback(batch.m, batch.n, batch.a.dtype, options):
+        return _xla_solve(batch, options, want_state)
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
     return kernel_ops.simplex_solve(
@@ -448,6 +538,7 @@ def _pallas_solve(
         basis0=batch.basis0,
         want_state=want_state,
         dynamic_cap=options.dynamic_caps,
+        layout=options.layout,
     )
 
 
@@ -456,6 +547,17 @@ def _pallas_start(batch: LPBatch, options: SolveOptions):
 
 
 def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
+    # The resume runs in the layout of the CARRIED state (recovered from
+    # the tableau width), not options.layout — route on that layout so a
+    # cross-layout resume can't sneak an over-budget tableau past the
+    # check (or needlessly fall back when the carried layout fits).
+    state_layout = TableauSpec.from_tableau(
+        batch.m, batch.n, state.tab.shape[-1]
+    ).layout
+    if _pallas_vmem_fallback(
+        batch.m, batch.n, batch.a.dtype, options, layout=state_layout
+    ):
+        return _xla_resume(batch, state, options)
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
     return kernel_ops.simplex_resume(
@@ -474,7 +576,12 @@ def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
 def _pallas_cache_size() -> int:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
-    return kernel_ops.compile_cache_size()
+    # Include the XLA driver's caches: the VMEM fallback routes
+    # over-budget shapes through _xla_solve/_xla_resume, and their
+    # compiles must stay visible to SolveStats' compiles/cache_hits
+    # attribution (for pure-kernel traffic the xla term is constant, so
+    # the diff the dispatch layer takes is unchanged).
+    return kernel_ops.compile_cache_size() + _simplex.compile_cache_size()
 
 
 def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:

@@ -73,6 +73,7 @@ import numpy as np
 from .backends import Backend, SolveOptions, SolveStats, get_backend
 from .bucketing import next_pow2
 from .lp import ITER_LIMIT, LPBatch, LPSolution, ResumeState, auto_cap
+from .tableau import TableauSpec
 
 
 def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
@@ -445,6 +446,15 @@ def _dispatch_round(
     bsz = batch.batch
     chunk = options.chunk_size or bsz
     chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
+    if stats is not None:
+        # Peak LOGICAL tableau footprint of this round: the largest chunk
+        # dispatched (batch-padding replica rows count — they occupy real
+        # tableau storage) at the configured layout's unpadded bytes/LP.
+        # Backend-internal padding is NOT included: exact for the xla
+        # driver's (B, m+1, q) arrays; the Pallas kernel's lane/sublane
+        # padding (q -> 128-lane multiples) sits on top of this number.
+        spec = TableauSpec(batch.m, batch.n, options.layout)
+        stats.record_tableau(min(chunk, bsz) * spec.bytes_per_lp(batch.a.dtype))
     parts = []
     state_parts = []
     # Stage chunk 0, then for each chunk: kick off the solve (async under

@@ -18,9 +18,15 @@ lowers — the Pallas kernel's choice).  Both forms extract the SAME
 value exactly (a one-hot sum has a single non-zero term), so the XLA
 and Pallas drivers agree bit-for-bit on pivot trajectories either way.
 
-Tableau conventions (see ``core/lp.py:build_tableau``): shape
-``(B, M1, Q)`` with ``M1 >= m + 1`` and ``Q >= q = 1 + n + 2m``; row
-``m`` is the objective row, column 0 the RHS/bound column.  Padding rows
+Tableau conventions (see ``core/tableau.py``): shape ``(B, M1, Q)`` with
+``M1 >= m + 1`` and ``Q >= spec.q``; row ``m`` is the objective row,
+column 0 the RHS/bound column.  The column map is owned by a static
+:class:`~repro.core.tableau.TableauSpec` — every layout-sensitive block
+below (pricing, the ratio test, the phase transition, the pivot update,
+solution extraction) takes the spec instead of assuming the dense map,
+so the same code runs the ``"dense"`` layout (explicit artificial block)
+and the default ``"compact"`` layout (artificials are basis IDs only,
+``q = 1 + n + m``) with bit-identical pivot trajectories.  Padding rows
 and columns (Pallas lane/sublane alignment) must be zero — every block
 below preserves that invariant, because a zero pivot-column entry leaves
 its row unchanged and padded columns are never eligible to enter.
@@ -43,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from .lp import INFEASIBLE, OPTIMAL, RUNNING
+from .tableau import TableauSpec
 
 LPC = "lpc"
 RPC = "rpc"
@@ -79,8 +86,10 @@ def column_ids(q: int) -> jnp.ndarray:
 def eligible_mask(q_total: int, m: int, n: int) -> jnp.ndarray:
     """(1, q_total) bool — columns allowed to enter the basis.
 
-    Column 0 (the RHS), the artificial block, and any lane padding beyond
-    the true ``q`` are never eligible; only originals and slacks are.
+    Column 0 (the RHS), the artificial block (dense layout), and any lane
+    padding beyond the true ``q`` are never eligible; only originals and
+    slacks are — which is the same mask under BOTH layouts, since the
+    eligible range ``1..n+m`` precedes everything layout-dependent.
     """
     ids = column_ids(q_total)
     return (ids >= 1) & (ids < 1 + n + m)
@@ -206,8 +215,8 @@ def select_entering(
 def phase2_objective(
     tab: jnp.ndarray,
     basis: jnp.ndarray,
+    spec: TableauSpec,
     c_ext: jnp.ndarray,
-    m: int,
     gather: bool = False,
 ) -> jnp.ndarray:
     """The phase-II objective row for the current basis: ``c_ext - c_B . rows``.
@@ -217,9 +226,20 @@ def phase2_objective(
     The pricing contraction is a ``dot_general`` with
     ``preferred_element_type`` pinned to the tableau dtype so XLA and
     Mosaic accumulate identically.
+
+    Layout note: a still-basic (degenerate) artificial appears as a basis
+    ID ``>= spec.art_start``.  Its phase-II cost is 0 under either layout
+    — in ``dense`` the gathered ``c_ext`` column is 0, in ``compact`` the
+    ID lies beyond ``c_ext`` so the gather clamps onto a zero-cost lane
+    (slack or padding) and the one-hot form matches nothing — so both
+    layouts and both ``gather`` modes price it to the same 0.
     """
+    m = spec.m
     if gather:
-        cb = jnp.take_along_axis(c_ext, basis, axis=-1)  # (B, m)
+        qe = c_ext.shape[-1]
+        cb = jnp.take_along_axis(
+            c_ext, jnp.minimum(basis, qe - 1), axis=-1
+        )  # (B, m)
     else:
         qp = tab.shape[-1]
         basis_oh = basis[:, :, None] == column_ids(qp)[None, :, :]  # (B, m, Q)
@@ -241,7 +261,7 @@ def phase_transition(
     at_opt: jnp.ndarray,
     c_ext: jnp.ndarray,
     feas_tol: jnp.ndarray,
-    m: int,
+    spec: TableauSpec,
     gather: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Branch-free optimum bookkeeping: finish phase II, enter phase II.
@@ -251,17 +271,20 @@ def phase_transition(
     :func:`phase2_objective` and continue into phase II (the paper does
     this with a host round-trip between two kernel launches; here it is
     a masked in-loop rewrite); infeasible ones terminate INFEASIBLE.
-    LPs at a phase-II optimum terminate OPTIMAL.
+    LPs at a phase-II optimum terminate OPTIMAL.  The feasibility test
+    reads ``-z0`` from the objective row — never the artificial columns,
+    which is why the compact layout can drop them.
 
     Returns the updated ``(tab, phase, status)``.
     """
+    m = spec.m
     active = status == RUNNING
     p1_done = active & at_opt & (phase == 1)
     feasible = tab[:, m, 0] <= feas_tol
     to_phase2 = p1_done & feasible
     status = jnp.where(p1_done & ~feasible, INFEASIBLE, status)
     status = jnp.where(active & at_opt & (phase == 2), OPTIMAL, status)
-    new_obj = phase2_objective(tab, basis, c_ext, m, gather)
+    new_obj = phase2_objective(tab, basis, spec, c_ext, gather)
     tab = tab.at[:, m, :].set(jnp.where(to_phase2[:, None], new_obj, tab[:, m, :]))
     phase = jnp.where(to_phase2, 2, phase)
     return tab, phase, status
@@ -271,8 +294,7 @@ def ratio_test(
     tab: jnp.ndarray,
     basis: jnp.ndarray,
     e: jnp.ndarray,
-    m: int,
-    n: int,
+    spec: TableauSpec,
     tol: float,
     gather: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -287,6 +309,9 @@ def ratio_test(
     NEGATIVE there would make the artificial GROW — silently leaving the
     feasible region.  Such rows are forced out at ratio 0 (``zero_art``):
     a valid degenerate pivot on the negative element, since the RHS is 0.
+    The artificial is recognized by its basis ID (``>= spec.art_start``)
+    and handled via the RHS column alone — no artificial COLUMN is read,
+    so the escape works identically under the compact layout.
 
     Returns
     -------
@@ -295,11 +320,12 @@ def ratio_test(
     full_col : (B, M1) the full entering column incl. the objective row —
         reused by :func:`pivot_update`.
     """
+    m = spec.m
     full_col = take_col(tab, e, gather)  # (B, M1)
     col = full_col[:, :m]
     rhs = tab[:, :m, 0]
     ratios = jnp.where(col > tol, rhs / jnp.where(col > tol, col, 1.0), BIG)
-    zero_art = (basis >= 1 + n + m) & (rhs <= tol) & (col < -tol)
+    zero_art = (basis >= spec.art_start) & (rhs <= tol) & (col < -tol)
     ratios = jnp.where(zero_art, 0.0, ratios)
     l = jnp.argmin(ratios, axis=-1).astype(jnp.int32)
     min_ratio = jnp.min(ratios, axis=-1)
@@ -313,7 +339,7 @@ def pivot_update(
     l: jnp.ndarray,
     full_col: jnp.ndarray,
     do_pivot: jnp.ndarray,
-    m: int,
+    spec: TableauSpec,
     tol: float,
     gather: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -325,8 +351,11 @@ def pivot_update(
     rows/columns are preserved: their pivot-column entry is 0.
     ``full_col`` comes from :func:`ratio_test`; the pivot element is read
     out of it (``full_col[l] == tab[l, e]`` exactly) rather than
-    re-extracted from the tableau.
+    re-extracted from the tableau.  The update sweeps whatever columns
+    the layout stores — this is where the compact layout saves its ~33%
+    of rank-1 flops on square LPs.
     """
+    m = spec.m
     m1p = tab.shape[1]
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
     l_oh_rows = row_ids == l[:, None]  # (B, m)
@@ -346,7 +375,7 @@ def extract_solution(
     tab: jnp.ndarray,
     basis: jnp.ndarray,
     status: jnp.ndarray,
-    m: int,
+    spec: TableauSpec,
     n_out: int,
     fill: float,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -356,8 +385,10 @@ def extract_solution(
     driver uses ``-inf``; the Pallas kernel uses a finite sentinel and
     re-masks outside).  ``x``: (B, n_out) one-hot scatter of the RHS into
     the original-variable slots (basis column ``j+1`` <-> ``x_j``);
-    non-optimal LPs report 0.
+    non-optimal LPs report 0.  Reads only the RHS column and the basis —
+    layout-independent by construction.
     """
+    m = spec.m
     objective = jnp.where(status == OPTIMAL, -tab[:, m, 0], fill)
     rhs = tab[:, :m, 0]  # (B, m)
     var_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_out), 2)

@@ -7,13 +7,13 @@ An LP batch is a struct-of-arrays over B independent LPs of identical shape:
 
 with ``A: (B, m, n)``, ``b: (B, m)``, ``c: (B, n)``.
 
-The simplex tableau layout follows the paper (Sec. 3.1), with the two
-auxiliary columns folded in:
+The simplex tableau column map follows the paper (Sec. 3.1), with the
+two auxiliary columns folded in:
 
     column 0                : b_i (bound column); objective row stores -z0
     columns 1 .. n          : original variables x_j
     columns n+1 .. n+m      : slack variables s_i
-    columns n+m+1 .. n+2m   : artificial variables a_i
+    columns n+m+1 .. n+2m   : artificial variables a_i  (dense layout only)
     row m (last)            : objective row (reduced costs; entering rule
                               picks the max positive coefficient)
 
@@ -22,6 +22,13 @@ variable becomes basic there (two-phase start); rows with b_i >= 0 start
 with their slack basic.  Tableau construction happens device-side in jnp —
 only (A, b, c) cross host->device, which transfers O(m n) bytes per LP
 instead of the paper's O(m (n + 2m)) full-tableau copy.
+
+Tableau STORAGE is owned by ``core/tableau.py``: a
+:class:`~repro.core.tableau.TableauSpec` selects between the ``"dense"``
+map above and the default ``"compact"`` layout, which drops the
+write-only artificial block (``q = 1 + n + m``) without changing any
+pivot arithmetic.  :func:`build_tableau` is re-exported here for
+backward compatibility.
 """
 
 from __future__ import annotations
@@ -32,6 +39,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .tableau import TableauSpec, build_tableau  # noqa: F401  (re-exported API)
 
 # Status codes shared by every solver in the library.
 RUNNING = 0
@@ -105,6 +114,12 @@ class ResumeState:
     lockstep loop carries it through ``while_loop`` and the Pallas kernel
     writes it back as extra outputs (``want_state``).  All arrays are
     unpadded (true ``m``/``q``); drivers re-apply their own padding.
+
+    The state is layout-self-describing: ``tab.shape[-1]`` recovers the
+    :class:`~repro.core.tableau.TableauSpec` it was produced under
+    (``TableauSpec.from_tableau``), so resumed rounds continue in the
+    SAME layout regardless of the resuming call's options — which keeps
+    a ``resume="basis"`` splice bit-identical in either layout.
     """
 
     tab: jnp.ndarray  # (B, m+1, q) tableau at interruption
@@ -139,7 +154,11 @@ class LPSolution:
 
 
 def num_cols(m: int, n: int) -> int:
-    """Total tableau columns: b column + n vars + m slacks + m artificials."""
+    """DENSE-layout tableau columns: b column + vars + slacks + artificials.
+
+    Legacy helper, kept for the dense layout only — layout-aware code
+    should read :attr:`repro.core.tableau.TableauSpec.q` instead.
+    """
     return 1 + n + 2 * m
 
 
@@ -152,129 +171,6 @@ def auto_cap(m: int, n: int) -> int:
     plain solve would.
     """
     return 50 * (m + n)
-
-
-def build_tableau(
-    a: jnp.ndarray,
-    b: jnp.ndarray,
-    c: jnp.ndarray,
-    basis0: Optional[jnp.ndarray] = None,
-):
-    """Construct the batched two-phase simplex tableau (device-side, jit-able).
-
-    Parameters
-    ----------
-    a, b, c : jnp.ndarray
-        Canonical batch data, shapes ``(B, m, n)``, ``(B, m)``, ``(B, n)``.
-    basis0 : jnp.ndarray, optional
-        ``(B, m)`` int32 warm-start basis (tableau column indices,
-        1..n originals / n+1..n+m slacks).  Where the basis is valid,
-        nonsingular, and primal feasible the tableau is rebuilt for it
-        (``B^-1 [b | A | I]``) and the LP starts directly in phase II;
-        invalid rows fall back to the cold slack/artificial start.
-
-    Returns
-    -------
-    tab : jnp.ndarray
-        (B, m+1, q) tableau, q = 1 + n + 2m.  Objective row is the
-        phase-I reduced-cost row for LPs with any b_i < 0, else the
-        phase-II row (coefficients of c).
-    basis : jnp.ndarray
-        (B, m) int32 — column index of the basic variable per row.
-    phase : jnp.ndarray
-        (B,) int32 — 1 where phase I is required, else 2.
-    """
-    bsz, m, n = a.shape
-    q = num_cols(m, n)
-    dtype = a.dtype
-
-    neg = b < 0  # (B, m) rows needing an artificial
-    sgn = jnp.where(neg, -1.0, 1.0).astype(dtype)  # (B, m)
-
-    tab = jnp.zeros((bsz, m + 1, q), dtype)
-    # b column (made non-negative by row negation).
-    tab = tab.at[:, :m, 0].set(b * sgn)
-    # Original variable coefficients (negated rows flip sign).
-    tab = tab.at[:, :m, 1 : 1 + n].set(a * sgn[:, :, None])
-    # Slack columns: +1 normally, -1 on negated rows.
-    row_idx = jnp.arange(m)
-    tab = tab.at[:, row_idx, 1 + n + row_idx].set(sgn)
-    # Artificial columns: +1 only on negated rows.
-    tab = tab.at[:, row_idx, 1 + n + m + row_idx].set(jnp.where(neg, 1.0, 0.0).astype(dtype))
-
-    need_phase1 = jnp.any(neg, axis=1)  # (B,)
-
-    # Phase-II objective row: reduced costs = c (slack basis has cost 0).
-    obj2 = jnp.zeros((bsz, q), dtype).at[:, 1 : 1 + n].set(c)
-    # Phase-I objective row (maximize -sum of artificials): price out the
-    # basic artificials => obj1_j = sum over artificial rows of tab[i, j];
-    # column 0 then holds sum of RHS = -z0 >= 0, exactly the -z0 convention.
-    obj1 = jnp.sum(tab[:, :m, :] * neg[:, :, None].astype(dtype), axis=1)
-    # Artificial columns must never be entering; their own reduced cost
-    # after pricing is 0 at start, eligibility mask handles the rest.
-    obj = jnp.where(need_phase1[:, None], obj1, obj2)
-    tab = tab.at[:, m, :].set(obj)
-
-    # Initial basis: slack on normal rows, artificial on negated rows.
-    basis = jnp.where(neg, 1 + n + m + row_idx[None, :], 1 + n + row_idx[None, :])
-    basis = basis.astype(jnp.int32)
-    phase = jnp.where(need_phase1, 1, 2).astype(jnp.int32)
-    if basis0 is None:
-        return tab, basis, phase
-    warm_tab, warm_basis, ok = _warm_tableau(a, b, c, basis0)
-    tab = jnp.where(ok[:, None, None], warm_tab, tab)
-    basis = jnp.where(ok[:, None], warm_basis, basis)
-    phase = jnp.where(ok, 2, phase)
-    return tab, basis, phase
-
-
-def _warm_tableau(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, basis0):
-    """Tableau for a caller-supplied basis: rows = B^-1 [b | A | I].
-
-    Returns ``(tab, basis, ok)`` where ``ok`` is a (B,) bool mask of LPs
-    whose warm basis is usable — indices in the var/slack range, basis
-    matrix nonsingular (a singular or duplicated basis surfaces as
-    non-finite solve output), and ``B^-1 b`` primal feasible.  Rows with
-    ``ok`` False must use the cold start; the returned tableau is
-    unspecified there.  The artificial columns of a warm tableau are all
-    zero: a feasible warm basis starts in phase II where artificials are
-    both non-basic and ineligible to enter.
-    """
-    bsz, m, n = a.shape
-    q = num_cols(m, n)
-    dtype = a.dtype
-    basis0 = jnp.asarray(basis0, jnp.int32)
-
-    in_range = (basis0 >= 1) & (basis0 <= n + m)  # (B, m)
-    safe = jnp.where(in_range, basis0, 1)
-
-    eye = jnp.broadcast_to(jnp.eye(m, dtype=dtype), (bsz, m, m))
-    ai = jnp.concatenate([a, eye], axis=2)  # (B, m, n+m) var+slack columns
-    bmat = jnp.take_along_axis(ai, (safe - 1)[:, None, :], axis=2)  # (B, m, m)
-    rhs_full = jnp.concatenate([b[:, :, None], ai], axis=2)  # (B, m, 1+n+m)
-    body = jnp.linalg.solve(bmat, rhs_full)  # B^-1 [b | A | I]
-
-    feas_tol = (1e-9 if dtype == jnp.float64 else 1e-6) * jnp.maximum(
-        1.0, jnp.max(jnp.abs(b), axis=-1)
-    )
-    finite = jnp.all(jnp.isfinite(body), axis=(1, 2))
-    feasible = jnp.all(body[:, :, 0] >= -feas_tol[:, None], axis=1)
-    ok = jnp.all(in_range, axis=1) & finite & feasible
-    # Guard the downstream arithmetic: non-finite entries from a singular
-    # basis would poison jnp.where on some backends.
-    body = jnp.where(jnp.isfinite(body), body, 0.0)
-    # Restore the rhs >= 0 invariant the ratio test relies on (the accepted
-    # bases are feasible only up to feas_tol).
-    body = body.at[:, :, 0].set(jnp.maximum(body[:, :, 0], 0.0))
-
-    c_full = jnp.zeros((bsz, 1 + n + m), dtype).at[:, 1 : 1 + n].set(c)
-    cb = jnp.take_along_axis(c_full, safe, axis=1)  # (B, m) basic costs
-    obj = c_full - jnp.einsum("bm,bmk->bk", cb, body)  # col 0 holds -z0
-
-    tab = jnp.zeros((bsz, m + 1, q), dtype)
-    tab = tab.at[:, :m, : 1 + n + m].set(body)
-    tab = tab.at[:, m, : 1 + n + m].set(obj)
-    return tab, safe, ok
 
 
 def random_lp_batch(

@@ -40,6 +40,7 @@ from .backends import SolveOptions, SolveStats
 from .bucketing import ShapeGrid
 from .lp import LPBatch, LPSolution, OPTIMAL, build_tableau
 from .problem import LPProblem, canonicalize, uncanonicalize
+from .tableau import TableauSpec
 
 
 class SolveSession:
@@ -109,7 +110,8 @@ class SolveSession:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "rule", "unroll", "tol", "maximize", "split", "row_lower", "var_upper"
+        "rule", "unroll", "tol", "layout",
+        "maximize", "split", "row_lower", "var_upper",
     ),
 )
 def _sweep_jit(
@@ -118,7 +120,7 @@ def _sweep_jit(
     cap,  # () int32 traced iteration cap
     seed,
     *,
-    rule, unroll, tol, maximize, split, row_lower, var_upper,
+    rule, unroll, tol, layout, maximize, split, row_lower, var_upper,
 ):
     """The whole warm-started sweep as ONE executable: scan over steps.
 
@@ -145,12 +147,13 @@ def _sweep_jit(
         canon = canonicalize(prob)
         ac, bc, cc = canon.batch.a, canon.batch.b, canon.batch.c
         m = ac.shape[1]
-        cold_tab, cold_basis, cold_phase = build_tableau(ac, bc, cc)
-        c_ext = _simplex._phase2_costs(cc, m)
+        spec = TableauSpec(m, ac.shape[2], layout)
+        cold_tab, cold_basis, cold_phase = build_tableau(ac, bc, cc, spec=spec)
+        c_ext = _simplex._phase2_costs(cc, spec)
         # Re-price the carried tableau's objective row for this step's
         # costs; body rows are reused as-is (same constraints).
         warm_obj = _engine.phase2_objective(
-            prev_tab, prev_basis, c_ext, m, gather=True
+            prev_tab, prev_basis, spec, c_ext, gather=True
         )
         warm_tab = prev_tab.at[:, m, :].set(warm_obj)
         tab = jnp.where(warm[:, None, None], warm_tab, cold_tab)
@@ -158,7 +161,8 @@ def _sweep_jit(
         phase = jnp.where(warm, 2, cold_phase)
         sol, state = _simplex._iterate(
             tab, basis, phase, c_ext, _engine.phase1_feasibility_tol(bc),
-            cap, seed, rule=rule, unroll=unroll, tol=tol, static_cap=None,
+            cap, seed, spec=spec, rule=rule, unroll=unroll, tol=tol,
+            static_cap=None,
         )
         out = uncanonicalize(canon, sol)
         # Carry only states of LPs that actually converged; the rest
@@ -173,9 +177,9 @@ def _sweep_jit(
         row_lower=row_lower, var_upper=var_upper,
     )
     batch0 = canonicalize(prob0).batch
-    m1, q = batch0.m + 1, 1 + batch0.n + 2 * batch0.m
+    spec0 = TableauSpec(batch0.m, batch0.n, layout)
     carry0 = (
-        jnp.zeros((k, m1, q), c_stack.dtype),
+        jnp.zeros((k, batch0.m + 1, spec0.q), c_stack.dtype),
         jnp.zeros((k, batch0.m), jnp.int32),
         jnp.zeros((k,), bool),
     )
@@ -268,6 +272,7 @@ def sweep_problems(
         rule=options.rule,
         unroll=options.unroll,
         tol=tol,
+        layout=options.layout,
         maximize=template.maximize,
         split=template.split,
         row_lower=template.row_lower,

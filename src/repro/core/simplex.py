@@ -47,6 +47,7 @@ from .lp import (
     auto_cap,
     build_tableau,
 )
+from .tableau import DEFAULT_LAYOUT, TableauSpec
 
 
 class _State(NamedTuple):
@@ -65,26 +66,26 @@ def resolve_cap(max_iters, m: int, n: int):
     return max_iters  # already a traced/array value
 
 
-def _phase2_costs(c: jnp.ndarray, m: int) -> jnp.ndarray:
-    """(B, q) extended phase-II cost row (zeros outside columns 1..n)."""
+def _phase2_costs(c: jnp.ndarray, spec: TableauSpec) -> jnp.ndarray:
+    """(B, spec.q) extended phase-II cost row (zeros outside columns 1..n)."""
     bsz, n = c.shape
-    q = 1 + n + 2 * m
-    return jnp.zeros((bsz, q), c.dtype).at[:, 1 : 1 + n].set(c)
+    return jnp.zeros((bsz, spec.q), c.dtype).at[:, 1 : 1 + n].set(c)
 
 
 def _iterate(
-    tab, basis, phase, c_ext, feas_tol, cap, seed, *, rule, unroll, tol, static_cap
+    tab, basis, phase, c_ext, feas_tol, cap, seed, *,
+    spec, rule, unroll, tol, static_cap
 ):
     """The lockstep iteration loop, shared by the cold and resume paths.
 
     ``cap`` is a traced int32 scalar unless ``static_cap`` overrides it
     with a trace-time constant (the ``dynamic_cap=False`` baseline).
+    ``spec`` (static) names the tableau layout; the loop itself is
+    layout-blind — every layout-sensitive step lives in the engine.
     Returns ``(LPSolution, ResumeState)`` — callers drop the state when
     they don't need it.
     """
-    m1 = tab.shape[1]
-    m = m1 - 1
-    n = (tab.shape[2] - 1 - 2 * m)
+    m, n = spec.m, spec.n
     bsz = tab.shape[0]
     dtype = tab.dtype
     limit = static_cap if static_cap is not None else cap
@@ -105,20 +106,20 @@ def _iterate(
         at_opt = max_c <= tol
 
         new_tab, new_phase, status = engine.phase_transition(
-            s.tab, s.basis, s.phase, s.status, at_opt, c_ext, feas_tol, m,
+            s.tab, s.basis, s.phase, s.status, at_opt, c_ext, feas_tol, spec,
             gather=True,
         )
 
         pivoting = active & ~at_opt
         l, min_ratio, full_col = engine.ratio_test(
-            new_tab, s.basis, e, m, n, tol, gather=True
+            new_tab, s.basis, e, spec, tol, gather=True
         )
         unbounded = pivoting & (min_ratio >= engine.BIG / 2)
         status = jnp.where(unbounded, UNBOUNDED, status)
         do_pivot = pivoting & ~unbounded
 
         new_tab, new_basis = engine.pivot_update(
-            new_tab, s.basis, e, l, full_col, do_pivot, m, tol, gather=True
+            new_tab, s.basis, e, l, full_col, do_pivot, spec, tol, gather=True
         )
         iters = s.iters + do_pivot.astype(jnp.int32)
         return _State(new_tab, new_basis, new_phase, status, iters, s.step + 1)
@@ -145,7 +146,7 @@ def _iterate(
 
     status = jnp.where(final.status == RUNNING, ITER_LIMIT, final.status)
     objective, x = engine.extract_solution(
-        final.tab, final.basis, status, m, n, fill=-jnp.inf
+        final.tab, final.basis, status, spec, n, fill=-jnp.inf
     )
     sol = LPSolution(
         objective=objective,
@@ -158,47 +159,55 @@ def _iterate(
 
 
 def solve_traced(
-    a, b, c, basis0, cap, seed, *, rule, unroll, tol, static_cap=None
+    a, b, c, basis0, cap, seed, *, rule, unroll, tol, static_cap=None, spec=None
 ):
     """Pure traced cold solve: build the tableau, then iterate.
 
     The un-jitted composition shared by :func:`solve_batched` and the
     compiled sweep session (``core/session.py``), so both produce
     identical arithmetic.  ``tol`` must already be resolved (> 0) and
-    ``cap`` is a traced scalar (or ``static_cap`` a constant).
+    ``cap`` is a traced scalar (or ``static_cap`` a constant).  ``spec``
+    selects the tableau layout (None = the compact default).
     Returns ``(LPSolution, ResumeState)``.
     """
-    m = a.shape[1]
-    tab, basis, phase = build_tableau(a, b, c, basis0)
-    c_ext = _phase2_costs(c, m)
+    bsz, m, n = a.shape
+    if spec is None:
+        spec = TableauSpec(m, n)
+    tab, basis, phase = build_tableau(a, b, c, basis0, spec)
+    c_ext = _phase2_costs(c, spec)
     feas_tol = engine.phase1_feasibility_tol(b)
     return _iterate(
         tab, basis, phase, c_ext, feas_tol, cap, seed,
-        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+        spec=spec, rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("rule", "unroll", "tol", "want_state", "static_cap")
+    jax.jit,
+    static_argnames=("spec", "rule", "unroll", "tol", "want_state", "static_cap"),
 )
-def _solve_jit(a, b, c, basis0, cap, seed, *, rule, unroll, tol, want_state, static_cap):
+def _solve_jit(
+    a, b, c, basis0, cap, seed, *, spec, rule, unroll, tol, want_state, static_cap
+):
     sol, state = solve_traced(
         a, b, c, basis0, cap, seed,
-        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap, spec=spec,
     )
     return (sol, state) if want_state else sol
 
 
 @functools.partial(
-    jax.jit, static_argnames=("rule", "unroll", "tol", "want_state", "static_cap")
+    jax.jit,
+    static_argnames=("spec", "rule", "unroll", "tol", "want_state", "static_cap"),
 )
-def _resume_jit(b, c, state, cap, seed, *, rule, unroll, tol, want_state, static_cap):
-    m = state.basis.shape[1]
-    c_ext = _phase2_costs(c, m)
+def _resume_jit(
+    b, c, state, cap, seed, *, spec, rule, unroll, tol, want_state, static_cap
+):
+    c_ext = _phase2_costs(c, spec)
     feas_tol = engine.phase1_feasibility_tol(b)
     sol, out_state = _iterate(
         state.tab, state.basis, state.phase, c_ext, feas_tol, cap, seed,
-        rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
+        spec=spec, rule=rule, unroll=unroll, tol=tol, static_cap=static_cap,
     )
     return (sol, out_state) if want_state else sol
 
@@ -225,6 +234,7 @@ def solve_batched(
     basis0: Optional[jnp.ndarray] = None,
     want_state: bool = False,
     dynamic_cap: bool = True,
+    layout: str = DEFAULT_LAYOUT,
 ) -> LPSolution:
     """Solve a batch of LPs (max c.x, Ax <= b, x >= 0) in lockstep.
 
@@ -244,6 +254,10 @@ def solve_batched(
         ``(LPSolution, ResumeState)`` — for round-resumed dispatch.
       dynamic_cap: False re-specializes the executable on the concrete
         cap value (the pre-compile-once behavior; benchmark baseline).
+      layout: tableau storage layout, ``"compact"`` (default; artificial
+        block implicit) or ``"dense"`` (the paper's explicit map).  Both
+        produce bit-identical results; they differ only in memory and
+        pivot-update flops (see ``core/tableau.py``).
 
     The returned ``LPSolution.basis`` holds the final basis, reusable as
     the next solve's ``basis0`` (warm-start sweeps, core/support.py).
@@ -255,7 +269,7 @@ def solve_batched(
     static_cap = None if dynamic_cap else int(cap)
     return _solve_jit(
         a, b, c, basis0, jnp.int32(cap if dynamic_cap else 0), seed,
-        rule=rule, unroll=unroll, tol=tol,
+        spec=TableauSpec(m, n, layout), rule=rule, unroll=unroll, tol=tol,
         want_state=want_state, static_cap=static_cap,
     )
 
@@ -280,17 +294,21 @@ def resume_batched(
     budget for this round.  Returns ``(LPSolution, ResumeState)`` when
     ``want_state``, else just the solution.  Because the carried state is
     exact, a sequence of resumed rounds whose budgets sum to ``K`` ends
-    bit-identical to one uninterrupted solve with cap ``K``.
+    bit-identical to one uninterrupted solve with cap ``K``.  The layout
+    is recovered from the carried tableau itself
+    (``TableauSpec.from_tableau``), so a resume always continues in the
+    layout the interrupted solve used.
     """
     m = state.basis.shape[1]
     n = c.shape[-1]
+    spec = TableauSpec.from_tableau(m, n, state.tab.shape[-1])
     cap = resolve_cap(max_iters, m, n)
     if tol <= 0.0:
         tol = engine.default_tolerance(state.tab.dtype)
     static_cap = None if dynamic_cap else int(cap)
     return _resume_jit(
         b, c, state, jnp.int32(cap if dynamic_cap else 0), seed,
-        rule=rule, unroll=unroll, tol=tol,
+        spec=spec, rule=rule, unroll=unroll, tol=tol,
         want_state=want_state, static_cap=static_cap,
     )
 

@@ -9,17 +9,31 @@ iteration cap is a traced kernel input (see ``simplex_pallas.py``), so
 share one executable, and :func:`simplex_resume` continues a carried
 ``ResumeState`` exactly (padding re-applied here, stripped on the way
 out).
+
+This is also where the tableau storage layer (``core/tableau.py``) meets
+the hardware: all padded shapes derive from a ``TableauSpec``, the VMEM
+cost of one LP inside the kernel is estimated by
+:func:`kernel_vmem_bytes_per_lp`, and the batch tile is sized from that
+estimate (:func:`auto_tile_b`) instead of a fixed ``tile_b=8`` — under
+the compact layout more LPs fit per tile, which is the kernel-level
+payoff of dropping the artificial block.  Shapes whose SINGLE-LP
+footprint exceeds the budget report ``fits_vmem() == False``; the
+``pallas`` backend (``core/backends.py``) routes those to ``xla``
+instead of failing.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from ..core import engine
-from ..core.lp import LPSolution, ResumeState, build_tableau, num_cols
+from ..core.bucketing import next_pow2
+from ..core.lp import LPSolution, ResumeState, build_tableau
+from ..core.tableau import DEFAULT_LAYOUT, TableauSpec
 from ..core.simplex import resolve_cap
 from .hyperbox_pallas import hyperbox_pallas
 from .simplex_pallas import simplex_pallas
@@ -33,18 +47,83 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def _pad_shapes(bsz: int, m: int, n: int, tile_b: int):
-    q = num_cols(m, n)
+#: Per-core VMEM capacity the kernel plans against (~16 MB on current
+#: TPUs — see the Pallas guide).  Overridable for tests / other parts.
+VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET_BYTES", 16 * 2**20))
+
+#: Fraction of the budget one tile may claim — headroom for Mosaic
+#: temporaries, semaphores, and the compiler's own double-buffering.
+VMEM_TILE_FRACTION = 0.5
+
+
+def _pad_shapes(bsz: int, spec: TableauSpec, tile_b: int):
     return (
-        _round_up(q, 128),
-        _round_up(m + 1, 8),
-        _round_up(m, 8),
-        _round_up(n, 128),
+        _round_up(spec.q, 128),
+        _round_up(spec.m + 1, 8),
+        _round_up(spec.m, 8),
+        _round_up(spec.n, 128),
         _round_up(bsz, tile_b),
     )
 
 
-def _pad_launch_inputs(tab, basis, phase, b, c, m: int, n: int, tile_b: int):
+def kernel_vmem_bytes_per_lp(
+    spec: TableauSpec, dtype=jnp.float32, want_state: bool = False
+) -> int:
+    """Estimated VMEM bytes ONE LP occupies inside the simplex kernel.
+
+    Counts the lane/sublane-padded tableau block twice (the BlockSpec
+    input plus the ``while_loop`` carry; three times with the
+    ``want_state`` output block), the extended cost row, the primal
+    output row, and the int32 basis/status/iters vectors.  An estimate —
+    Mosaic's actual allocation includes temporaries — which is why
+    :data:`VMEM_TILE_FRACTION` keeps headroom.
+    """
+    qp, m1p, mp, np_pad, _ = _pad_shapes(1, spec, 1)
+    item = jnp.dtype(dtype).itemsize
+    tab_copies = 3 if want_state else 2
+    f32_bytes = (tab_copies * m1p * qp + qp + np_pad) * item
+    i32_bytes = 4 * (2 * mp + 4)  # basis in/out + phase/status/iters/obj
+    return f32_bytes + i32_bytes
+
+
+def fits_vmem(
+    m: int,
+    n: int,
+    dtype=jnp.float32,
+    layout: str = DEFAULT_LAYOUT,
+    want_state: bool = False,
+) -> bool:
+    """Whether a single LP of this shape fits the kernel's VMEM budget.
+
+    The routing predicate the ``pallas`` backend consults before
+    launching: a shape that cannot fit even one LP per tile is dispatched
+    to the ``xla`` backend instead of failing inside Mosaic.
+    """
+    per_lp = kernel_vmem_bytes_per_lp(TableauSpec(m, n, layout), dtype, want_state)
+    return per_lp <= int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+
+
+def auto_tile_b(
+    bsz: int, spec: TableauSpec, dtype=jnp.float32, want_state: bool = False
+) -> int:
+    """VMEM-budget-aware batch tile: largest power of two that fits.
+
+    Replaces the historical fixed ``tile_b=8``: the tile is sized so
+    ``tile_b * kernel_vmem_bytes_per_lp`` stays within the tile's share
+    of VMEM, capped at 128 (diminishing returns past a full lane vector)
+    and clamped down to the (power-of-two-padded) batch so small batches
+    run as one small tile rather than padding up to a full-size tile.
+    Never returns less than 1 — un-fittable shapes are the backend
+    router's problem (:func:`fits_vmem`), not the tiler's.
+    """
+    per_lp = kernel_vmem_bytes_per_lp(spec, dtype, want_state)
+    budget = int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+    fit = max(1, budget // max(per_lp, 1))
+    tile = 1 << (fit.bit_length() - 1)  # largest power of two <= fit
+    return max(1, min(tile, 128, next_pow2(bsz)))
+
+
+def _pad_launch_inputs(tab, basis, phase, b, c, spec: TableauSpec, tile_b: int):
     """Tile/lane-pad an unpadded (tableau, basis, phase) triple + costs.
 
     Shared by the cold and resume entry points so a resumed round re-pads
@@ -53,9 +132,9 @@ def _pad_launch_inputs(tab, basis, phase, b, c, m: int, n: int, tile_b: int):
     objective row), padded lanes/sublanes are zero.
     """
     bsz = tab.shape[0]
-    q = num_cols(m, n)
+    m, n, q = spec.m, spec.n, spec.q
     dtype = tab.dtype
-    qp, m1p, mp, np_pad, bp = _pad_shapes(bsz, m, n, tile_b)
+    qp, m1p, mp, np_pad, bp = _pad_shapes(bsz, spec, tile_b)
 
     tab_p = jnp.zeros((bp, m1p, qp), dtype)
     # Keep the objective row at index m (kernel uses static m); padding rows
@@ -71,9 +150,10 @@ def _pad_launch_inputs(tab, basis, phase, b, c, m: int, n: int, tile_b: int):
 
 def _launch(
     tab_p, basis_p, phase_p, c_ext, feas_p, cap, *,
-    bsz, m, n, np_pad, rule, seed, tile_b, tol, static_cap, want_state, interpret,
+    bsz, spec, np_pad, rule, seed, tile_b, tol, static_cap, want_state, interpret,
 ):
     """Run the kernel and strip the padding off every output."""
+    m, n = spec.m, spec.n
     outs = simplex_pallas(
         tab_p,
         basis_p,
@@ -81,8 +161,7 @@ def _launch(
         c_ext,
         feas_p,
         cap,
-        m=m,
-        n=n,
+        spec=spec,
         n_padded=np_pad,
         rule=rule,
         seed=seed,
@@ -106,9 +185,8 @@ def _launch(
     if not want_state:
         return sol
     tab_out, phase_out = outs[5:]
-    q = num_cols(m, n)
     state = ResumeState(
-        tab=tab_out[:bsz, : m + 1, :q],
+        tab=tab_out[:bsz, : m + 1, : spec.q],
         basis=basis_out[:bsz, :m],
         phase=phase_out[:bsz],
     )
@@ -118,21 +196,22 @@ def _launch(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "rule", "seed", "tol", "tile_b", "static_cap", "want_state", "interpret"
+        "spec", "rule", "seed", "tol", "tile_b", "static_cap", "want_state",
+        "interpret",
     ),
 )
 def _solve_jit(
     a, b, c, basis0, cap, *,
-    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+    spec, rule, seed, tol, tile_b, static_cap, want_state, interpret,
 ):
-    bsz, m, n = a.shape
-    tab, basis, phase = build_tableau(a, b, c, basis0)
+    bsz = a.shape[0]
+    tab, basis, phase = build_tableau(a, b, c, basis0, spec)
     tab_p, basis_p, phase_p, c_ext, feas_p, np_pad = _pad_launch_inputs(
-        tab, basis, phase, b, c, m, n, tile_b
+        tab, basis, phase, b, c, spec, tile_b
     )
     return _launch(
         tab_p, basis_p, phase_p, c_ext, feas_p, cap,
-        bsz=bsz, m=m, n=n, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
+        bsz=bsz, spec=spec, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
         tol=tol, static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 
@@ -140,21 +219,21 @@ def _solve_jit(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "rule", "seed", "tol", "tile_b", "static_cap", "want_state", "interpret"
+        "spec", "rule", "seed", "tol", "tile_b", "static_cap", "want_state",
+        "interpret",
     ),
 )
 def _resume_jit(
     b, c, state, cap, *,
-    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+    spec, rule, seed, tol, tile_b, static_cap, want_state, interpret,
 ):
-    bsz, m = state.basis.shape
-    n = c.shape[-1]
+    bsz = state.basis.shape[0]
     tab_p, basis_p, phase_p, c_ext, feas_p, np_pad = _pad_launch_inputs(
-        state.tab, state.basis, state.phase, b, c, m, n, tile_b
+        state.tab, state.basis, state.phase, b, c, spec, tile_b
     )
     return _launch(
         tab_p, basis_p, phase_p, c_ext, feas_p, cap,
-        bsz=bsz, m=m, n=n, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
+        bsz=bsz, spec=spec, np_pad=np_pad, rule=rule, seed=seed, tile_b=tile_b,
         tol=tol, static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 
@@ -176,11 +255,12 @@ def simplex_solve(
     max_iters: int = 0,
     seed: int = 0,
     tol: float = 0.0,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
     basis0: jnp.ndarray | None = None,
     want_state: bool = False,
     dynamic_cap: bool = True,
+    layout: str = DEFAULT_LAYOUT,
 ):
     """Solve a batch of LPs with the VMEM-resident Pallas kernel.
 
@@ -195,6 +275,13 @@ def simplex_solve(
     so warm rows enter the kernel already in phase II; the final basis
     comes back in ``LPSolution.basis`` for reuse.
 
+    ``layout`` selects the tableau storage (``"compact"`` default /
+    ``"dense"``; see ``core/tableau.py``) — results are bit-identical,
+    VMEM cost is not.  ``tile_b`` is the batch tile; None (default) sizes
+    it from the VMEM budget (:func:`auto_tile_b`) — the compact layout's
+    smaller tableau yields a LARGER auto tile.  Results never depend on
+    the tiling.
+
     ``max_iters`` is a traced kernel scalar: calls with different caps over
     one shape share one executable (``dynamic_cap=False`` restores the
     cap-specialized baseline).  ``want_state`` additionally returns the
@@ -203,6 +290,9 @@ def simplex_solve(
     if interpret is None:
         interpret = not _on_tpu()
     bsz, m, n = a.shape
+    spec = TableauSpec(m, n, layout)
+    if tile_b is None:
+        tile_b = auto_tile_b(bsz, spec, a.dtype, want_state)
     cap = resolve_cap(max_iters, m, n)
     if tol <= 0.0:
         tol = engine.default_tolerance(a.dtype)
@@ -210,7 +300,7 @@ def simplex_solve(
     cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
     return _solve_jit(
         a, b, c, basis0, cap_arr,
-        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        spec=spec, rule=rule, seed=seed, tol=tol, tile_b=tile_b,
         static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 
@@ -223,7 +313,7 @@ def simplex_resume(
     max_iters: int = 0,
     seed: int = 0,
     tol: float = 0.0,
-    tile_b: int = 8,
+    tile_b: int | None = None,
     interpret: bool | None = None,
     want_state: bool = True,
     dynamic_cap: bool = True,
@@ -232,12 +322,18 @@ def simplex_resume(
 
     The state round-trips through the same padding the cold launch uses,
     so a sequence of resumed rounds whose step budgets sum to ``K`` is
-    bit-identical to one uninterrupted kernel run with cap ``K``.
+    bit-identical to one uninterrupted kernel run with cap ``K``.  The
+    layout is recovered from the carried tableau itself
+    (``TableauSpec.from_tableau``) — a resume continues in whatever
+    layout the interrupted solve used.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    m = state.basis.shape[1]
+    bsz, m = state.basis.shape
     n = c.shape[-1]
+    spec = TableauSpec.from_tableau(m, n, state.tab.shape[-1])
+    if tile_b is None:
+        tile_b = auto_tile_b(bsz, spec, state.tab.dtype, want_state)
     cap = resolve_cap(max_iters, m, n)
     if tol <= 0.0:
         tol = engine.default_tolerance(state.tab.dtype)
@@ -245,7 +341,7 @@ def simplex_resume(
     cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
     return _resume_jit(
         b, c, state, cap_arr,
-        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        spec=spec, rule=rule, seed=seed, tol=tol, tile_b=tile_b,
         static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 

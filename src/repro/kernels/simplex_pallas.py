@@ -11,7 +11,11 @@ bandwidth (819 GB/s) to VMEM bandwidth (~an order of magnitude higher).
 
 Layout: (TB, m+1, q_padded) per block with q padded to the 128-lane
 boundary — the batch dim is the paper's "column-major" axis reborn: every
-element-wise tableau op is contiguous across lanes.
+element-wise tableau op is contiguous across lanes.  ``q`` itself comes
+from the static :class:`~repro.core.tableau.TableauSpec`: under the
+default ``"compact"`` layout the artificial block is implicit (basis IDs
+only), which shrinks the VMEM block per LP by ~m lanes-rows and is what
+lets the auto-tiler (``kernels/ops.py``) fit more LPs per tile.
 
 The iteration math itself — entering-column selection (all three pivot
 rules), the min-ratio test with the degenerate-artificial escape, the
@@ -41,6 +45,7 @@ from jax.experimental import pallas as pl
 
 from ..core import engine
 from ..core.lp import ITER_LIMIT, RUNNING, UNBOUNDED
+from ..core.tableau import TableauSpec
 
 _BIG = engine.BIG
 
@@ -58,14 +63,14 @@ def _kernel(
     iters_ref,  # out (TB,) i32
     basis_out_ref,  # out (TB, Mp) i32 — final basis (warm-start reuse)
     *state_out_refs,  # want_state: out (TB, M1p, Qp) f32 tab, (TB,) i32 phase
-    m: int,
-    n: int,
+    spec: TableauSpec,
     rule: str,
     seed: int,
     tol: float,
     static_cap: Optional[int],
     want_state: bool,
 ):
+    m, n = spec.m, spec.n
     tb = tab_ref.shape[0]
     qp = tab_ref.shape[2]
 
@@ -95,20 +100,20 @@ def _kernel(
         at_opt = max_c <= tol
 
         tab, phase, status = engine.phase_transition(
-            tab, basis, phase, status, at_opt, c_ext, feas_tol, m,
+            tab, basis, phase, status, at_opt, c_ext, feas_tol, spec,
             gather=False,  # Mosaic: one-hot reductions only
         )
 
         pivoting = active & ~at_opt
         l, min_ratio, full_col = engine.ratio_test(
-            tab, basis, e, m, n, tol, gather=False
+            tab, basis, e, spec, tol, gather=False
         )
         unbounded = pivoting & (min_ratio >= _BIG / 2)
         status = jnp.where(unbounded, UNBOUNDED, status)
         do_pivot = pivoting & ~unbounded
 
         tab, basis = engine.pivot_update(
-            tab, basis, e, l, full_col, do_pivot, m, tol, gather=False
+            tab, basis, e, l, full_col, do_pivot, spec, tol, gather=False
         )
         iters = iters + do_pivot.astype(jnp.int32)
         return tab, basis, phase, status, iters, step + 1
@@ -127,7 +132,7 @@ def _kernel(
     # Finite sentinel instead of -inf inside the kernel; the wrapper
     # (kernels/ops.py) re-masks non-optimal objectives to -inf outside.
     objective, x = engine.extract_solution(
-        tab, basis, status, m, x_ref.shape[1], fill=-_BIG
+        tab, basis, status, spec, x_ref.shape[1], fill=-_BIG
     )
 
     obj_ref[...] = objective
@@ -154,8 +159,7 @@ def simplex_pallas(
     feas_tol: jnp.ndarray,  # (B,) phase-I feasibility threshold
     cap: jnp.ndarray,  # (1,) int32 iteration cap (traced scalar input)
     *,
-    m: int,
-    n: int,
+    spec: TableauSpec,
     n_padded: int,
     rule: str = engine.LPC,
     seed: int = 0,
@@ -171,15 +175,25 @@ def simplex_pallas(
     ``static_cap`` (a trace-time int) overrides it for the cap-specialized
     baseline.  With ``want_state`` the kernel also writes the terminal
     tableau and phase (padded) so a capped round can be resumed exactly.
+    ``spec`` (static) fixes the tableau layout the padded blocks carry.
+
+    A ``tile_b`` larger than the (padded) batch is clamped down to it —
+    a small batch runs as one small tile instead of crashing (the old
+    ``assert bsz % tile_b == 0``) or being padded up to a full tile.  A
+    batch that is not a tile multiple is a caller bug and still raises.
     """
     bsz, m1p, qp = tab.shape
-    assert bsz % tile_b == 0, (bsz, tile_b)
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b != 0:
+        raise ValueError(
+            f"batch {bsz} is not a multiple of tile_b {tile_b}; "
+            "pad the batch to a tile multiple (see kernels/ops.py)"
+        )
     grid = (bsz // tile_b,)
 
     kernel = functools.partial(
         _kernel,
-        m=m,
-        n=n,
+        spec=spec,
         rule=rule,
         seed=seed,
         tol=tol,
