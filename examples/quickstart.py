@@ -61,16 +61,24 @@ def main():
 
     # 5) Backend registry: same protocol, different engines.
     #    ("pallas" = VMEM-resident kernels: interpret mode on CPU, Mosaic
-    #    on TPU; "reference" = sequential float64 NumPy oracle.)
+    #    on TPU; "pdhg" = first-order restarted PDHG, crossover polishes
+    #    its answer to an exact vertex; "reference" = sequential float64
+    #    NumPy oracle.)
     small = lp.LPBatch(batch.a[:64], batch.b[:64], batch.c[:64])
     base = repro.solve(small)
     for name in repro.available_backends():
         if name == "xla":
             continue
-        other = repro.solve(small, SolveOptions(backend=name))
-        agree = np.allclose(np.asarray(other.objective),
-                            np.asarray(base.objective), rtol=1e-4)
-        print(f"backend {name!r} agrees with xla: {agree}")
+        opts = SolveOptions(backend=name, crossover=(name == "pdhg"))
+        other = repro.solve(small, opts)
+        # Compare where both sides report OPTIMAL: iterative backends may
+        # honestly return ITER_LIMIT on a few hard rows instead of a value.
+        ok = ((np.asarray(other.status) == lp.OPTIMAL)
+              & (np.asarray(base.status) == lp.OPTIMAL))
+        agree = np.allclose(np.asarray(other.objective)[ok],
+                            np.asarray(base.objective)[ok], rtol=1e-4)
+        print(f"backend {name!r} agrees with xla: {agree} "
+              f"({int(ok.sum())}/{small.batch} rows optimal on both)")
 
 
 if __name__ == "__main__":

@@ -153,8 +153,10 @@ def _solve_problem(
     if problem.boxlike:
         # No general rows + finite box: closed form, no simplex. The jnp
         # closed form (solve_box) is already a single fused op; a non-default
-        # backend routes through its registered hyperbox kernel instead.
-        if options is None or options.backend == "xla":
+        # backend routes through its registered hyperbox kernel instead
+        # ("auto" counts as default: the routing frontier is about
+        # iteration cost, which a closed-form solve does not have).
+        if options is None or options.backend in ("xla", "auto"):
             sol = solve_box(problem)
             if stats is not None:
                 stats.record(sol)

@@ -47,6 +47,7 @@ import numpy as np
 
 from . import engine as _engine
 from . import hyperbox as _hyperbox
+from . import pdhg as _pdhg
 from . import simplex as _simplex
 from .lp import LPBatch, LPSolution, ResumeState
 from .tableau import DEFAULT_LAYOUT, LAYOUTS, TableauSpec
@@ -58,6 +59,14 @@ COMPACTION_MODES = ("off", "chunked", "every_k")
 #: Valid values of :attr:`SolveOptions.resume`.
 RESUME_MODES = ("scratch", "basis")
 
+#: Shape frontier for ``backend="auto"``: LPs with ``max(m, n)`` at or
+#: above it route to the first-order ``pdhg`` backend, smaller ones to a
+#: simplex backend.  The default matches the measured simplex/pdhg
+#: crossover (``benchmarks/fig_frontier.py``) and the regime the paper's
+#: tableau method explicitly cedes (m, n >= 500); override per solve via
+#: :attr:`SolveOptions.route_frontier`.
+DEFAULT_ROUTE_FRONTIER = 500
+
 
 @dataclasses.dataclass(frozen=True)
 class SolveOptions:
@@ -66,8 +75,12 @@ class SolveOptions:
     Parameters
     ----------
     backend : str, default "xla"
-        Registered backend name (``"xla"`` | ``"pallas"`` |
-        ``"reference"`` | a name added via :func:`register_backend`).
+        Registered backend name (``"xla"`` | ``"pallas"`` | ``"pdhg"`` |
+        ``"reference"`` | a name added via :func:`register_backend`), or
+        ``"auto"`` — not a registered backend but a routing directive:
+        the dispatch layer resolves it per shape through
+        :func:`route_shape` (simplex below :attr:`route_frontier`, the
+        first-order ``pdhg`` backend at or above it).
     rule : str, default "lpc"
         Pivot rule: ``"lpc"`` (largest positive coefficient, the paper
         default), ``"rpc"`` (randomized), or ``"bland"`` (anti-cycling).
@@ -158,6 +171,29 @@ class SolveOptions:
         reads.  The float64 ``reference`` oracle ignores the knob.
     seed : int, default 0
         PRNG seed for the randomized (RPC) pivot rule.
+    pdhg_tol : float, default 0.0
+        Relative KKT tolerance for the first-order ``pdhg`` backend
+        (primal/dual residuals and duality gap); 0 means the backend
+        default (1e-4, PDLP's "moderate accuracy").  Ignored by the
+        simplex backends, whose ``tolerance`` knob is a pivot threshold,
+        not a convergence target.
+    pdhg_restart : int, default 0
+        Fixed restart-to-average period of the ``pdhg`` backend; 0 means
+        the backend default (64).  The period is per-LP and fixed (not
+        adaptive) so compaction cannot perturb trajectories.
+    crossover : bool, default False
+        Polish the ``pdhg`` backend's OPTIMAL rows into EXACT vertices:
+        after the first-order solve converges, a basis guess is read off
+        each point (top-m of ``[x | slacks]``) and handed to the simplex
+        engine's warm-start path, which returns the exact vertex
+        objective/point plus a reusable ``LPSolution.basis``
+        (``core/pdhg.py:crossover``).  Requires ``backend`` ``"pdhg"``
+        or ``"auto"`` — simplex output is already a vertex.
+    route_frontier : int, default 0
+        The ``backend="auto"`` shape frontier: shapes with ``max(m, n)``
+        at or above it route to ``pdhg``, below it to a simplex backend
+        (see :func:`route_shape`).  0 means
+        :data:`DEFAULT_ROUTE_FRONTIER`.
     """
 
     backend: str = "xla"
@@ -173,6 +209,10 @@ class SolveOptions:
     dynamic_caps: bool = True
     layout: str = DEFAULT_LAYOUT
     seed: int = 0
+    pdhg_tol: float = 0.0
+    pdhg_restart: int = 0
+    crossover: bool = False
+    route_frontier: int = 0
 
     def __post_init__(self):
         # Validate here (not in the dispatch layer) so every route —
@@ -197,6 +237,39 @@ class SolveOptions:
             raise ValueError(
                 f"unknown tableau layout {self.layout!r}; "
                 f"expected one of {LAYOUTS}"
+            )
+        if self.pdhg_tol < 0.0:
+            raise ValueError(f"pdhg_tol must be >= 0, got {self.pdhg_tol!r}")
+        if self.pdhg_restart < 0:
+            raise ValueError(
+                f"pdhg_restart must be >= 0, got {self.pdhg_restart!r}"
+            )
+        if self.route_frontier < 0:
+            raise ValueError(
+                f"route_frontier must be >= 0, got {self.route_frontier!r}"
+            )
+        if self.backend == "pdhg":
+            # A first-order method has no pivot rule and no tableau: a
+            # non-default rule/layout on it is a misconfiguration, not a
+            # silently-ignorable hint.
+            if self.rule != _engine.LPC:
+                raise ValueError(
+                    f"rule={self.rule!r} is meaningless for backend='pdhg' "
+                    "(a first-order method performs no pivots); leave rule "
+                    "at its default 'lpc'"
+                )
+            if self.layout != DEFAULT_LAYOUT:
+                raise ValueError(
+                    f"layout={self.layout!r} is meaningless for "
+                    "backend='pdhg' (a first-order method stores no "
+                    f"tableau); leave layout at its default "
+                    f"{DEFAULT_LAYOUT!r}"
+                )
+        if self.crossover and self.backend not in ("pdhg", "auto"):
+            raise ValueError(
+                "crossover=True polishes a first-order solution into an "
+                "exact vertex and requires backend='pdhg' or 'auto'; "
+                f"backend={self.backend!r} already returns vertices"
             )
 
     def replace(self, **kw) -> "SolveOptions":
@@ -355,6 +428,15 @@ class Backend:
         ``() -> int`` — number of solver executables this backend has
         compiled so far.  The dispatch layer diffs it around each call to
         maintain ``SolveStats.compiles`` / ``SolveStats.cache_hits``.
+    auto_cap : callable, optional
+        ``(m, n) -> int`` — the backend's auto iteration cap when
+        ``SolveOptions.max_iters`` is 0.  None means the library-wide
+        simplex rule ``core.lp.auto_cap`` (``50 (m + n)``); the
+        first-order ``pdhg`` backend overrides it (cheap iterations,
+        more of them).  The dispatch layer's round scheduler reads this
+        hook so its final compaction round uses the same cap a plain
+        solve on this backend would — the rule its
+        results-identical-to-``"off"`` guarantee rests on.
     """
 
     name: str
@@ -367,6 +449,7 @@ class Backend:
         Callable[[LPBatch, ResumeState, SolveOptions], Tuple[LPSolution, ResumeState]]
     ] = None
     cache_size: Optional[Callable[[], int]] = None
+    auto_cap: Optional[Callable[[int, int], int]] = None
 
     @property
     def supports_resume(self) -> bool:
@@ -433,6 +516,49 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def route_shape(
+    m: int,
+    n: int,
+    dtype=jnp.float32,
+    options: Optional[SolveOptions] = None,
+    layout: Optional[str] = None,
+) -> str:
+    """The shape-routing table: pick a backend name for an LP shape.
+
+    One rule, consulted from both directions:
+
+    * ``backend="auto"`` resolves through it in the dispatch layer —
+      simplex below the routing frontier (``pallas`` when on TPU and the
+      tableau fits VMEM, else ``xla``), the first-order ``pdhg`` backend
+      at or above it (the regime the paper's tableau simplex cedes);
+    * the ``pallas`` backend's VMEM fallback
+      (:func:`_pallas_vmem_fallback`) re-routes over-budget shapes
+      through it instead of hard-coding ``xla``, so a tableau too big
+      for VMEM lands on ``pdhg`` when it is also past the frontier —
+      which is exactly the shape class where the O(m (n + m)) tableau
+      stops making sense anywhere, not just in VMEM.
+
+    The frontier is ``SolveOptions.route_frontier`` (0 ->
+    :data:`DEFAULT_ROUTE_FRONTIER`); the simplex leg reuses the kernel's
+    ``fits_vmem`` predicate with the conservative ``want_state=True``
+    footprint so routing never flips between the start and resume rounds
+    of one solve.
+    """
+    frontier = DEFAULT_ROUTE_FRONTIER
+    if options is not None and options.route_frontier > 0:
+        frontier = options.route_frontier
+    if max(m, n) >= frontier:
+        return "pdhg"
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    layout = layout or (options.layout if options is not None else DEFAULT_LAYOUT)
+    if kernel_ops._on_tpu() and kernel_ops.fits_vmem(
+        m, n, dtype, layout, want_state=True
+    ):
+        return "pallas"
+    return "xla"
+
+
 # ---------------------------------------------------------------------------
 # built-in backends
 # ---------------------------------------------------------------------------
@@ -485,16 +611,20 @@ _VMEM_FALLBACK_WARNED: set = set()
 
 def _pallas_vmem_fallback(
     m: int, n: int, dtype, options: SolveOptions, layout: Optional[str] = None
-) -> bool:
-    """True when this shape must route to ``xla`` instead of the kernel.
+) -> Optional[str]:
+    """The backend name this shape must route to, or None to run the kernel.
 
     A shape whose SINGLE-LP tableau exceeds the kernel's VMEM budget
     cannot run as a Pallas tile at any ``tile_b`` — historically those
-    shapes just failed inside Mosaic.  Routing is safe because the two
-    accelerated backends are bit-identical by construction (they drive
-    the same ``core/engine.py`` blocks), so the fallback changes where
-    the arithmetic runs, never what it computes.  Resume states are
-    likewise interchangeable between the two.
+    shapes just failed inside Mosaic, then fell back to a hard-coded
+    ``xla``.  The fallback now consults the shape-routing table
+    (:func:`route_shape`): below the routing frontier the substitute is
+    ``xla`` (bit-identical results — both simplex backends drive the
+    same ``core/engine.py`` blocks, and their resume states are
+    interchangeable); at or past it the substitute is the first-order
+    ``pdhg`` backend, whose O(m n) state is why the shape overflowed a
+    tableau in the first place (results then carry pdhg's tolerance
+    semantics — the warning says which backend was chosen).
 
     ``layout`` overrides ``options.layout`` for the footprint estimate —
     a resume runs in the layout of its CARRIED state, which a cross-
@@ -506,24 +636,35 @@ def _pallas_vmem_fallback(
     # want_state=True is the conservative (largest-footprint) estimate, so
     # the start/resume rounds of a basis-resumed solve route consistently.
     if kernel_ops.fits_vmem(m, n, dtype, layout, want_state=True):
-        return False
+        return None
+    target = route_shape(m, n, dtype, options, layout=layout)
+    if target == "pallas":  # the table can't re-route here: it won't fit
+        target = "xla"
     key = (m, n, str(jnp.dtype(dtype)), layout)
     if key not in _VMEM_FALLBACK_WARNED:
         _VMEM_FALLBACK_WARNED.add(key)
+        fidelity = (
+            "bit-identical results"
+            if target == "xla"
+            else "first-order results at pdhg_tol accuracy"
+        )
         warnings.warn(
             f"pallas backend: single-LP tableau for shape (m={m}, n={n}, "
             f"{key[2]}, layout={layout!r}) exceeds the VMEM budget "
-            f"({kernel_ops.VMEM_BUDGET_BYTES} bytes); routing to the xla "
-            "backend (bit-identical results)",
+            f"({kernel_ops.VMEM_BUDGET_BYTES} bytes); routing to the "
+            f"{target} backend ({fidelity})",
             stacklevel=3,
         )
-    return True
+    return target
 
 
 def _pallas_solve(
     batch: LPBatch, options: SolveOptions, want_state: bool = False
 ):
-    if _pallas_vmem_fallback(batch.m, batch.n, batch.a.dtype, options):
+    fallback = _pallas_vmem_fallback(batch.m, batch.n, batch.a.dtype, options)
+    if fallback == "pdhg":
+        return _pdhg_solve(batch, options, want_state)
+    if fallback is not None:
         return _xla_solve(batch, options, want_state)
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
@@ -547,6 +688,11 @@ def _pallas_start(batch: LPBatch, options: SolveOptions):
 
 
 def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
+    # A solve the fallback routed to pdhg hands back a PDHGResumeState;
+    # continue it on the pdhg backend (a first-order state has no tableau
+    # to sniff a layout from).
+    if isinstance(state, _pdhg.PDHGResumeState):
+        return _pdhg_resume(batch, state, options)
     # The resume runs in the layout of the CARRIED state (recovered from
     # the tableau width), not options.layout — route on that layout so a
     # cross-layout resume can't sneak an over-budget tableau past the
@@ -557,6 +703,8 @@ def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
     if _pallas_vmem_fallback(
         batch.m, batch.n, batch.a.dtype, options, layout=state_layout
     ):
+        # A carried simplex tableau can only continue on a simplex
+        # driver, whatever the routing table says for cold solves.
         return _xla_resume(batch, state, options)
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
@@ -576,12 +724,17 @@ def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
 def _pallas_cache_size() -> int:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
-    # Include the XLA driver's caches: the VMEM fallback routes
-    # over-budget shapes through _xla_solve/_xla_resume, and their
-    # compiles must stay visible to SolveStats' compiles/cache_hits
-    # attribution (for pure-kernel traffic the xla term is constant, so
-    # the diff the dispatch layer takes is unchanged).
-    return kernel_ops.compile_cache_size() + _simplex.compile_cache_size()
+    # Include the fallback targets' caches: the VMEM fallback routes
+    # over-budget shapes through _xla_solve/_xla_resume or the pdhg
+    # backend, and their compiles must stay visible to SolveStats'
+    # compiles/cache_hits attribution (for pure-kernel traffic the other
+    # terms are constant, so the diff the dispatch layer takes is
+    # unchanged).
+    return (
+        kernel_ops.compile_cache_size()
+        + _simplex.compile_cache_size()
+        + _pdhg_cache_size()
+    )
 
 
 def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
@@ -598,6 +751,68 @@ def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
         status=jnp.full((bsz,), OPTIMAL, jnp.int32),
         iterations=jnp.zeros((bsz,), jnp.int32),
     )
+
+
+# The pdhg backend has two drivers behind one step function
+# (core/pdhg.py:pdhg_step): the XLA while_loop driver everywhere, the
+# VMEM-resident Pallas kernel (kernels/pdhg_pallas.py) on TPU when the
+# O(m n) data block fits the budget.  Unlike the simplex pair the two are
+# not bit-identical (matvec reduction order differs), so the choice is
+# per-platform, never per-call: every round of one solve uses one driver.
+
+
+def _pdhg_use_kernel(m: int, n: int, dtype) -> bool:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops._on_tpu() and kernel_ops.pdhg_fits_vmem(m, n, dtype)
+
+
+def _pdhg_solve(
+    batch: LPBatch, options: SolveOptions, want_state: bool = False
+):
+    # basis0 is a simplex warm-start hint; a first-order method has no
+    # basis to warm from, so it is ignored per the backend contract.
+    kw = dict(
+        tol=options.pdhg_tol,
+        restart=options.pdhg_restart,
+        max_iters=options.max_iters,
+        want_state=want_state,
+        dynamic_cap=options.dynamic_caps,
+    )
+    if _pdhg_use_kernel(batch.m, batch.n, batch.a.dtype):
+        from ..kernels import ops as kernel_ops
+
+        return kernel_ops.pdhg_solve(batch.a, batch.b, batch.c, **kw)
+    return _pdhg.solve_batched(batch.a, batch.b, batch.c, **kw)
+
+
+def _pdhg_start(batch: LPBatch, options: SolveOptions):
+    return _pdhg_solve(batch, options, want_state=True)
+
+
+def _pdhg_resume(
+    batch: LPBatch, state: "_pdhg.PDHGResumeState", options: SolveOptions
+):
+    # Unlike the simplex resume, pdhg reads batch.a every step (the
+    # matvecs) — the dispatch layer always passes the full batch back.
+    kw = dict(
+        tol=options.pdhg_tol,
+        restart=options.pdhg_restart,
+        max_iters=options.max_iters,
+        want_state=True,
+        dynamic_cap=options.dynamic_caps,
+    )
+    if _pdhg_use_kernel(batch.m, batch.n, batch.a.dtype):
+        from ..kernels import ops as kernel_ops
+
+        return kernel_ops.pdhg_resume(batch.a, batch.b, batch.c, state, **kw)
+    return _pdhg.resume_batched(batch.a, batch.b, batch.c, state, **kw)
+
+
+def _pdhg_cache_size() -> int:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return _pdhg.compile_cache_size() + kernel_ops.pdhg_compile_cache_size()
 
 
 def _reference_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
@@ -655,6 +870,19 @@ register_backend(
         start_canonical=_pallas_start,
         resume_canonical=_pallas_resume,
         cache_size=_pallas_cache_size,
+    )
+)
+# Box problems are closed-form (no iteration at all) — the first-order
+# backend routes its hyperbox leg straight to the xla implementation.
+register_backend(
+    Backend(
+        "pdhg",
+        _pdhg_solve,
+        _xla_hyperbox,
+        start_canonical=_pdhg_start,
+        resume_canonical=_pdhg_resume,
+        cache_size=_pdhg_cache_size,
+        auto_cap=_pdhg.auto_cap_pdhg,
     )
 )
 # The float64 oracle neither tracks mid-solve state nor compiles anything:

@@ -70,10 +70,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backends import Backend, SolveOptions, SolveStats, get_backend
+from . import pdhg as _pdhg
+from .backends import Backend, SolveOptions, SolveStats, get_backend, route_shape
 from .bucketing import next_pow2
+from .engine import LPC
 from .lp import ITER_LIMIT, LPBatch, LPSolution, ResumeState, auto_cap
-from .tableau import TableauSpec
+from .tableau import DEFAULT_LAYOUT, TableauSpec
 
 
 def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
@@ -107,26 +109,28 @@ def _trim_solution(sol: LPSolution, k: int) -> LPSolution:
         status=sol.status[:k],
         iterations=sol.iterations[:k],
         basis=None if sol.basis is None else sol.basis[:k],
+        y=None if sol.y is None else sol.y[:k],
     )
 
 
 def _concat_solutions(parts: Sequence[LPSolution]) -> LPSolution:
     bases = [p.basis for p in parts]
+    ys = [p.y for p in parts]
     return LPSolution(
         objective=jnp.concatenate([p.objective for p in parts]),
         x=jnp.concatenate([p.x for p in parts]),
         status=jnp.concatenate([p.status for p in parts]),
         iterations=jnp.concatenate([p.iterations for p in parts]),
         basis=jnp.concatenate(bases) if all(b is not None for b in bases) else None,
+        y=jnp.concatenate(ys) if all(y is not None for y in ys) else None,
     )
 
 
-def _concat_states(parts: Sequence[ResumeState]) -> ResumeState:
-    return ResumeState(
-        tab=jnp.concatenate([p.tab for p in parts]),
-        basis=jnp.concatenate([p.basis for p in parts]),
-        phase=jnp.concatenate([p.phase for p in parts]),
-    )
+def _concat_states(parts: Sequence):
+    # Any resume-state flavor (simplex ResumeState, PDHGResumeState, a
+    # plug-in backend's record): both are registered dataclass pytrees,
+    # so leaf-wise concatenation rebuilds the same record type.
+    return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *parts)
 
 
 def _resolve_axes(
@@ -159,11 +163,9 @@ def _stage_batch(batch: LPBatch, lo: int, hi: int, mesh, axes) -> LPBatch:
     )
 
 
-def _stage_state(state: ResumeState, lo: int, hi: int, mesh, axes) -> ResumeState:
-    return ResumeState(
-        _stage(state.tab[lo:hi], mesh, axes),
-        _stage(state.basis[lo:hi], mesh, axes),
-        _stage(state.phase[lo:hi], mesh, axes),
+def _stage_state(state, lo: int, hi: int, mesh, axes):
+    return jax.tree_util.tree_map(
+        lambda v: _stage(v[lo:hi], mesh, axes), state
     )
 
 
@@ -195,6 +197,11 @@ def _scatter_solution(
         basis = basis.at[idx].set(part.basis)
     elif part.basis is not None:
         basis = None  # mixed provenance: drop rather than fabricate
+    y = full.y
+    if y is not None and part.y is not None:
+        y = y.at[idx].set(part.y)
+    elif part.y is not None:
+        y = None  # mixed provenance: drop rather than fabricate
     if accumulate:
         iterations = full.iterations.at[idx].add(part.iterations)
     else:
@@ -205,6 +212,7 @@ def _scatter_solution(
         status=full.status.at[idx].set(part.status),
         iterations=iterations,
         basis=basis,
+        y=y,
     )
 
 
@@ -228,30 +236,43 @@ def _pad_batch_to(batch: LPBatch, size: int) -> Tuple[LPBatch, int]:
     ), bsz
 
 
-def _pad_state_to(state: ResumeState, size: int) -> ResumeState:
+def _pad_state_to(state, size: int):
     pad = size - state.batch
     if pad <= 0:
         return state
-    return ResumeState(
-        _pad_rows(state.tab, pad),
-        _pad_rows(state.basis, pad),
-        _pad_rows(state.phase, pad),
-    )
+    return jax.tree_util.tree_map(lambda v: _pad_rows(v, pad), state)
 
 
-def _full_cap(batch: LPBatch, options: SolveOptions) -> int:
-    """The effective iteration cap — the backends' shared 0 -> auto rule."""
-    return options.max_iters if options.max_iters > 0 else auto_cap(batch.m, batch.n)
+def _full_cap(
+    batch: LPBatch, options: SolveOptions, backend: Optional[Backend] = None
+) -> int:
+    """The effective iteration cap — the backend's 0 -> auto rule.
+
+    The auto rule comes from the backend's ``auto_cap`` hook when it has
+    one (the first-order ``pdhg`` backend budgets ~40 (m + n) cheap
+    steps) and the library-wide simplex rule ``50 (m + n)`` otherwise;
+    the round scheduler and a plain solve MUST agree on it, which is
+    what keeps compaction results identical to ``compaction="off"``.
+    """
+    if options.max_iters > 0:
+        return options.max_iters
+    cap_fn = (backend.auto_cap if backend is not None else None) or auto_cap
+    return cap_fn(batch.m, batch.n)
 
 
-def _round_cap(batch: LPBatch, options: SolveOptions) -> int:
+def _round_cap(
+    batch: LPBatch, options: SolveOptions, backend: Optional[Backend] = None
+) -> int:
     """Per-round compaction budget (``compact_every``, 0 -> auto 8*(m+n))."""
     k = options.compact_every if options.compact_every > 0 else 8 * (batch.m + batch.n)
-    return min(k, _full_cap(batch, options))
+    return min(k, _full_cap(batch, options, backend))
 
 
 def _round_plan(
-    batch: LPBatch, options: SolveOptions, incremental: bool = False
+    batch: LPBatch,
+    options: SolveOptions,
+    incremental: bool = False,
+    backend: Optional[Backend] = None,
 ) -> Tuple[Sequence[int], bool]:
     """Lower ``options`` to a round plan: per-round iteration caps.
 
@@ -272,14 +293,14 @@ def _round_plan(
     ``carry_iters`` is True only for the legacy adaptive two-pass, whose
     historical contract *continues* counting iterations across rounds.
     """
-    full_cap = _full_cap(batch, options)
+    full_cap = _full_cap(batch, options, backend)
     if options.compaction == "chunked":
-        cap = _round_cap(batch, options)
+        cap = _round_cap(batch, options, backend)
         if cap >= full_cap:
             return [cap], False
         return ([cap, full_cap - cap] if incremental else [cap, full_cap]), False
     if options.compaction == "every_k":
-        cap = _round_cap(batch, options)
+        cap = _round_cap(batch, options, backend)
         caps = [cap]
         cum = cap
         while cum < full_cap:
@@ -327,6 +348,11 @@ def solve_canonical(
         and ``options.resume`` its scratch/continue flavor (see
         :class:`repro.core.backends.SolveOptions`); compaction takes
         precedence over the legacy ``options.first_cap`` two-pass solve.
+        ``options.backend="auto"`` resolves to a concrete backend here,
+        once per solve, through the shape-routing table
+        (:func:`repro.core.backends.route_shape`); with the ``pdhg``
+        backend, ``options.crossover`` polishes the final solution's
+        OPTIMAL rows into exact simplex vertices as a post-pass.
     mesh : jax.sharding.Mesh, optional
         When given, the batch dimension is sharded across the mesh axes
         named in ``batch_axes``.
@@ -345,6 +371,21 @@ def solve_canonical(
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
+    if options.backend == "auto":
+        # Resolve the routing directive to a concrete backend ONCE, up
+        # front: every round, chunk, and resume of this solve then runs
+        # the same implementation (mixing drivers mid-solve would break
+        # the resume-state contract).
+        resolved = route_shape(batch.m, batch.n, batch.a.dtype, options)
+        if resolved == "pdhg":
+            # rule/layout configure the simplex leg of the routing table;
+            # on the first-order side they are meaningless (and would be
+            # rejected by validation), so they reset to defaults.
+            options = options.replace(
+                backend=resolved, rule=LPC, layout=DEFAULT_LAYOUT
+            )
+        else:
+            options = options.replace(backend=resolved)
     backend = get_backend(options.backend)
     # unroll > 1 groups loop steps in blocks of `unroll`; a mid-round
     # split would re-align the grouping and change the total step count,
@@ -355,7 +396,9 @@ def solve_canonical(
         and options.unroll <= 1
         and backend.supports_resume
     )
-    caps, carry_iters = _round_plan(batch, options, incremental=use_resume)
+    caps, carry_iters = _round_plan(
+        batch, options, incremental=use_resume, backend=backend
+    )
     base = options.replace(compaction="off", first_cap=None, resume="scratch")
 
     sol: Optional[LPSolution] = None
@@ -407,6 +450,16 @@ def solve_canonical(
         state = part_state
         if carry_iters:
             iter_offset += cap
+    if options.backend == "pdhg":
+        # Both pdhg post-passes run on the FINAL merged solution (not per
+        # round): each row is confirmed/polished exactly once, from the
+        # same terminal point regardless of how the rounds were sliced,
+        # so compaction modes stay results-identical to "off".
+        # Confirmation first — it may revoke a heuristic divergence flag
+        # (-> ITER_LIMIT), and crossover must only polish real optima.
+        sol = _pdhg.confirm_certificates(batch, sol, options)
+        if options.crossover:
+            sol = _pdhg.crossover(batch, sol, options)
     return sol
 
 
@@ -447,14 +500,20 @@ def _dispatch_round(
     chunk = options.chunk_size or bsz
     chunk = max(mesh_div, (chunk // mesh_div) * mesh_div)
     if stats is not None:
-        # Peak LOGICAL tableau footprint of this round: the largest chunk
+        # Peak LOGICAL solver footprint of this round: the largest chunk
         # dispatched (batch-padding replica rows count — they occupy real
-        # tableau storage) at the configured layout's unpadded bytes/LP.
+        # storage) at the backend's unpadded bytes/LP — the tableau for
+        # the simplex backends, problem data + iterate vectors for the
+        # first-order pdhg backend (no tableau exists there at all).
         # Backend-internal padding is NOT included: exact for the xla
-        # driver's (B, m+1, q) arrays; the Pallas kernel's lane/sublane
-        # padding (q -> 128-lane multiples) sits on top of this number.
-        spec = TableauSpec(batch.m, batch.n, options.layout)
-        stats.record_tableau(min(chunk, bsz) * spec.bytes_per_lp(batch.a.dtype))
+        # drivers' logical arrays; Pallas lane/sublane padding sits on
+        # top of this number.
+        if backend.name == "pdhg":
+            per_lp = _pdhg.state_bytes_per_lp(batch.m, batch.n, batch.a.dtype)
+        else:
+            spec = TableauSpec(batch.m, batch.n, options.layout)
+            per_lp = spec.bytes_per_lp(batch.a.dtype)
+        stats.record_tableau(min(chunk, bsz) * per_lp)
     parts = []
     state_parts = []
     # Stage chunk 0, then for each chunk: kick off the solve (async under
@@ -553,6 +612,10 @@ def solve_hyperbox(
         Support values in ``objective``, maximizing vertices in ``x``.
     """
     options = options or SolveOptions()
+    if options.backend == "auto":
+        # Box LPs are closed-form on every backend; the routing question
+        # (simplex vs first-order iteration cost) does not exist here.
+        options = options.replace(backend="xla")
     backend = get_backend(options.backend)
     directions = jnp.asarray(directions)
     if directions.shape[0] == 0:

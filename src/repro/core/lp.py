@@ -120,6 +120,13 @@ class ResumeState:
     (``TableauSpec.from_tableau``), so resumed rounds continue in the
     SAME layout regardless of the resuming call's options — which keeps
     a ``resume="basis"`` splice bit-identical in either layout.
+
+    This is one of two implementations of the dispatch layer's resume
+    protocol: any registered-pytree record with a ``batch`` property and
+    a ``take(idx)`` gather works (the round scheduler handles padding,
+    staging, and concatenation generically via ``jax.tree_util``).  The
+    first-order counterpart is
+    :class:`~repro.core.pdhg.PDHGResumeState`.
     """
 
     tab: jnp.ndarray  # (B, m+1, q) tableau at interruption
@@ -144,6 +151,13 @@ class LPSolution:
     ``LPBatch.basis0``) when the producing backend tracks one, else None.
     Feeding it back as the next solve's ``basis0`` is the warm-start path
     used by the reachability sweep (core/support.py).
+
+    ``y`` is the dual point (one multiplier per constraint row) when the
+    producing backend iterates in primal-dual space — the first-order
+    ``pdhg`` backend reports its dual iterate here, which at ``OPTIMAL``
+    is an approximate solution of ``min b.y  s.t.  A'y >= c, y >= 0``.
+    The simplex backends leave it None (their duals live implicitly in
+    the tableau's slack reduced costs).
     """
 
     objective: jnp.ndarray  # (B,)
@@ -151,6 +165,7 @@ class LPSolution:
     status: jnp.ndarray  # (B,) int32, see STATUS_* above
     iterations: jnp.ndarray  # (B,) int32
     basis: Optional[jnp.ndarray] = None  # (B, m) int32 final basis
+    y: Optional[jnp.ndarray] = None  # (B, m) dual point (first-order backends)
 
 
 def num_cols(m: int, n: int) -> int:

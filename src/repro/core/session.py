@@ -197,10 +197,14 @@ def sweep_supported(options: SolveOptions) -> bool:
 
     The compiled sweep drives the XLA lockstep core directly, so it
     covers exactly the configurations the plain python sweep would lower
-    to a single uncompacted ``xla`` dispatch per step.
+    to a single uncompacted ``xla`` dispatch per step.  ``backend="auto"``
+    counts as ``xla`` here: a sweep is a warm-started simplex workload by
+    construction (each step pivots from the previous step's vertex — a
+    first-order method has no vertex to carry), so the routing directive
+    pins to the simplex leg rather than consulting the shape frontier.
     """
     return (
-        options.backend == "xla"
+        options.backend in ("xla", "auto")
         and options.compaction == "off"
         and options.first_cap is None
         and options.chunk_size is None

@@ -30,12 +30,13 @@ import os
 import jax
 import jax.numpy as jnp
 
-from ..core import engine
+from ..core import engine, pdhg
 from ..core.bucketing import next_pow2
 from ..core.lp import LPSolution, ResumeState, build_tableau
 from ..core.tableau import DEFAULT_LAYOUT, TableauSpec
 from ..core.simplex import resolve_cap
 from .hyperbox_pallas import hyperbox_pallas
+from .pdhg_pallas import pdhg_pallas
 from .simplex_pallas import simplex_pallas
 
 
@@ -343,6 +344,214 @@ def simplex_resume(
         b, c, state, cap_arr,
         spec=spec, rule=rule, seed=seed, tol=tol, tile_b=tile_b,
         static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PDHG kernel wrappers — same padding/tiling contract, no tableau anywhere
+# ---------------------------------------------------------------------------
+
+
+def _pdhg_pad_shapes(bsz: int, m: int, n: int, tile_b: int):
+    return _round_up(m, 8), _round_up(n, 128), _round_up(bsz, tile_b)
+
+
+def pdhg_vmem_bytes_per_lp(m: int, n: int, dtype=jnp.float32) -> int:
+    """Estimated VMEM bytes ONE LP occupies inside the PDHG kernel.
+
+    Counts the lane/sublane-padded data block A twice (BlockSpec input
+    plus Mosaic's working copy), b and c once, and three copies of the
+    six iterate vectors (input block, ``while_loop`` carry, output
+    block).  The first-order counterpart of
+    :func:`kernel_vmem_bytes_per_lp` — O(m n) with a small constant
+    where the tableau is O(m (n + m)), which is exactly why large shapes
+    route here (see ``core/backends.py:route_shape``).
+    """
+    mp, np_pad, _ = _pdhg_pad_shapes(1, m, n, 1)
+    item = jnp.dtype(dtype).itemsize
+    f32_bytes = (
+        2 * mp * np_pad + mp + np_pad + 3 * (2 * np_pad + 4 * mp + 2)
+    ) * item
+    i32_bytes = 4 * 4  # inner in/out + status + iters
+    return f32_bytes + i32_bytes
+
+
+def pdhg_fits_vmem(m: int, n: int, dtype=jnp.float32) -> bool:
+    """Whether a single LP of this shape fits the PDHG kernel's budget."""
+    per_lp = pdhg_vmem_bytes_per_lp(m, n, dtype)
+    return per_lp <= int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+
+
+def pdhg_auto_tile_b(bsz: int, m: int, n: int, dtype=jnp.float32) -> int:
+    """VMEM-budget-aware batch tile for the PDHG kernel (pow-2, <= 128)."""
+    per_lp = pdhg_vmem_bytes_per_lp(m, n, dtype)
+    budget = int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+    fit = max(1, budget // max(per_lp, 1))
+    tile = 1 << (fit.bit_length() - 1)  # largest power of two <= fit
+    return max(1, min(tile, 128, next_pow2(bsz)))
+
+
+def _pdhg_launch(a, b, c, state, cap, *, tol, restart, tile_b, static_cap,
+                 want_state, interpret):
+    """Pad, run the PDHG kernel, strip padding off every output.
+
+    Zero-padding is the whole story (see ``pdhg_pallas.py``): padded
+    lanes stay exactly zero through every prox step and padded batch
+    rows are all-zero LPs that go OPTIMAL at the origin, so nothing
+    needs masking.  Step sizes come from the UNPADDED arrays via the
+    shared ``core/pdhg.py:step_sizes`` — bit-identical to the XLA
+    driver's (zero-padded rows get tau = sigma = 0, which is inert).
+    """
+    bsz, m, n = a.shape
+    dtype = a.dtype
+    tau, sigma, (anorm, _, _) = pdhg.step_sizes(a, b, c)
+    mp, np_pad, bp = _pdhg_pad_shapes(bsz, m, n, tile_b)
+
+    def pad_m(v):
+        return jnp.zeros((bp, mp), dtype).at[:bsz, :m].set(v)
+
+    def pad_n(v):
+        return jnp.zeros((bp, np_pad), dtype).at[:bsz, :n].set(v)
+
+    def pad_b(v):
+        return jnp.zeros((bp,), v.dtype).at[:bsz].set(v)
+
+    a_p = jnp.zeros((bp, mp, np_pad), dtype).at[:bsz, :m, :n].set(a)
+    outs = pdhg_pallas(
+        a_p, pad_m(b), pad_n(c),
+        pad_n(state.x), pad_m(state.y), pad_m(state.ax),
+        pad_n(state.x_sum), pad_m(state.y_sum), pad_m(state.ax_sum),
+        pad_b(state.inner), pad_b(state.x_grow), pad_b(state.y_grow),
+        pad_b(tau), pad_b(sigma), pad_b(anorm), cap,
+        tol=tol, restart=restart, tile_b=tile_b,
+        static_cap=static_cap, interpret=interpret,
+    )
+    x, y, ax, xs, ys, axs, inner, xg, yg, status, iters = outs
+    x, status, iters = x[:bsz, :n], status[:bsz], iters[:bsz]
+    pobj = jnp.sum(c * x, axis=-1)
+    objective = jnp.where(status == 1, pobj, jnp.asarray(-jnp.inf, dtype))
+    sol = LPSolution(
+        objective=objective, x=x, status=status, iterations=iters, y=y[:bsz, :m]
+    )
+    if not want_state:
+        return sol
+    out_state = pdhg.PDHGResumeState(
+        x=x, y=y[:bsz, :m], ax=ax[:bsz, :m],
+        x_sum=xs[:bsz, :n], y_sum=ys[:bsz, :m], ax_sum=axs[:bsz, :m],
+        inner=inner[:bsz], x_grow=xg[:bsz], y_grow=yg[:bsz],
+    )
+    return sol, out_state
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tol", "restart", "tile_b", "static_cap", "want_state", "interpret"
+    ),
+)
+def _pdhg_solve_jit(a, b, c, cap, *, tol, restart, tile_b, static_cap,
+                    want_state, interpret):
+    bsz, m, n = a.shape
+    return _pdhg_launch(
+        a, b, c, pdhg.init_state(bsz, m, n, a.dtype), cap,
+        tol=tol, restart=restart, tile_b=tile_b, static_cap=static_cap,
+        want_state=want_state, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "tol", "restart", "tile_b", "static_cap", "want_state", "interpret"
+    ),
+)
+def _pdhg_resume_jit(a, b, c, state, cap, *, tol, restart, tile_b, static_cap,
+                     want_state, interpret):
+    return _pdhg_launch(
+        a, b, c, state, cap,
+        tol=tol, restart=restart, tile_b=tile_b, static_cap=static_cap,
+        want_state=want_state, interpret=interpret,
+    )
+
+
+def pdhg_compile_cache_size() -> int:
+    """PDHG-kernel executables compiled so far (cold + resume paths)."""
+    return int(_pdhg_solve_jit._cache_size()) + int(_pdhg_resume_jit._cache_size())
+
+
+def pdhg_solve(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    tol: float = 0.0,
+    restart: int = 0,
+    max_iters: int = 0,
+    tile_b: int | None = None,
+    interpret: bool | None = None,
+    want_state: bool = False,
+    dynamic_cap: bool = True,
+):
+    """Solve a canonical batch with the VMEM-resident PDHG kernel.
+
+    Same signature family as ``core/pdhg.py:solve_batched`` (the XLA
+    driver) and same padding/tiling conventions as :func:`simplex_solve`:
+    batch pads to a tile multiple, n to the 128-lane boundary, m to the
+    8-sublane boundary, ``tile_b=None`` sizes the tile from the VMEM
+    budget, and ``max_iters`` is a traced kernel scalar under
+    ``dynamic_cap`` so every cap over one shape shares one executable.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, m, n = a.shape
+    if tile_b is None:
+        tile_b = pdhg_auto_tile_b(bsz, m, n, a.dtype)
+    cap = pdhg.resolve_cap(max_iters, m, n)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _pdhg_solve_jit(
+        a, b, c, cap_arr,
+        tol=pdhg.resolve_tol(tol), restart=pdhg.resolve_restart(restart),
+        tile_b=tile_b, static_cap=static_cap, want_state=want_state,
+        interpret=interpret,
+    )
+
+
+def pdhg_resume(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    state: pdhg.PDHGResumeState,
+    *,
+    tol: float = 0.0,
+    restart: int = 0,
+    max_iters: int = 0,
+    tile_b: int | None = None,
+    interpret: bool | None = None,
+    want_state: bool = True,
+    dynamic_cap: bool = True,
+):
+    """Continue a batch from a carried ``PDHGResumeState`` in the kernel.
+
+    ``max_iters`` is the ADDITIONAL step budget; the state round-trips
+    through the same zero-padding the cold launch uses, so resumed
+    rounds replay one uninterrupted kernel run bit-for-bit — the same
+    contract as :func:`simplex_resume` (but like the XLA pdhg driver, a
+    resume needs ``a`` back: the matvecs read it every step).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, m, n = a.shape
+    if tile_b is None:
+        tile_b = pdhg_auto_tile_b(bsz, m, n, a.dtype)
+    cap = pdhg.resolve_cap(max_iters, m, n)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _pdhg_resume_jit(
+        a, b, c, state, cap_arr,
+        tol=pdhg.resolve_tol(tol), restart=pdhg.resolve_restart(restart),
+        tile_b=tile_b, static_cap=static_cap, want_state=want_state,
+        interpret=interpret,
     )
 
 

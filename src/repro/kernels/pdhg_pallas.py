@@ -1,0 +1,248 @@
+"""Pallas TPU kernel: whole-solve-in-VMEM batched restarted PDHG.
+
+The first-order counterpart of ``simplex_pallas.py``: a tile of TB
+complete LPs — problem data (A, b, c) plus the PDHG iterate state — is
+mapped into VMEM via BlockSpec and the ENTIRE restarted-PDHG loop runs
+inside the kernel, so per-iteration HBM traffic is zero.  Where the
+simplex kernel holds an O(m (n + m)) tableau per LP, this one holds only
+the O(m n) data block plus a handful of length-m/n vectors, which is what
+lets it serve the m, n >= 500 shapes the tableau cannot even allocate
+(see ``kernels/ops.py:pdhg_fits_vmem``).
+
+The iteration math is NOT implemented here: the kernel body drives
+``core/pdhg.py:pdhg_step`` — the same step function the XLA driver runs —
+with broadcast-multiply-reduce matvecs in place of ``einsum`` (Mosaic
+lowers the former; the contraction is identical arithmetic
+element-for-element, so both drivers agree to float round-off of the
+reduction order).  Step sizes (tau, sigma, ||A||) ride in as per-LP
+inputs, computed once by the wrapper via the shared
+``core/pdhg.py:step_sizes`` — power iteration is pure matvec and COULD
+run in-kernel, but hoisting it keeps the kernel a single while_loop and
+guarantees both drivers use bit-identical step sizes.
+
+Zero-padding is self-consistent for PDHG: lanes/sublanes padded with
+zeros in A, b, c start at x = y = 0 and STAY zero through every prox
+step (the update is ``relu(0 + tau * 0)``), padded batch rows are
+all-zero LPs whose KKT residuals vanish at the origin (they go OPTIMAL
+on step one and coast), and zero lanes contribute nothing to any norm or
+reduction ``pdhg_step`` takes — so no masking is needed anywhere.
+
+Compile-once dispatch: the iteration cap enters as a SCALAR INPUT
+(``cap_ref``), so the compaction scheduler's geometric round caps all
+run the one compiled kernel per LP shape; ``static_cap`` restores the
+cap-specialized lowering as a benchmark baseline.  Unlike the simplex
+kernel there is no ``want_state`` flag — the PDHG iterate state IS the
+natural output set, so the kernel always writes it and the wrapper
+decides what to expose.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import pdhg
+from ..core.lp import ITER_LIMIT, RUNNING
+
+
+def _mv(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Batched ``A @ x`` as broadcast-multiply-reduce (Mosaic-friendly)."""
+    return jnp.sum(a * x[:, None, :], axis=2)
+
+
+def _rmv(a: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Batched ``A' @ y`` as broadcast-multiply-reduce (Mosaic-friendly)."""
+    return jnp.sum(a * y[:, :, None], axis=1)
+
+
+def _kernel(
+    a_ref,  # (TB, Mp, Np) f32 VMEM — constraint matrices (zero-padded)
+    b_ref,  # (TB, Mp) f32 VMEM
+    c_ref,  # (TB, Np) f32 VMEM
+    x_ref,  # (TB, Np) f32 VMEM — primal iterate in
+    y_ref,  # (TB, Mp) f32 VMEM — dual iterate in
+    ax_ref,  # (TB, Mp) f32 VMEM — carried A @ x in
+    xs_ref,  # (TB, Np) f32 VMEM — restart running sums in
+    ys_ref,  # (TB, Mp) f32 VMEM
+    axs_ref,  # (TB, Mp) f32 VMEM
+    inner_ref,  # (TB,) i32 VMEM — steps since last restart
+    xg_ref,  # (TB,) f32 VMEM — ||x|| at last restart boundary (growth gate)
+    yg_ref,  # (TB,) f32 VMEM — ||y|| at last restart boundary
+    tau_ref,  # (TB,) f32 — primal step (wrapper-computed, shared step_sizes)
+    sigma_ref,  # (TB,) f32 — dual step
+    anorm_ref,  # (TB,) f32 — ||A||_2 estimate (certificate scale)
+    cap_ref,  # (1,) i32 — iteration cap (scalar input: compile-once caps)
+    x_out_ref,  # out (TB, Np) f32
+    y_out_ref,  # out (TB, Mp) f32
+    ax_out_ref,  # out (TB, Mp) f32
+    xs_out_ref,  # out (TB, Np) f32
+    ys_out_ref,  # out (TB, Mp) f32
+    axs_out_ref,  # out (TB, Mp) f32
+    inner_out_ref,  # out (TB,) i32
+    xg_out_ref,  # out (TB,) f32
+    yg_out_ref,  # out (TB,) f32
+    status_ref,  # out (TB,) i32
+    iters_ref,  # out (TB,) i32
+    *,
+    tol: float,
+    restart: int,
+    static_cap: Optional[int],
+):
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    tb = a.shape[0]
+    limit = static_cap if static_cap is not None else cap_ref[0]
+
+    tau = tau_ref[...]
+    sigma = sigma_ref[...]
+    # bscale/cscale are one reduction each — cheaper to recompute on the
+    # zero-padded tiles (padding contributes nothing to an L2 norm) than
+    # to ship two more vector inputs.
+    scales = (
+        anorm_ref[...],
+        1.0 + jnp.sqrt(jnp.sum(b * b, axis=-1)),
+        1.0 + jnp.sqrt(jnp.sum(c * c, axis=-1)),
+    )
+
+    def body(state):
+        x, y, ax, xs, ys, axs, inner, xg, yg, status, iters, step = state
+        out = pdhg.pdhg_step(
+            a, b, c, x, y, ax, xs, ys, axs, inner, xg, yg, status, iters,
+            tau, sigma, scales, tol=tol, restart=restart, mv=_mv, rmv=_rmv,
+        )
+        return (*out, step + 1)
+
+    def cond(state):
+        status, step = state[-3], state[-1]
+        return jnp.logical_and(step < limit, jnp.any(status == RUNNING))
+
+    status0 = jnp.full((tb,), RUNNING, jnp.int32)
+    iters0 = jnp.zeros((tb,), jnp.int32)
+    carry0 = (
+        x_ref[...], y_ref[...], ax_ref[...],
+        xs_ref[...], ys_ref[...], axs_ref[...],
+        inner_ref[...], xg_ref[...], yg_ref[...],
+        status0, iters0, jnp.int32(0),
+    )
+    x, y, ax, xs, ys, axs, inner, xg, yg, status, iters, _ = jax.lax.while_loop(
+        cond, body, carry0
+    )
+    status = jnp.where(status == RUNNING, ITER_LIMIT, status)
+
+    x_out_ref[...] = x
+    y_out_ref[...] = y
+    ax_out_ref[...] = ax
+    xs_out_ref[...] = xs
+    ys_out_ref[...] = ys
+    axs_out_ref[...] = axs
+    inner_out_ref[...] = inner
+    xg_out_ref[...] = xg
+    yg_out_ref[...] = yg
+    status_ref[...] = status
+    iters_ref[...] = iters
+
+
+def pdhg_pallas(
+    a: jnp.ndarray,  # (B, Mp, Np) zero-padded constraint matrices
+    b: jnp.ndarray,  # (B, Mp)
+    c: jnp.ndarray,  # (B, Np)
+    x: jnp.ndarray,  # (B, Np) iterate state (padded)
+    y: jnp.ndarray,  # (B, Mp)
+    ax: jnp.ndarray,  # (B, Mp)
+    x_sum: jnp.ndarray,  # (B, Np)
+    y_sum: jnp.ndarray,  # (B, Mp)
+    ax_sum: jnp.ndarray,  # (B, Mp)
+    inner: jnp.ndarray,  # (B,) int32
+    x_grow: jnp.ndarray,  # (B,) growth-gate norms at last restart boundary
+    y_grow: jnp.ndarray,  # (B,)
+    tau: jnp.ndarray,  # (B,) per-LP step sizes (shared step_sizes)
+    sigma: jnp.ndarray,  # (B,)
+    anorm: jnp.ndarray,  # (B,)
+    cap: jnp.ndarray,  # (1,) int32 iteration cap (traced scalar input)
+    *,
+    tol: float,
+    restart: int,
+    tile_b: int = 8,
+    static_cap: Optional[int] = None,
+    interpret: bool = False,
+):
+    """Launch the VMEM-resident PDHG kernel over batch tiles.
+
+    All arrays arrive pre-padded (zero lanes/sublanes/rows — see module
+    docstring for why zero-padding needs no masks); padding and stripping
+    live in ``kernels/ops.py:pdhg_solve``/``pdhg_resume``.  Returns the 11
+    per-LP outputs ``(x, y, ax, x_sum, y_sum, ax_sum, inner, x_grow,
+    y_grow, status, iters)`` still padded.  ``cap`` rides in as a (1,) scalar input shared
+    by every tile; ``static_cap`` (a trace-time int) overrides it for the
+    cap-specialized baseline.  Like the simplex kernel, a ``tile_b``
+    larger than the padded batch is clamped down; a batch that is not a
+    tile multiple is a caller bug and raises.
+    """
+    bsz, mp, np_pad = a.shape
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b != 0:
+        raise ValueError(
+            f"batch {bsz} is not a multiple of tile_b {tile_b}; "
+            "pad the batch to a tile multiple (see kernels/ops.py)"
+        )
+    grid = (bsz // tile_b,)
+
+    kernel = functools.partial(
+        _kernel, tol=tol, restart=restart, static_cap=static_cap
+    )
+
+    def vec_m(_=None):
+        return pl.BlockSpec((tile_b, mp), lambda i: (i, 0))
+
+    def vec_n(_=None):
+        return pl.BlockSpec((tile_b, np_pad), lambda i: (i, 0))
+
+    def vec_b(_=None):
+        return pl.BlockSpec((tile_b,), lambda i: (i,))
+
+    in_specs = [
+        pl.BlockSpec((tile_b, mp, np_pad), lambda i: (i, 0, 0)),  # a
+        vec_m(), vec_n(),  # b, c
+        vec_n(), vec_m(), vec_m(),  # x, y, ax
+        vec_n(), vec_m(), vec_m(),  # x_sum, y_sum, ax_sum
+        vec_b(),  # inner
+        vec_b(), vec_b(),  # x_grow, y_grow
+        vec_b(), vec_b(), vec_b(),  # tau, sigma, anorm
+        pl.BlockSpec((1,), lambda i: (0,)),  # cap
+    ]
+    out_specs = [
+        vec_n(), vec_m(), vec_m(),  # x, y, ax
+        vec_n(), vec_m(), vec_m(),  # x_sum, y_sum, ax_sum
+        vec_b(), vec_b(), vec_b(),  # inner, x_grow, y_grow
+        vec_b(), vec_b(),  # status, iters
+    ]
+    dtype = a.dtype
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, np_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, mp), dtype),
+        jax.ShapeDtypeStruct((bsz, mp), dtype),
+        jax.ShapeDtypeStruct((bsz, np_pad), dtype),
+        jax.ShapeDtypeStruct((bsz, mp), dtype),
+        jax.ShapeDtypeStruct((bsz, mp), dtype),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), dtype),
+        jax.ShapeDtypeStruct((bsz,), dtype),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(
+        a, b, c, x, y, ax, x_sum, y_sum, ax_sum, inner, x_grow, y_grow,
+        tau, sigma, anorm, cap,
+    )

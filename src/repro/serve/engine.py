@@ -80,6 +80,15 @@ class LPEngine:
     ``compiles``/``cache_hits`` trajectory alongside the LP/iteration
     counters.  Ticket numbers map responses back to callers in submission
     order.
+
+    For mixed-size traffic, construct the engine with
+    ``SolveOptions(backend="auto")``: bucketing already groups requests
+    by shape class, and the dispatch layer then routes each bucket
+    through the shape-routing table — simplex below the
+    ``route_frontier``, the first-order ``pdhg`` backend above it — so
+    one engine serves both the paper's small-LP regime and the large
+    shapes a tableau cannot allocate (add ``crossover=True`` when
+    callers need exact vertices from the first-order side).
     """
 
     def __init__(
