@@ -20,6 +20,7 @@ from . import (
     fig_frontier,
     fig_memory,
     fig_rules,
+    fig_serve,
     roofline,
     table1_hyperbox,
     table2_reach,
@@ -38,6 +39,7 @@ BENCHES = {
     "frontier": fig_frontier.run,
     "memory": fig_memory.run,
     "rules": fig_rules.run,
+    "serve": fig_serve.run,
     "roofline": roofline.run,
 }
 

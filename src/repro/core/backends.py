@@ -319,6 +319,11 @@ class SolveStats:
         LPs that entered a dispatch round carrying exact mid-solve state
         (``SolveOptions.resume="basis"``) instead of restarting from
         scratch.
+    spliced : int
+        Newly admitted LPs the continuous-batching serve loop merged into
+        a round that already carried in-flight survivors (the
+        iteration-0 ``init_canonical`` states joining a resume dispatch).
+        A first admission into an empty shape class is not a splice.
     compiles : int
         New solver executables compiled by the dispatches this record
         observed (measured through the backend's compile-cache hook).
@@ -348,6 +353,7 @@ class SolveStats:
     lockstep_iterations: int = 0
     warm_started: int = 0
     resumed: int = 0
+    spliced: int = 0
     compiles: int = 0
     cache_hits: int = 0
     tableau_bytes: int = 0
@@ -424,6 +430,17 @@ class Backend:
         ``options.max_iters`` ADDITIONAL steps.  ``batch.a`` is ignored
         (the tableau already encodes it); ``batch.b``/``batch.c``
         re-derive the cost row and feasibility threshold bit-identically.
+    init_canonical : callable, optional
+        ``(LPBatch, SolveOptions) -> ResumeState`` — the ITERATION-0
+        resume state of the batch (tableau built / iterates zeroed,
+        nothing advanced), such that resuming it for ``K`` additional
+        steps is bit-identical to a cold ``solve_canonical`` with cap
+        ``K``.  This is the splice primitive of the continuous-batching
+        serve loop (``serve/engine.py``): newly admitted LPs are
+        materialized as states and concatenated with the round's carried
+        survivors, so one capped resume dispatch advances both.  None
+        means newcomers cannot be spliced; the serve loop then falls back
+        to one-shot solves at admission.
     cache_size : callable, optional
         ``() -> int`` — number of solver executables this backend has
         compiled so far.  The dispatch layer diffs it around each call to
@@ -448,6 +465,7 @@ class Backend:
     resume_canonical: Optional[
         Callable[[LPBatch, ResumeState, SolveOptions], Tuple[LPSolution, ResumeState]]
     ] = None
+    init_canonical: Optional[Callable[[LPBatch, SolveOptions], ResumeState]] = None
     cache_size: Optional[Callable[[], int]] = None
     auto_cap: Optional[Callable[[int, int], int]] = None
 
@@ -455,6 +473,16 @@ class Backend:
     def supports_resume(self) -> bool:
         """True when the backend implements the exact-state round protocol."""
         return self.start_canonical is not None and self.resume_canonical is not None
+
+    @property
+    def supports_splice(self) -> bool:
+        """True when new LPs can join an in-flight resume round mid-solve.
+
+        Requires both the resume protocol and the iteration-0 init hook —
+        what the continuous-batching serve loop needs to splice arrivals
+        into the next capped dispatch alongside carried survivors.
+        """
+        return self.supports_resume and self.init_canonical is not None
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -602,6 +630,12 @@ def _xla_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
     )
 
 
+def _xla_init(batch: LPBatch, options: SolveOptions) -> ResumeState:
+    return _simplex.init_batched(
+        batch.a, batch.b, batch.c, basis0=batch.basis0, layout=options.layout
+    )
+
+
 def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
     return _hyperbox.solve_batched(lo, hi, directions)
 
@@ -721,6 +755,18 @@ def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
     )
 
 
+def _pallas_init(batch: LPBatch, options: SolveOptions) -> ResumeState:
+    # The simplex backends share one tableau builder and one engine, and
+    # their resume states are interchangeable — so the iteration-0 state
+    # is built by the XLA driver and the kernel continues it.  A shape the
+    # VMEM fallback routes to pdhg gets a pdhg state instead (the resume
+    # hook type-sniffs the state, so the whole solve stays on one driver).
+    fallback = _pallas_vmem_fallback(batch.m, batch.n, batch.a.dtype, options)
+    if fallback == "pdhg":
+        return _pdhg_init(batch, options)
+    return _xla_init(batch, options)
+
+
 def _pallas_cache_size() -> int:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
@@ -809,6 +855,13 @@ def _pdhg_resume(
     return _pdhg.resume_batched(batch.a, batch.b, batch.c, state, **kw)
 
 
+def _pdhg_init(batch: LPBatch, options: SolveOptions) -> "_pdhg.PDHGResumeState":
+    # The pdhg cold solve is literally `iterate(a, b, c, init_state(...))`,
+    # so resuming the all-zeros state replays it bit-identically.  basis0
+    # is a simplex hint; ignored here per the backend contract.
+    return _pdhg.init_state(batch.batch, batch.m, batch.n, batch.a.dtype)
+
+
 def _pdhg_cache_size() -> int:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
@@ -859,6 +912,7 @@ register_backend(
         _xla_hyperbox,
         start_canonical=_xla_start,
         resume_canonical=_xla_resume,
+        init_canonical=_xla_init,
         cache_size=_simplex.compile_cache_size,
     )
 )
@@ -869,6 +923,7 @@ register_backend(
         _pallas_hyperbox,
         start_canonical=_pallas_start,
         resume_canonical=_pallas_resume,
+        init_canonical=_pallas_init,
         cache_size=_pallas_cache_size,
     )
 )
@@ -881,6 +936,7 @@ register_backend(
         _xla_hyperbox,
         start_canonical=_pdhg_start,
         resume_canonical=_pdhg_resume,
+        init_canonical=_pdhg_init,
         cache_size=_pdhg_cache_size,
         auto_cap=_pdhg.auto_cap_pdhg,
     )

@@ -41,7 +41,7 @@ Compile-once discipline, end to end:
     the backends' compile-cache hooks.
 
 Each round goes through the one dispatch primitive
-(:func:`_dispatch_round`), which owns — exactly once — the paper's
+(:func:`dispatch_round`), which owns — exactly once — the paper's
 per-round machinery:
 
   * split the (sub-)batch into device-sized chunks (the paper's
@@ -314,6 +314,71 @@ def _round_plan(
     return [full_cap], False
 
 
+def resolve_backend(
+    m: int, n: int, dtype, options: SolveOptions
+) -> SolveOptions:
+    """Resolve ``backend="auto"`` to a concrete backend for one shape.
+
+    The single implementation shared by :func:`solve_canonical` (which
+    resolves ONCE up front, so every round, chunk, and resume of a solve
+    runs the same backend — mixing drivers mid-solve would break the
+    resume-state contract) and the continuous-batching serve loop (which
+    resolves once per shape class at admission, for the same reason).
+    Concrete backends pass through unchanged.  A shape the table routes
+    to ``pdhg`` also resets ``rule``/``layout`` to their defaults:
+    those knobs configure the simplex leg and are rejected by validation
+    on the first-order side.
+    """
+    if options.backend != "auto":
+        return options
+    resolved = route_shape(m, n, dtype, options)
+    if resolved == "pdhg":
+        return options.replace(backend=resolved, rule=LPC, layout=DEFAULT_LAYOUT)
+    return options.replace(backend=resolved)
+
+
+def admission_order(
+    requests: Sequence[Tuple[int, Optional[float], int, int]],
+    now: int = 0,
+    starvation_rounds: int = 8,
+) -> list:
+    """Admission order for the serve loop: EDF with a starvation bound.
+
+    The round planner's answer to "which pending requests join the next
+    dispatch round first".  Each request is a tuple ``(ticket, deadline,
+    priority, submitted_round)``: ``deadline`` is an absolute time (any
+    monotone clock; None = no deadline, sorts last), larger ``priority``
+    wins among equal deadlines, and ``submitted_round`` is the scheduler
+    round the request arrived in.
+
+    Ordering: requests that have waited at least ``starvation_rounds``
+    scheduler rounds are *aged* and outrank every non-aged request,
+    draining FIFO among themselves — so under an adversarial stream of
+    ever-earlier deadlines, a request waits at most ``starvation_rounds``
+    rounds before it precedes all later arrivals (the starvation bound:
+    with per-round admission capacity ``c >= 1``, it is admitted within
+    ``starvation_rounds + ceil(older_pending / c)`` rounds of submission).
+    Non-aged requests order by earliest deadline first, then descending
+    priority, then ticket (FIFO tie-break).
+
+    Returns the indices into ``requests`` in admission order.
+    """
+
+    def key(i):
+        ticket, deadline, priority, submitted = requests[i]
+        aged = (now - submitted) >= starvation_rounds
+        deadline = math.inf if deadline is None else float(deadline)
+        return (
+            0 if aged else 1,
+            submitted if aged else 0,
+            deadline,
+            -priority,
+            ticket,
+        )
+
+    return sorted(range(len(requests)), key=key)
+
+
 def solve_canonical(
     batch: LPBatch,
     options: Optional[SolveOptions] = None,
@@ -371,21 +436,7 @@ def solve_canonical(
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
-    if options.backend == "auto":
-        # Resolve the routing directive to a concrete backend ONCE, up
-        # front: every round, chunk, and resume of this solve then runs
-        # the same implementation (mixing drivers mid-solve would break
-        # the resume-state contract).
-        resolved = route_shape(batch.m, batch.n, batch.a.dtype, options)
-        if resolved == "pdhg":
-            # rule/layout configure the simplex leg of the routing table;
-            # on the first-order side they are meaningless (and would be
-            # rejected by validation), so they reset to defaults.
-            options = options.replace(
-                backend=resolved, rule=LPC, layout=DEFAULT_LAYOUT
-            )
-        else:
-            options = options.replace(backend=resolved)
+    options = resolve_backend(batch.m, batch.n, batch.a.dtype, options)
     backend = get_backend(options.backend)
     # unroll > 1 groups loop steps in blocks of `unroll`; a mid-round
     # split would re-align the grouping and change the total step count,
@@ -428,7 +479,7 @@ def solve_canonical(
             else:
                 sub_state = None
             size_class = next_pow2(int(active.size))
-        part, part_state = _dispatch_round(
+        part, part_state = dispatch_round(
             sub,
             base.replace(max_iters=cap),
             mesh,
@@ -463,7 +514,7 @@ def solve_canonical(
     return sol
 
 
-def _dispatch_round(
+def dispatch_round(
     batch: LPBatch,
     options: SolveOptions,
     mesh,
@@ -483,6 +534,13 @@ def _dispatch_round(
     ``state``/``want_state`` thread the exact-resume protocol.  Padding
     replica rows are trimmed off the solution, the carried state, AND the
     stats before anything leaves this function.
+
+    Callers: the round scheduler above (:func:`solve_canonical`) and the
+    continuous-batching serve loop (``serve/engine.py`` via
+    ``SolveSession.resume_round``), which drives one capped round per
+    scheduler step over each shape class's spliced in-flight batch.
+    ``options.max_iters`` must already be the round's concrete budget
+    (``options.backend`` concrete, not ``"auto"``).
     """
     axes = _resolve_axes(mesh, batch_axes)
     mesh_div = 1

@@ -649,6 +649,17 @@ def confirm_certificates(
 # crossover: PDHG point -> simplex basis -> exact vertex
 # ---------------------------------------------------------------------------
 
+#: Fixed batch size for every crossover polish dispatch.  XLA picks
+#: different contraction/reduction orders for different batch sizes, so
+#: a warm-started polish of the same row inside a batch of 2 vs 6 can
+#: differ at the ulp level.  Tiling the gathered OPTIMAL rows into
+#: replica-padded tiles of this exact size makes each row's polished
+#: bits a function of that row's data ALONE — the same whether crossover
+#: runs once over a megabatch (``repro.solve``) or incrementally over
+#: retired sub-batches (``serve/engine.py``) — and means polish compiles
+#: exactly one executable per (m, n) class.
+CROSSOVER_TILE = 8
+
 
 def crossover_basis(
     a: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray
@@ -681,6 +692,13 @@ def crossover(
     returned rows carry the exact vertex objective/point and a reusable
     ``basis``; ``iterations`` adds the polish pivots on top of the PDHG
     step counts.  Non-OPTIMAL rows pass through untouched.
+
+    The gathered rows are polished in replica-padded tiles of exactly
+    :data:`CROSSOVER_TILE` rows, so each row's polished bits depend only
+    on that row's data — never on which (or how many) other rows
+    happened to converge alongside it.  That is what lets the continuous
+    serve loop apply crossover per retired sub-batch and still return
+    bits identical to a one-shot solve of the whole workload.
     """
     from . import simplex as _simplex  # lazy: avoid import cycle at init
 
@@ -689,11 +707,24 @@ def crossover(
     bsz, m = batch.batch, batch.m
     if opt.size == 0:
         return sol
-    idx = jnp.asarray(opt)
-    a, b, c = batch.a[idx], batch.b[idx], batch.c[idx]
-    guess = crossover_basis(a, b, sol.x[idx])
     tol = getattr(options, "tolerance", 0.0) if options is not None else 0.0
-    polished = _simplex.solve_batched(a, b, c, tol=tol, basis0=guess)
+    parts = []
+    for start in range(0, opt.size, CROSSOVER_TILE):
+        rows = opt[start : start + CROSSOVER_TILE]
+        real = rows.size
+        if real < CROSSOVER_TILE:
+            rows = np.concatenate([rows, np.repeat(rows[:1], CROSSOVER_TILE - real)])
+        tidx = jnp.asarray(rows)
+        a, b, c = batch.a[tidx], batch.b[tidx], batch.c[tidx]
+        guess = crossover_basis(a, b, sol.x[tidx])
+        parts.append((_simplex.solve_batched(a, b, c, tol=tol, basis0=guess), real))
+    polished = LPSolution(
+        objective=jnp.concatenate([p.objective[:r] for p, r in parts]),
+        x=jnp.concatenate([p.x[:r] for p, r in parts]),
+        status=jnp.concatenate([p.status[:r] for p, r in parts]),
+        iterations=jnp.concatenate([p.iterations[:r] for p, r in parts]),
+        basis=jnp.concatenate([p.basis[:r] for p, r in parts]),
+    )
     ok = np.asarray(polished.status) == OPTIMAL
     rows = jnp.asarray(opt[ok])
     sel = jnp.asarray(np.nonzero(ok)[0])

@@ -101,6 +101,106 @@ class SolveSession:
             lo, hi, directions, self.options, mesh=self.mesh, stats=self.stats
         )
 
+    # -- continuous-batching primitives (serve/engine.py) -------------------
+    #
+    # The serve loop advances each shape class one capped dispatch round
+    # per scheduler step, splicing newly admitted LPs (as iteration-0
+    # states) into the round alongside the carried survivors.  These three
+    # methods are that loop's entire solver surface, pinned to the
+    # session's options/mesh/stats so its steady state stays observable
+    # through the same compiles/cache_hits counters as flush-mode serving.
+
+    def resolve_options(self, m: int, n: int, dtype) -> SolveOptions:
+        """The pinned options with ``backend="auto"`` resolved for a shape.
+
+        One resolution per canonical shape class, at admission — every
+        subsequent round of that class runs the same concrete backend
+        (mixing drivers mid-solve would break the resume-state contract).
+        """
+        from . import dispatch as _dispatch
+
+        return _dispatch.resolve_backend(m, n, dtype, self.options)
+
+    def init_state(self, batch: LPBatch, options: Optional[SolveOptions] = None):
+        """Iteration-0 resume state for a canonical batch (the splice input).
+
+        Uses the backend's ``init_canonical`` hook — resuming the returned
+        state for ``K`` steps is bit-identical to a cold solve with cap
+        ``K`` — and attributes the hook's compile-cache delta to
+        ``stats`` like any dispatch.
+
+        Parameters
+        ----------
+        batch : LPBatch
+            Canonical rows to materialize (may carry ``basis0``).
+        options : SolveOptions, optional
+            Resolved (concrete-backend) options for the batch's shape
+            class; defaults to the session options, which must then name
+            a concrete backend.
+        """
+        from .backends import get_backend
+
+        options = options or self.options
+        backend = get_backend(options.backend)
+        if backend.init_canonical is None:
+            raise ValueError(
+                f"backend {backend.name!r} has no init_canonical hook; "
+                "it cannot splice new LPs into in-flight rounds"
+            )
+        before = backend.cache_size() if backend.cache_size else None
+        state = backend.init_canonical(batch, options)
+        if before is not None:
+            self.stats.record_cache(before, backend.cache_size())
+        return state
+
+    def resume_round(
+        self,
+        batch: LPBatch,
+        state,
+        cap: int,
+        options: Optional[SolveOptions] = None,
+        size_class: Optional[int] = None,
+    ):
+        """One capped continuation round through the dispatch primitive.
+
+        Advances every LP of ``batch`` by at most ``cap`` ADDITIONAL
+        iterations from ``state``, returning ``(LPSolution, new_state)``
+        with the round's incremental iteration counts.  ``size_class``
+        pads the batch to the scheduler's power-of-two class so rounds of
+        different in-flight sizes reuse one executable.
+
+        Parameters
+        ----------
+        batch : LPBatch
+            The canonical rows (full data — the pdhg backend re-reads
+            ``a`` every step; the simplex backends only ``b``/``c``).
+        state
+            The carried resume state, row-aligned with ``batch``.
+        cap : int
+            The round's incremental iteration budget (> 0).
+        options : SolveOptions, optional
+            Resolved options for the class; defaults to session options.
+        size_class : int, optional
+            Power-of-two pad target for the batch dimension.
+        """
+        from . import dispatch as _dispatch
+
+        base = (options or self.options).replace(
+            max_iters=int(cap), compaction="off", first_cap=None, resume="scratch"
+        )
+        sol, out_state = _dispatch.dispatch_round(
+            batch,
+            base,
+            self.mesh,
+            ("data",),
+            self.stats,
+            state=state,
+            want_state=True,
+            size_class=size_class,
+        )
+        self.stats.resumed += batch.batch
+        return sol, out_state
+
 
 # ---------------------------------------------------------------------------
 # compiled warm-started sweeps

@@ -212,14 +212,54 @@ def _resume_jit(
     return (sol, out_state) if want_state else sol
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _init_jit(a, b, c, basis0, *, spec):
+    tab, basis, phase = build_tableau(a, b, c, basis0, spec)
+    return ResumeState(tab, basis, phase)
+
+
 def compile_cache_size() -> int:
-    """Number of XLA-driver executables compiled so far (cold + resume).
+    """Number of XLA-driver executables compiled so far (cold + resume + init).
 
     The observability hook behind ``SolveStats.compiles`` /
     ``SolveStats.cache_hits`` for the ``xla`` backend: the dispatch layer
     reads it before and after each backend call and attributes the delta.
     """
-    return int(_solve_jit._cache_size()) + int(_resume_jit._cache_size())
+    return (
+        int(_solve_jit._cache_size())
+        + int(_resume_jit._cache_size())
+        + int(_init_jit._cache_size())
+    )
+
+
+def init_batched(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    basis0: Optional[jnp.ndarray] = None,
+    layout: str = DEFAULT_LAYOUT,
+) -> ResumeState:
+    """The iteration-0 :class:`ResumeState`: tableau built, nothing pivoted.
+
+    The splice primitive of the continuous-batching serve loop
+    (``serve/engine.py``): a newly admitted LP is materialized as a resume
+    state so it can ride the SAME capped resume dispatch as the round's
+    carried survivors.  Exactness: :func:`solve_traced` is literally
+    ``build_tableau`` followed by the shared iteration loop, and
+    :func:`resume_batched` re-derives the cost row and feasibility
+    threshold from ``b``/``c`` the same way — so
+    ``resume_batched(b, c, init_batched(a, b, c), max_iters=K)`` is
+    bit-identical to ``solve_batched(a, b, c, max_iters=K)``, and a chain
+    of resumed rounds whose budgets sum to ``K`` still is.
+
+    Args:
+      a, b, c: canonical batch ``(B, m, n)``, ``(B, m)``, ``(B, n)``.
+      basis0: optional ``(B, m)`` warm-start basis (as for
+        :func:`solve_batched`); feasible rows start in phase II.
+      layout: tableau storage layout for the built state.
+    """
+    bsz, m, n = a.shape
+    return _init_jit(a, b, c, basis0, spec=TableauSpec(m, n, layout))
 
 
 def solve_batched(

@@ -1,0 +1,225 @@
+"""Open-loop Poisson load generation + replay for the LP serving path.
+
+The serving benchmark question ("does continuous batching beat
+flush-every-N?") only makes sense under OPEN-LOOP load: arrivals follow
+their own clock — a Poisson process at a fixed offered rate — regardless
+of how fast the server drains, so queueing delay shows up in the latency
+distribution instead of silently throttling the generator (the classic
+closed-loop coordination-omission trap).
+
+:func:`poisson_trace` materializes such a trace up front (deterministic
+given the seed); :func:`replay` plays it against an
+:class:`~repro.serve.engine.LPEngine` in either serving mode and
+records per-request latency from SCHEDULED arrival to completion, so a
+request that sits behind a stop-the-world flush is charged its full
+wait.  ``benchmarks/fig_serve.py`` drives both modes at matched load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.lp import LPSolution, random_lp_batch
+from ..core.problem import LPProblem
+from .engine import LPEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request of an open-loop trace.
+
+    Attributes
+    ----------
+    t : float
+        Scheduled arrival time, seconds from trace start.
+    problem : LPProblem
+        The single-LP request.
+    deadline : float, optional
+        Completion deadline, seconds from trace start (converted to the
+        engine clock's absolute time at replay).
+    priority : int
+        Admission priority (larger wins among equal deadlines).
+    """
+
+    t: float
+    problem: LPProblem
+    deadline: Optional[float] = None
+    priority: int = 0
+
+
+def lp_request_mix(
+    dims: Sequence, seed: int = 0, dtype=np.float32
+) -> Callable[[int], LPProblem]:
+    """Factory for a deterministic request mix over (m, n) shape dims.
+
+    Request i is a random feasible-start LP of ``dims[i % len(dims)]``
+    (the paper's benchmark generator, one LP per request), so a trace
+    exercises the engine's shape-class grouping without any randomness
+    beyond the seed.
+
+    Parameters
+    ----------
+    dims : sequence of (int, int)
+        Cycled (m, n) shapes.
+    seed : int
+        Generator seed; the mix is reproducible given (dims, seed).
+    dtype : numpy dtype
+        Problem dtype.
+
+    Returns
+    -------
+    callable
+        ``make(i) -> LPProblem`` for request index i.
+    """
+    dims = [tuple(d) for d in dims]
+    rngs = {d: np.random.default_rng([seed, d[0], d[1]]) for d in dims}
+
+    def make(i: int) -> LPProblem:
+        m, n = dims[i % len(dims)]
+        batch = random_lp_batch(rngs[(m, n)], 1, m, n, True, dtype)
+        return LPProblem.from_batch(batch)
+
+    return make
+
+
+def poisson_trace(
+    rate: float,
+    n_requests: int,
+    make_problem: Callable[[int], LPProblem],
+    seed: int = 0,
+    deadline_slack: Optional[float] = None,
+    priority: Callable[[int], int] = lambda i: 0,
+) -> List[Arrival]:
+    """An open-loop Poisson arrival trace at the given offered rate.
+
+    Parameters
+    ----------
+    rate : float
+        Offered load, requests/second (exponential inter-arrival gaps
+        with mean ``1/rate``).
+    n_requests : int
+        Trace length.
+    make_problem : callable
+        ``make_problem(i) -> LPProblem`` request factory
+        (:func:`lp_request_mix`).
+    seed : int
+        Arrival-process seed (independent of the request mix's).
+    deadline_slack : float, optional
+        When given, every request carries ``deadline = t + slack``.
+    priority : callable
+        ``priority(i) -> int`` per-request priority.
+
+    Returns
+    -------
+    list of Arrival
+        Arrivals in time order (``t`` strictly increasing).
+    """
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    return [
+        Arrival(
+            t=float(times[i]),
+            problem=make_problem(i),
+            deadline=None if deadline_slack is None else float(times[i]) + deadline_slack,
+            priority=int(priority(i)),
+        )
+        for i in range(n_requests)
+    ]
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Per-request latencies + solutions from one :func:`replay` run.
+
+    ``latencies[i]`` is seconds from ``arrivals[i].t`` (the SCHEDULED
+    arrival) to completion; ``solutions[i]`` the redeemed result;
+    ``makespan`` the wall seconds from trace start to the last
+    completion.
+    """
+
+    latencies: np.ndarray
+    solutions: List[LPSolution]
+    makespan: float
+
+
+def replay(
+    engine: LPEngine,
+    arrivals: Sequence[Arrival],
+    mode: str = "continuous",
+    sleep: Callable[[float], None] = time.sleep,
+) -> ReplayResult:
+    """Play a trace against an engine; measure open-loop latencies.
+
+    ``mode="continuous"``: between arrivals the loop drives
+    ``engine.step()`` — requests complete the round they finish.
+    ``mode="flush"``: the loop only submits (the engine's
+    ``flush_every`` auto-flush is the serving policy) and flushes the
+    tail once the trace is exhausted — the stop-the-world baseline.
+
+    Parameters
+    ----------
+    engine : LPEngine
+        Configured for the mode under test (continuous callers should
+        set ``flush_every`` large enough to never auto-flush).
+    arrivals : sequence of Arrival
+        The trace (time-ordered).
+    mode : {"continuous", "flush"}
+        Serving policy driven between arrivals.
+    sleep : callable
+        ``sleep(seconds)`` used while idle in flush mode (injectable
+        for tests).
+
+    Returns
+    -------
+    ReplayResult
+    """
+    if mode not in ("continuous", "flush"):
+        raise ValueError(f'replay mode must be "continuous" or "flush", got {mode!r}')
+    clock = engine.clock
+    n = len(arrivals)
+    tickets: List[Optional[int]] = [None] * n
+    by_ticket = {}
+    finish: List[Optional[float]] = [None] * n
+    start = clock()
+
+    def harvest(now: float) -> None:
+        for tk, idx in by_ticket.items():
+            if finish[idx] is None and engine.done(tk):
+                finish[idx] = now - arrivals[idx].t
+
+    i = 0
+    while i < n or any(f is None for f in finish):
+        now = clock() - start
+        while i < n and arrivals[i].t <= now:
+            a = arrivals[i]
+            tk = engine.submit(
+                a.problem,
+                deadline=None if a.deadline is None else start + a.deadline,
+                priority=a.priority,
+            )
+            tickets[i] = tk
+            by_ticket[tk] = i
+            i += 1
+            # submit may auto-flush (the flush-mode policy): everything
+            # outstanding completes at this instant.
+            harvest(clock() - start)
+        if mode == "continuous":
+            engine.step()
+            harvest(clock() - start)
+        else:
+            if i >= n:
+                engine.flush()
+                harvest(clock() - start)
+            else:
+                sleep(min(max(arrivals[i].t - (clock() - start), 0.0), 1e-3))
+    makespan = max(f + a.t for f, a in zip(finish, arrivals)) if n else 0.0
+    solutions = [engine.result(tk) for tk in tickets]
+    return ReplayResult(
+        latencies=np.asarray(finish, np.float64),
+        solutions=solutions,
+        makespan=float(makespan),
+    )

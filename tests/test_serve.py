@@ -1,0 +1,359 @@
+"""Continuous-batching serve loop: bit-identity, admission policy, compile
+stability, and the flush-mode error contracts (``serve/engine.py``).
+
+The load-bearing property is the exact-resume contract extended to
+serving: any interleaving of submit/step/result must return, per LP,
+bits identical to one-shot ``repro.solve`` of the same problems —
+continuous batching changes latency, never answers.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro import SolveOptions, SolveStats
+from repro.core import lp
+from repro.core.problem import LPProblem
+from repro.serve.engine import LPEngine
+from repro.serve.loadgen import lp_request_mix
+
+DIMS = [(4, 6), (6, 4)]
+
+
+def _mk_problems(n, dims=DIMS, seed=11):
+    make = lp_request_mix(dims, seed=seed)
+    return [make(i) for i in range(n)]
+
+
+def _bit_same(a, b):
+    return (
+        np.array_equal(np.asarray(a.objective), np.asarray(b.objective))
+        and np.array_equal(np.asarray(a.x), np.asarray(b.x))
+        and np.array_equal(np.asarray(a.status), np.asarray(b.status))
+        and np.array_equal(np.asarray(a.iterations), np.asarray(b.iterations))
+    )
+
+
+def _run_interleaved(opts, step_iters, problems, **engine_kw):
+    """Submit one problem per step; redeem as tickets complete."""
+    stats = SolveStats()
+    eng = LPEngine(
+        opts, flush_every=1 << 30, stats=stats, step_iters=step_iters, **engine_kw
+    )
+    tickets, done = [], {}
+    for p in problems:
+        tickets.append(eng.submit(p))
+        for t in eng.step():
+            done[t] = eng.result(t)
+    while len(done) < len(problems):
+        for t in eng.step():
+            done[t] = eng.result(t)
+    return [done[t] for t in tickets], stats, eng
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: continuous vs one-shot, all splice-capable backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "name,opts,step_iters",
+    [
+        ("xla", SolveOptions(), 8),
+        ("pallas", SolveOptions(backend="pallas"), 8),
+        ("pdhg", SolveOptions(backend="auto", route_frontier=2), 4096),
+        (
+            "pdhg-crossover",
+            SolveOptions(backend="auto", route_frontier=2, crossover=True),
+            4096,
+        ),
+    ],
+    ids=lambda v: v if isinstance(v, str) else "",
+)
+def test_continuous_bit_identical_to_oneshot(name, opts, step_iters):
+    # Mixed shape classes, one submit per scheduler round: later arrivals
+    # splice into rounds already carrying survivors.  The small simplex
+    # quantum forces multi-round solves so the splice path really runs.
+    problems = _mk_problems(10)
+    oracle = repro.solve(problems, opts)
+    sols, stats, _ = _run_interleaved(opts, step_iters, problems)
+    for i, (o, s) in enumerate(zip(oracle, sols)):
+        assert _bit_same(o, s), f"request {i} diverged from one-shot"
+    assert stats.resumed >= len(problems)
+
+
+def test_splice_joins_inflight_round_bitwise():
+    problems = _mk_problems(6, dims=[(4, 6)])
+    oracle = repro.solve(problems, SolveOptions())
+    sols, stats, _ = _run_interleaved(SolveOptions(), 2, problems)
+    # quantum=2 on a class needing ~tens of iterations: every later
+    # arrival must have joined a round with carried survivors.
+    assert stats.spliced > 0
+    for o, s in zip(oracle, sols):
+        assert _bit_same(o, s)
+
+
+def test_budget_exhaustion_iter_limit_bitwise():
+    # A cap small enough that some LPs retire as ITER_LIMIT: the engine's
+    # partitioned budgets must sum to the cap exactly, so even truncated
+    # rows match one-shot bitwise (objective is +/-inf, x zeros).
+    opts = SolveOptions(max_iters=4)
+    problems = _mk_problems(8)
+    oracle = repro.solve(problems, opts)
+    assert any(int(s.status[0]) == lp.ITER_LIMIT for s in oracle)
+    assert any(int(s.status[0]) == lp.OPTIMAL for s in oracle)
+    sols, _, _ = _run_interleaved(opts, 2, problems)
+    for o, s in zip(oracle, sols):
+        assert _bit_same(o, s)
+
+
+# ---------------------------------------------------------------------------
+# admission policy: EDF, priority, starvation bound (fake clock)
+# ---------------------------------------------------------------------------
+
+
+def _fake_clock():
+    t = [0.0]
+
+    def clock():
+        return t[0]
+
+    return t, clock
+
+
+def test_edf_admits_earliest_deadline_first():
+    t, clock = _fake_clock()
+    eng = LPEngine(flush_every=1 << 30, max_inflight=1, clock=clock)
+    probs = _mk_problems(3, dims=[(4, 6)])
+    t_late = eng.submit(probs[0], deadline=30.0)
+    t_soon = eng.submit(probs[1], deadline=10.0)
+    t_mid = eng.submit(probs[2], deadline=20.0)
+    order = []
+    while len(order) < 3:
+        order.extend(eng.step())
+    assert order == [t_soon, t_mid, t_late]
+
+
+def test_priority_breaks_deadline_ties():
+    eng = LPEngine(flush_every=1 << 30, max_inflight=1)
+    probs = _mk_problems(3, dims=[(4, 6)])
+    t_lo = eng.submit(probs[0], priority=0)
+    t_hi = eng.submit(probs[1], priority=5)
+    t_mid = eng.submit(probs[2], priority=3)
+    order = []
+    while len(order) < 3:
+        order.extend(eng.step())
+    assert order == [t_hi, t_mid, t_lo]
+
+
+def test_starvation_bound_ages_stale_requests():
+    # One admission slot, a fresh high-priority arrival every round: the
+    # priority-0 request must still be admitted once it has waited
+    # starvation_rounds rounds, outranking every non-aged newcomer.
+    rounds = 3
+    eng = LPEngine(
+        flush_every=1 << 30, max_inflight=1, starvation_rounds=rounds
+    )
+    probs = _mk_problems(12, dims=[(4, 6)])
+    starved = eng.submit(probs[0], priority=0)
+    finished_at = None
+    for i in range(1, 10):
+        eng.submit(probs[i], priority=100)
+        if starved in eng.step():
+            finished_at = i
+            break
+    assert finished_at is not None and finished_at <= rounds + 2
+
+
+def test_deadline_miss_counter_uses_engine_clock():
+    t, clock = _fake_clock()
+    eng = LPEngine(flush_every=1 << 30, clock=clock)
+    probs = _mk_problems(2, dims=[(4, 6)])
+    tk_ok = eng.submit(probs[0], deadline=100.0)
+    tk_miss = eng.submit(probs[1], deadline=5.0)
+    t[0] = 50.0  # past the second deadline before any work happens
+    while not (eng.done(tk_ok) and eng.done(tk_miss)):
+        eng.step()
+    assert eng.deadline_misses == 1
+
+
+# ---------------------------------------------------------------------------
+# compile stability: steady state mints no executables
+# ---------------------------------------------------------------------------
+
+
+def test_steady_state_compiles_zero_after_warmup():
+    stats = SolveStats()
+    eng = LPEngine(SolveOptions(), flush_every=1 << 30, stats=stats, step_iters=8)
+
+    def traffic(seed):
+        probs = _mk_problems(10, seed=seed)
+        done = {}
+        tickets = [eng.submit(p) for p in probs]
+        while not all(t in done for t in tickets):
+            for t in eng.step():
+                done[t] = eng.result(t)
+
+    traffic(seed=21)  # warmup: pays every (class, pow-2 size) compile
+    compiles0, hits0 = stats.compiles, stats.cache_hits
+    traffic(seed=22)  # same shape classes, different data
+    assert stats.compiles == compiles0, "steady-state traffic recompiled"
+    assert stats.cache_hits > hits0
+
+
+# ---------------------------------------------------------------------------
+# flush-mode error contracts + ticket-store regressions
+# ---------------------------------------------------------------------------
+
+
+def _single_lp(rng, m=3, n=3):
+    b = lp.random_lp_batch(rng, 1, m, n, True, dtype=np.float64)
+    return LPProblem.make(b.c, b.a, bu=b.b)
+
+
+def test_failed_flush_retains_all_pending():
+    rng = np.random.default_rng(7)
+    eng = LPEngine(flush_every=100)
+    t_good = eng.submit(_single_lp(rng))
+    bad = lp.random_lp_batch(rng, 2, 3, 3, True, dtype=np.float64)
+    t_bad = eng.submit(
+        LPProblem(bad.c, bad.a, -bad.b, bad.b,
+                  np.zeros_like(bad.c), np.full_like(bad.c, np.inf))
+    )
+    with pytest.raises(ValueError):
+        eng.flush()
+    assert eng.pending_count == 2
+    assert {t for t, _ in eng._pending} == {t_good, t_bad}
+
+
+def test_result_unknown_ticket_raises_without_flush(monkeypatch):
+    rng = np.random.default_rng(8)
+    eng = LPEngine(flush_every=100)
+    eng.submit(_single_lp(rng))
+    calls = []
+    real_flush = eng.flush
+    monkeypatch.setattr(
+        eng, "flush", lambda: calls.append(1) or real_flush()
+    )
+    with pytest.raises(KeyError, match="unknown or already redeemed"):
+        eng.result(9999)
+    assert not calls, "unknown ticket must not trigger a flush"
+    assert eng.pending_count == 1
+
+
+def test_result_double_redeem_raises_without_flush(monkeypatch):
+    rng = np.random.default_rng(9)
+    eng = LPEngine(flush_every=100)
+    tk = eng.submit(_single_lp(rng))
+    eng.flush()
+    eng.result(tk)
+    calls = []
+    real_flush = eng.flush
+    monkeypatch.setattr(
+        eng, "flush", lambda: calls.append(1) or real_flush()
+    )
+    with pytest.raises(KeyError, match="unknown or already redeemed"):
+        eng.result(tk)
+    assert not calls
+
+
+def test_redeeming_large_queue_flushes_exactly_once():
+    # Regression for the O(pending) ticket scan: `result` consults the
+    # solved-results dict first, so redeeming from a big already-solved
+    # queue must not re-enter the solve path at all.
+    rng = np.random.default_rng(10)
+    eng = LPEngine(flush_every=1 << 30)
+    tickets = [eng.submit(_single_lp(rng)) for _ in range(64)]
+    solve_calls = []
+    real_solve = eng.session.solve
+    eng.session.solve = lambda ps: solve_calls.append(len(ps)) or real_solve(ps)
+    eng.result(tickets[7])  # first redeem flushes the whole queue once
+    assert solve_calls == [64]
+    for tk in tickets:
+        if tk != tickets[7]:
+            eng.result(tk)
+    assert solve_calls == [64], "redeeming solved tickets re-flushed"
+
+
+def test_cancel_pending_only():
+    rng = np.random.default_rng(12)
+    eng = LPEngine(flush_every=1 << 30)
+    tk = eng.submit(_single_lp(rng))
+    assert eng.cancel(tk) is True
+    assert eng.pending_count == 0
+    with pytest.raises(KeyError):
+        eng.result(tk)
+    tk2 = eng.submit(_single_lp(rng))
+    eng.step()  # admitted (and likely completed): too late to cancel
+    assert eng.cancel(tk2) is False
+    assert int(eng.result(tk2).status[0]) == lp.OPTIMAL
+
+
+def test_step_reports_each_completion_exactly_once():
+    eng = LPEngine(flush_every=1 << 30, step_iters=4)
+    probs = _mk_problems(7)
+    tickets = [eng.submit(p) for p in probs]
+    seen = []
+    while len(seen) < len(tickets):
+        seen.extend(eng.step())
+    assert sorted(seen) == sorted(tickets)
+    assert len(seen) == len(set(seen))
+
+
+def test_rejects_multi_lp_requests_on_step():
+    rng = np.random.default_rng(13)
+    eng = LPEngine(flush_every=1 << 30)
+    good = eng.submit(_single_lp(rng))
+    bad = lp.random_lp_batch(rng, 2, 3, 3, True, dtype=np.float64)
+    eng.submit(
+        LPProblem(bad.c, bad.a, -bad.b, bad.b,
+                  np.zeros_like(bad.c), np.full_like(bad.c, np.inf))
+    )
+    with pytest.raises(ValueError, match="batch == 1"):
+        eng.step()
+    # the failing admission must not drop the good request
+    assert good in eng._pending_ids
+
+
+# ---------------------------------------------------------------------------
+# property: random interleavings match the one-shot oracle
+# ---------------------------------------------------------------------------
+
+
+def test_random_interleavings_match_oracle():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed; skipping property test"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def schedules(draw):
+        n = draw(st.integers(1, 6))
+        steps_after = [draw(st.integers(0, 2)) for _ in range(n)]
+        redeem = draw(st.permutations(list(range(n))))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return n, steps_after, redeem, seed
+
+    @given(schedules())
+    @settings(max_examples=12, deadline=None)
+    def run(sched):
+        n, steps_after, redeem, seed = sched
+        problems = _mk_problems(n, dims=[(3, 4), (4, 3)], seed=seed)
+        oracle = repro.solve(problems, SolveOptions())
+        eng = LPEngine(SolveOptions(), flush_every=1 << 30, step_iters=8)
+        tickets = []
+        for p, k in zip(problems, steps_after):
+            tickets.append(eng.submit(p))
+            for _ in range(k):
+                eng.step()
+        # redeem in arbitrary order: result() drives the engine as needed
+        # (steps an in-flight ticket, flushes a pending one) and each
+        # ticket pays out exactly once.
+        sols = {i: eng.result(tickets[i]) for i in redeem}
+        for i in range(n):
+            assert _bit_same(oracle[i], sols[i])
+        with pytest.raises(KeyError):
+            eng.result(tickets[redeem[0]])
+
+    del hyp
+    run()
