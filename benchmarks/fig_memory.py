@@ -4,11 +4,17 @@ The memory axis of the paper's follow-up ("Simultaneous Solving of
 Batched Linear Programs on a GPU", arXiv:1802.08557): per-LP tableau
 storage is what caps batch size and LP size on a fixed-memory device.
 Three measurements over the paper's size grid plus the first-order
-regime (m = n in 5/28/100/200/500), dense vs compact tableau layout
-(``core/tableau.py``) and the pdhg backend's tableau-free O(m n) state
-(``core/pdhg.py:state_bytes_per_lp``) — at m = n = 500 the tableau rows
-are the analytic estimate of what the simplex backends could NOT
-allocate, which is the shape class ``backend="pdhg"`` exists to serve:
+regime (m = n in 5/28/100/200/500), across FOUR storage layouts: dense
+vs compact tableau (``core/tableau.py``), the pdhg backend's
+tableau-free O(m n) state (``core/pdhg.py:state_bytes_per_lp``), and
+the shared-A revised simplex's O(m^2) basis state with the one stored
+``A`` amortized over the batch (``core/revised.py``) — at m = n = 500
+the tableau rows are the analytic estimate of what the simplex
+backends could NOT allocate, which is the shape class
+``backend="pdhg"`` exists to serve.  Each row also carries the
+per-iteration arithmetic intensity of every layout
+(``benchmarks/roofline.py``) — the flop/byte number that explains WHY
+the smaller layouts are wall-clock wins on a memory-bound machine:
 
 1. **bytes/LP** — ``TableauSpec.bytes_per_lp`` (analytic; the compact
    layout drops the artificial block, ~33% on square LPs).
@@ -45,15 +51,29 @@ def _smoke() -> bool:
     return os.environ.get("BENCH_SMOKE", "") == "1"
 
 
+#: Batch the shared-A amortization columns are quoted at (the stored
+#: problem bytes/LP depend on B: one A over B rows of b/c).
+SHARED_QUOTE_BATCH = 1024
+
+
 def _grid_row(size: int) -> dict:
     from repro import TableauSpec
-    from repro.core import pdhg
+    from repro.core import pdhg, revised
     from repro.kernels import ops
+
+    from . import roofline
 
     compact = TableauSpec(size, size, "compact")
     dense = compact.with_layout("dense")
     cb, db = compact.bytes_per_lp(np.float32), dense.bytes_per_lp(np.float32)
     pb = pdhg.state_bytes_per_lp(size, size)
+    # Shared revised simplex: resident per-LP bytes are basis state plus
+    # this LP's own b/c rows; the one A is a batch-independent constant
+    # subtracted off the device budget, not a per-LP charge.
+    sb = revised.state_bytes_per_lp(size, size) + 2 * size * 4
+    shared_stored = revised.stored_bytes_per_lp(size, size, SHARED_QUOTE_BATCH)
+    a_bytes = size * size * 4
+    shared_tile = ops.revised_auto_tile_b(1 << 20, size, size)
     return {
         "m": size,
         "n": size,
@@ -63,16 +83,32 @@ def _grid_row(size: int) -> dict:
         # At m = n = 500 this is the only resident form that fits a VMEM
         # tile at all — the tableau estimate is what we could NOT allocate.
         "pdhg_bytes_per_lp": pb,
+        "shared_bytes_per_lp": sb,
+        # one shared A amortized over SHARED_QUOTE_BATCH rows of (b, c)
+        "shared_stored_bytes_per_lp": shared_stored,
         "bytes_ratio": cb / db,
         "pdhg_bytes_ratio": pb / db,
+        "shared_bytes_ratio": sb / db,
+        "shared_stored_vs_compact": shared_stored / cb,
         "dense_max_batch": DEVICE_MEMORY_BYTES // db,
         "compact_max_batch": DEVICE_MEMORY_BYTES // cb,
         "pdhg_max_batch": DEVICE_MEMORY_BYTES // pb,
+        "shared_max_batch": (DEVICE_MEMORY_BYTES - a_bytes) // sb,
         "dense_tile_b": ops.auto_tile_b(1 << 20, dense),
         "compact_tile_b": ops.auto_tile_b(1 << 20, compact),
+        "shared_tile_b": shared_tile,
         "dense_fits_vmem": ops.fits_vmem(size, size, layout="dense"),
         "compact_fits_vmem": ops.fits_vmem(size, size, layout="compact"),
         "pdhg_fits_vmem": ops.pdhg_fits_vmem(size, size),
+        "shared_fits_vmem": ops.revised_fits_vmem(size, size),
+        # flop/byte of one lockstep iteration (benchmarks/roofline.py);
+        # shared is quoted at its auto tile, the others stream per-LP state
+        "dense_ai": roofline.arithmetic_intensity("dense", size, size),
+        "compact_ai": roofline.arithmetic_intensity("compact", size, size),
+        "pdhg_ai": roofline.arithmetic_intensity("pdhg", size, size),
+        "shared_ai": roofline.arithmetic_intensity(
+            "shared", size, size, tile_b=max(shared_tile, 1)
+        ),
     }
 
 
@@ -131,7 +167,11 @@ def run(full: bool = False) -> None:
             f"{row['dense_bytes_per_lp']}B/LP ({row['bytes_ratio']:.3f}x), "
             f"pdhg {row['pdhg_bytes_per_lp']}B/LP "
             f"({row['pdhg_bytes_ratio']:.3f}x), "
-            f"max batch {row['compact_max_batch']} vs {row['dense_max_batch']}",
+            f"shared {row['shared_bytes_per_lp']}B/LP "
+            f"({row['shared_bytes_ratio']:.3f}x, "
+            f"ai {row['shared_ai']:.2f} vs dense {row['dense_ai']:.2f}), "
+            f"max batch {row['compact_max_batch']} vs {row['dense_max_batch']} "
+            f"vs shared {row['shared_max_batch']}",
         )
         if size in timed_sizes:
             _time_row(row, batch_for[size], rng)

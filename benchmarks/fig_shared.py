@@ -1,0 +1,237 @@
+"""Shared-structure support sweep benchmark -> BENCH_shared.json.
+
+The ISSUE 8 headline numbers for the ``SharedLPBatch`` + revised-simplex
+path, measured on its native workload — a support-function sweep over
+one polytope (one ``A``, thousands of direction objectives):
+
+1. **stored bytes/LP** — ``core/revised.py:stored_bytes_per_lp`` (one
+   shared ``A`` amortized over B rows of ``b``/``c``) against the
+   compact tableau at the same square shape.  Acceptance: <= 0.2x at
+   m = n = 100 with B >= 1024 (it lands near 0.01x).
+2. **max batch at fixed HBM** for the sweep workload — simplex-like
+   polytopes (n facets ``-x_i <= 0`` plus one ``sum x <= 1``, so the
+   canonical split form is (n+1, 2n)).  The tableau path stores each
+   LP's own ``A`` copy PLUS its compact tableau; the shared path stores
+   ``A`` once plus O(m^2) basis state per LP.  Acceptance: >= 4x.
+3. **wall-clock** — ``Polytope.support_sweep`` via ``SharedLPBatch``
+   (``backend="xla-shared"``) vs the per-LP-tableau session sweep, on
+   identical direction stacks, with statuses compared everywhere and
+   every support value checked against the closed form: for the unit
+   simplex, ``sup d.x = max(0, max_i d_i)`` exactly.  Acceptance:
+   >= 1.5x at the benchmark shapes.
+
+Writes ``BENCH_shared.json`` (``$BENCH_DIR`` or the repo root) and
+RAISES if an acceptance criterion fails, so the CI bench-smoke job gets
+the check for free.  ``BENCH_SMOKE=1`` shrinks the timed shapes; the
+analytic rows always cover the full grid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+#: Same nominal device budget as fig_memory (ratios are budget-independent).
+DEVICE_MEMORY_BYTES = 8 * 2**30
+
+#: Square m = n grid for the stored-bytes criterion.
+SQUARE_SIZES = (5, 28, 100, 200, 500)
+
+#: Polytope dimensions for the sweep-workload capacity rows.
+SWEEP_SIZES = (5, 28, 100, 200)
+
+#: Batch the amortized-storage columns are quoted at.
+QUOTE_BATCH = 1024
+
+ITEM = 4  # float32 throughout
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _simplex_polytope(n: int):
+    """Unit-simplex polytope: n facets ``-x_i <= 0`` + one ``sum x <= 1``."""
+    import jax.numpy as jnp
+
+    from repro.core.support import Polytope
+
+    a = np.concatenate([-np.eye(n), np.ones((1, n))], axis=0).astype(np.float32)
+    b = np.concatenate([np.zeros(n), np.ones(1)]).astype(np.float32)
+    return Polytope(jnp.asarray(a), jnp.asarray(b))
+
+
+def _square_row(size: int, batch: int = QUOTE_BATCH) -> dict:
+    """Stored problem bytes/LP, shared vs compact tableau, at m = n."""
+    from repro import TableauSpec
+    from repro.core import revised
+
+    compact = TableauSpec(size, size, "compact").bytes_per_lp(np.float32)
+    stored = revised.stored_bytes_per_lp(size, size, batch)
+    return {
+        "m": size,
+        "n": size,
+        "batch": batch,
+        "compact_bytes_per_lp": compact,
+        "shared_stored_bytes_per_lp": stored,
+        "stored_ratio": stored / compact,
+    }
+
+
+def _sweep_row(n: int, batch: int = QUOTE_BATCH) -> dict:
+    """Max-batch-at-fixed-HBM for the support-sweep workload at dim n.
+
+    Canonical shapes come from the simplex polytope's split form:
+    m_c = n + 1 rows, n_c = 2n columns.  Per-LP residency:
+
+    * tableau path: this LP's own ``A`` copy + ``b``/``c`` + the compact
+      working tableau (what ``solve_canonical`` materializes today);
+    * shared path: ``b``/``c`` + O(m^2) basis state, with the ONE ``A``
+      charged off the budget top rather than per LP.
+    """
+    from repro import TableauSpec
+    from repro.core import revised
+
+    mc, nc = n + 1, 2 * n
+    a_bytes = mc * nc * ITEM
+    vec_bytes = (mc + nc) * ITEM
+    compact_tab = TableauSpec(mc, nc, "compact").bytes_per_lp(np.float32)
+    compact_per_lp = a_bytes + vec_bytes + compact_tab
+    shared_per_lp = revised.state_bytes_per_lp(mc, nc) + vec_bytes
+    compact_max = DEVICE_MEMORY_BYTES // compact_per_lp
+    shared_max = (DEVICE_MEMORY_BYTES - a_bytes) // shared_per_lp
+    return {
+        "dim": n,
+        "canon_m": mc,
+        "canon_n": nc,
+        "compact_bytes_per_lp": compact_per_lp,
+        "shared_bytes_per_lp": shared_per_lp,
+        "shared_stored_bytes_per_lp": revised.stored_bytes_per_lp(
+            mc, nc, batch
+        ),
+        "compact_max_batch": compact_max,
+        "shared_max_batch": shared_max,
+        "max_batch_ratio": shared_max / compact_max,
+    }
+
+
+def _timed_row(n: int, directions: int, steps: int, rng) -> dict:
+    """Wall-clock + correctness: shared sweep vs the tableau sweep."""
+    from repro.core.backends import SolveOptions
+
+    poly = _simplex_polytope(n)
+    stack = rng.normal(size=(steps, directions, n)).astype(np.float32)
+
+    def sweep(backend):
+        return np.asarray(
+            poly.support_sweep(
+                stack, SolveOptions(backend=backend, max_iters=0),
+                warm_start=True,
+            )
+        )
+
+    t_dense = time_fn(sweep, "xla")
+    t_shared = time_fn(sweep, "xla-shared")
+    sup_dense, sup_shared = sweep("xla"), sweep("xla-shared")
+    statuses_identical = bool(
+        np.array_equal(np.isfinite(sup_dense), np.isfinite(sup_shared))
+    )
+    # closed-form oracle for the unit simplex: sup d.x = max(0, max_i d_i)
+    oracle = np.maximum(stack.max(axis=-1), 0.0)
+    oracle_err = float(np.max(np.abs(sup_shared - oracle)))
+    row = {
+        "dim": n,
+        "directions": directions,
+        "steps": steps,
+        "lps": steps * directions,
+        "dense_s": t_dense,
+        "shared_s": t_shared,
+        "speedup": t_dense / t_shared,
+        "statuses_identical": statuses_identical,
+        "oracle_max_err": oracle_err,
+    }
+    emit(
+        f"shared_sweep_n{n}_k{directions}x{steps}",
+        t_shared,
+        f"dense {t_dense:.4f}s ({row['speedup']:.2f}x), "
+        f"oracle err {oracle_err:.2e}, statuses={statuses_identical}",
+    )
+    return row
+
+
+def run(full: bool = False) -> None:
+    rng = np.random.default_rng(808)
+
+    squares = [_square_row(s) for s in SQUARE_SIZES]
+    for row in squares:
+        emit(
+            f"shared_stored_m{row['m']}",
+            0.0,
+            f"shared {row['shared_stored_bytes_per_lp']:.0f}B/LP stored vs "
+            f"compact {row['compact_bytes_per_lp']}B/LP "
+            f"({row['stored_ratio']:.4f}x at B={row['batch']})",
+        )
+
+    sweeps = [_sweep_row(n) for n in SWEEP_SIZES]
+    for row in sweeps:
+        emit(
+            f"shared_maxbatch_dim{row['dim']}",
+            0.0,
+            f"canon ({row['canon_m']},{row['canon_n']}): shared fits "
+            f"{row['shared_max_batch']} LPs vs compact "
+            f"{row['compact_max_batch']} ({row['max_batch_ratio']:.2f}x)",
+        )
+
+    if _smoke():
+        shapes = ((10, 32, 3), (28, 64, 3))
+    elif full:
+        shapes = ((10, 64, 4), (28, 128, 4), (100, 256, 4))
+    else:
+        shapes = ((10, 64, 4), (28, 128, 4))
+    timed = [_timed_row(*shape, rng) for shape in shapes]
+
+    # --- acceptance criteria (ISSUE 8) ------------------------------------
+    sq100 = next(r for r in squares if r["m"] == 100)
+    assert sq100["stored_ratio"] <= 0.2, sq100
+    big_sweep = next(r for r in sweeps if r["dim"] == 100)
+    assert big_sweep["max_batch_ratio"] >= 4.0, big_sweep
+    for row in timed:
+        assert row["statuses_identical"], row
+        assert row["oracle_max_err"] <= 1e-6, row
+    # wall-clock bar: the largest timed shape must clear 1.5x (tiny smoke
+    # shapes are dominated by dispatch overhead, so they inform but don't
+    # gate).
+    assert timed[-1]["speedup"] >= 1.5, timed[-1]
+
+    results = {
+        "device_memory_bytes": DEVICE_MEMORY_BYTES,
+        "quote_batch": QUOTE_BATCH,
+        "square": squares,
+        "sweep_capacity": sweeps,
+        "timed": timed,
+        "criteria": {
+            "stored_ratio_m100": sq100["stored_ratio"],
+            "stored_ok": sq100["stored_ratio"] <= 0.2,
+            "max_batch_ratio_dim100": big_sweep["max_batch_ratio"],
+            "max_batch_ok": big_sweep["max_batch_ratio"] >= 4.0,
+            "speedup_largest": timed[-1]["speedup"],
+            "speedup_ok": timed[-1]["speedup"] >= 1.5,
+            "statuses_identical": all(r["statuses_identical"] for r in timed),
+            "oracle_max_err": max(r["oracle_max_err"] for r in timed),
+        },
+    }
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_shared.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

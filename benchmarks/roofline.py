@@ -1,123 +1,115 @@
-"""Roofline analysis over the dry-run records (deliverable g).
+"""Analytic per-iteration roofline for the batched LP backends.
 
-Per (arch x shape x mesh):
-    compute term    = dot_FLOPs / peak_FLOP/s          (per chip, bf16)
-    memory term     = traffic_bytes / HBM_bw           (per chip)
-    collective term = collective_bytes / link_bw       (per chip wire bytes)
-with TPU v5e constants (197 TF, 819 GB/s, 50 GB/s/link).  All inputs are
-per-device numbers from the loop-aware HLO analysis (hlo_stats.py) — the
-formula ``global_bytes / (chips x bw)`` reduces to per-chip / bw.
+Every backend in this repo is a lockstep iteration over per-LP state, so
+its steady-state speed is set by one number: the arithmetic intensity
+(FLOPs per HBM byte) of a single iteration.  This module writes down the
+iteration cost model for each storage layout —
 
-Also reports MODEL_FLOPS = 6*N(_active)*tokens (x3 for train fwd+bwd
-already folded into the 6; decode counts 2*N per token) against the HLO
-dot flops — the useful-compute ratio that catches remat/padding waste.
+* **dense / compact tableau** (``core/tableau.py``): the pivot update
+  rewrites the whole (m+1, q) tableau every iteration.  FLOPs and bytes
+  are both O(m·q), so intensity is a small constant (~0.4 flop/byte):
+  firmly memory-bound, which is why the compact layout's 0.67x bytes is
+  a wall-clock win, not just a capacity win.
+* **pdhg** (``core/pdhg.py``): two matvecs against a per-LP ``A`` that
+  must stream from HBM each iteration — same constant-intensity regime.
+* **shared revised simplex** (``core/revised.py``): pricing reads the
+  ONE shared ``A`` per *tile* of LPs, so its O(m·n) bytes amortize over
+  ``tile_b`` LPs and the per-LP traffic collapses to the O(m²) basis
+  state.  Intensity grows with ``tile_b`` — the only backend whose
+  roofline position the batch size can move.
+
+Reference machine balance uses TPU v5e-class constants (197 TF/s peak,
+819 GB/s HBM => ~241 flop/byte); every layout sits far below it, so the
+roofline fraction column is ``intensity / balance`` — the ceiling on
+attainable peak-FLOP utilization.  ``benchmarks/fig_memory.py`` imports
+:func:`iteration_profile` for the arithmetic-intensity column of
+``BENCH_memory.json``.
 """
 
 from __future__ import annotations
 
-import glob
-import json
-import os
-from typing import Dict, List, Optional
+from typing import Dict
 
-PEAK = 197e12
-HBM = 819e9
-ICI = 50e9
+#: Reference accelerator for the machine-balance line (per chip, f32-ish).
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+MACHINE_BALANCE = PEAK_FLOPS / HBM_BW
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+SIZES = (5, 28, 100, 200, 500)
 
-
-def model_flops_per_device(rec: Dict) -> float:
-    """Analytic useful flops per device per executed step."""
-    n_active = rec["active_param_count"]
-    chips = rec["n_chips"]
-    if rec["kind"] == "train":
-        tokens = rec["global_batch"] * rec["seq_len"]
-        return 6.0 * n_active * tokens / chips
-    if rec["kind"] == "prefill":
-        tokens = rec["global_batch"] * rec["seq_len"]
-        return 2.0 * n_active * tokens / chips
-    # decode: one token per sequence
-    return 2.0 * n_active * rec["global_batch"] / chips
+KINDS = ("dense", "compact", "pdhg", "shared")
 
 
-def load_records(results_dir: Optional[str] = None) -> List[Dict]:
-    out = []
-    for f in sorted(glob.glob(os.path.join(results_dir or RESULTS_DIR, "*.json"))):
-        with open(f) as fh:
-            out.append(json.load(fh))
-    return out
+def iteration_profile(
+    kind: str, m: int, n: int, tile_b: int = 1, dtype_bytes: int = 4
+) -> Dict[str, float]:
+    """FLOPs / HBM bytes / intensity for ONE lockstep iteration of one LP.
 
-
-def analyze_record(rec: Dict) -> Optional[Dict]:
-    if rec.get("status") != "ok":
-        return None
-    t_comp = rec["hlo_dot_flops_per_device"] / PEAK
-    t_mem = rec["hlo_traffic_bytes_per_device"] / HBM
-    t_coll = rec["collective_bytes_per_device"]["total"] / ICI
-    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
-    bottleneck = max(terms, key=terms.get)
-    mf = model_flops_per_device(rec)
-    useful = mf / rec["hlo_dot_flops_per_device"] if rec["hlo_dot_flops_per_device"] else 0.0
-    bound = max(terms.values())
+    ``tile_b`` only matters for ``kind="shared"``: the shared ``A`` block
+    is fetched once per tile, so its bytes are divided by the tile size.
+    Byte counts are steady-state HBM traffic (state read + written each
+    iteration); FLOPs count multiply-adds as 2.
+    """
+    if kind in ("dense", "compact"):
+        q = 1 + n + (2 * m if kind == "dense" else m)
+        rows = m + 1
+        # pricing scan (1 pass), ratio column, rank-1 pivot update (2 ops/elem)
+        flops = 3.0 * rows * q
+        byts = 2.0 * rows * q * dtype_bytes  # tableau in + out
+    elif kind == "pdhg":
+        # x/y proximal steps: A x and A^T y matvecs + O(m + n) vector ops
+        flops = 4.0 * m * n + 8.0 * (m + n)
+        byts = (2.0 * m * n + 6.0 * (m + n)) * dtype_bytes  # A twice + vectors
+    elif kind == "shared":
+        # pricing w = c_B B^-1 (2m^2) + d = w.A (2mn) + ftran B^-1 a_e (2m^2)
+        # + rank-1 binv/xb update (2m^2)
+        flops = 2.0 * m * n + 6.0 * m * m
+        # A once per TILE (amortized), binv read + written, O(m+n) vectors
+        byts = (m * n / max(tile_b, 1) + 2.0 * m * m + 4.0 * (m + n)) * dtype_bytes
+    else:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    ai = flops / byts
     return {
-        "arch": rec["arch"],
-        "shape": rec["shape"],
-        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
-        "t_compute_s": t_comp,
-        "t_memory_s": t_mem,
-        "t_collective_s": t_coll,
-        "bottleneck": bottleneck,
-        "model_flops_ratio": useful,
-        "roofline_fraction": t_comp / bound if bound else 0.0,
-        "hbm_gb": rec["memory"]["temp_size_in_bytes"] / 1e9
-        + rec["memory"]["argument_size_in_bytes"] / 1e9,
+        "flops": flops,
+        "bytes": byts,
+        "intensity": ai,
+        "roofline_fraction": ai / MACHINE_BALANCE,
     }
 
 
-def run(full: bool = False, results_dir: Optional[str] = None):
-    print("# roofline: name,us_per_call,mesh,compute_s,memory_s,collective_s,"
-          "bottleneck,model_flops_ratio,roofline_frac")
-    rows = []
-    for rec in load_records(results_dir):
-        a = analyze_record(rec)
-        if a is None:
-            continue
-        rows.append(a)
-        bound = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
-        print(
-            f"roofline_{a['arch']}_{a['shape']}_{a['mesh']},{bound * 1e6:.1f},"
-            f"{a['mesh']},{a['t_compute_s']:.4g},{a['t_memory_s']:.4g},"
-            f"{a['t_collective_s']:.4g},{a['bottleneck']},"
-            f"{a['model_flops_ratio']:.3f},{a['roofline_fraction']:.3f}"
-        )
-    if not rows:
-        print("roofline_no_records,0,run launch/dryrun first")
-    return rows
+def arithmetic_intensity(
+    kind: str, m: int, n: int, tile_b: int = 1, dtype_bytes: int = 4
+) -> float:
+    """Just the flop/byte number (the BENCH_memory.json column)."""
+    return iteration_profile(kind, m, n, tile_b, dtype_bytes)["intensity"]
 
 
-def markdown_table(results_dir: Optional[str] = None) -> str:
-    """EXPERIMENTS.md-ready table."""
-    rows = []
-    for rec in load_records(results_dir):
-        a = analyze_record(rec)
-        if a is None:
-            mesh = "2x16x16" if rec.get("multi_pod") else "16x16"
-            rows.append(
-                f"| {rec['arch']} | {rec['shape']} | {mesh} | — | — | — | "
-                f"{rec.get('status','?')} | — | — |"
-            )
-            continue
-        rows.append(
-            "| {arch} | {shape} | {mesh} | {t_compute_s:.4f} | {t_memory_s:.4f} | "
-            "{t_collective_s:.4f} | {bottleneck} | {model_flops_ratio:.2f} | "
-            "{roofline_fraction:.2f} |".format(**a)
-        )
-    head = (
-        "| arch | shape | mesh | compute s | memory s | collective s | "
-        "bottleneck | 6ND/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|---|"
+def run(full: bool = False) -> None:
+    """Print the roofline table over the paper's size grid.
+
+    Purely analytic (no device work), so ``full`` only widens nothing —
+    the whole grid is always printed.  Shared intensity is quoted at the
+    auto-selected VMEM tile for a 4096-LP batch, i.e. the tile the
+    dispatcher would actually launch.
+    """
+    from repro.kernels import ops
+
+    print(
+        "# roofline: name,us_per_call,m,n,kind,tile_b,flops_per_iter,"
+        "bytes_per_iter,intensity,roofline_frac"
     )
-    return head + "\n" + "\n".join(rows)
+    print(f"# machine balance (v5e-class): {MACHINE_BALANCE:.0f} flop/byte")
+    for size in SIZES:
+        for kind in KINDS:
+            tile = 1
+            if kind == "shared":
+                tile = ops.revised_auto_tile_b(4096, size, size)
+            p = iteration_profile(kind, size, size, tile_b=tile)
+            print(
+                f"roofline_{kind}_m{size},0.0,{size},{size},{kind},{tile},"
+                f"{p['flops']:.3g},{p['bytes']:.3g},{p['intensity']:.3f},"
+                f"{p['roofline_fraction']:.2e}"
+            )
 
 
 if __name__ == "__main__":

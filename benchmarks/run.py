@@ -21,6 +21,7 @@ from . import (
     fig_memory,
     fig_rules,
     fig_serve,
+    fig_shared,
     roofline,
     table1_hyperbox,
     table2_reach,
@@ -40,6 +41,7 @@ BENCHES = {
     "memory": fig_memory.run,
     "rules": fig_rules.run,
     "serve": fig_serve.run,
+    "shared": fig_shared.run,
     "roofline": roofline.run,
 }
 

@@ -67,8 +67,8 @@ def main():
     small = lp.LPBatch(batch.a[:64], batch.b[:64], batch.c[:64])
     base = repro.solve(small)
     for name in repro.available_backends():
-        if name == "xla":
-            continue
+        if name == "xla" or name.endswith("-shared"):
+            continue  # shared twins consume SharedLPBatch — demoed below
         opts = SolveOptions(backend=name, crossover=(name == "pdhg"))
         other = repro.solve(small, opts)
         # Compare where both sides report OPTIMAL: iterative backends may
@@ -79,6 +79,21 @@ def main():
                             np.asarray(base.objective)[ok], rtol=1e-4)
         print(f"backend {name!r} agrees with xla: {agree} "
               f"({int(ok.sum())}/{small.batch} rows optimal on both)")
+
+    # 6) Shared-structure batches: ONE constraint matrix, many c/b
+    #    variants — the revised-simplex twins store A once and keep only
+    #    O(m^2) basis state per LP (support sweeps emit this natively).
+    shared = lp.random_shared_lp_batch(rng, 64, 12, 6, feasible_start=True,
+                                       dtype=np.float32)
+    dense = repro.solve(shared.densify())
+    for name in ("xla-shared", "pallas-shared"):
+        ssol = repro.solve(shared, SolveOptions(backend=name))
+        ok = ((np.asarray(ssol.status) == lp.OPTIMAL)
+              & (np.asarray(dense.status) == lp.OPTIMAL))
+        agree = np.allclose(np.asarray(ssol.objective)[ok],
+                            np.asarray(dense.objective)[ok], rtol=1e-4)
+        print(f"backend {name!r} agrees with densified xla: {agree} "
+              f"({int(ok.sum())}/{shared.batch} rows optimal on both)")
 
 
 if __name__ == "__main__":

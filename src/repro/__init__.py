@@ -10,6 +10,7 @@ Public LP API::
     sol  = repro.solve(repro.LPProblem.make(c, a, bu=b))      # general form
     sols = repro.solve([p1, p2, p3])                          # heterogeneous
     sol  = repro.solve(repro.LPBatch(a, b, c))                # canonical form
+    sol  = repro.solve(repro.SharedLPBatch(a, b, c))          # one A, many c/b
 """
 
 from .api import solve, solve_hyperbox
@@ -21,7 +22,7 @@ from .core.backends import (
     get_backend,
     register_backend,
 )
-from .core.lp import LPBatch, LPSolution, ResumeState
+from .core.lp import LPBatch, LPSolution, ResumeState, SharedLPBatch
 from .core.problem import LPProblem
 from .core.session import SolveSession
 from .core.tableau import TableauSpec
@@ -31,6 +32,7 @@ __all__ = [
     "solve_hyperbox",
     "LPProblem",
     "LPBatch",
+    "SharedLPBatch",
     "LPSolution",
     "ResumeState",
     "TableauSpec",

@@ -24,6 +24,10 @@ Routing:
   * ``list/tuple`` of ``LPProblem`` -> shape bucketing (core/bucketing.py),
     one solve per bucket, per-problem single-LP solutions in input order.
   * ``LPBatch``    -> straight to the chunked dispatch (no mapping).
+  * ``SharedLPBatch`` (one A, batched c/b) -> the chunked dispatch on
+    the shared revised-simplex backends (``xla-shared`` /
+    ``pallas-shared``), which keep only per-LP basis state and read the
+    constraint matrix from a single broadcast buffer.
 
 ``mesh`` shards the batch dimension across the mesh's data axes; all solver
 knobs live in the frozen ``SolveOptions`` record (core/backends.py).
@@ -39,10 +43,10 @@ import jax.numpy as jnp
 from .core import dispatch as _dispatch
 from .core.backends import SolveOptions, SolveStats
 from .core.bucketing import ShapeGrid, bucket_problems, scatter_solutions
-from .core.lp import INFEASIBLE, LPBatch, LPSolution
+from .core.lp import INFEASIBLE, LPBatch, LPSolution, SharedLPBatch
 from .core.problem import LPProblem, canonicalize, solve_box, uncanonicalize
 
-Solvable = Union[LPProblem, LPBatch, Sequence[LPProblem]]
+Solvable = Union[LPProblem, LPBatch, SharedLPBatch, Sequence[LPProblem]]
 
 
 def solve(
@@ -92,7 +96,7 @@ def solve(
     TypeError
         For any other input type.
     """
-    if isinstance(problem, LPBatch):
+    if isinstance(problem, (LPBatch, SharedLPBatch)):
         return _dispatch.solve_canonical(
             problem, options, mesh=mesh, batch_axes=batch_axes, stats=stats
         )
@@ -101,8 +105,8 @@ def solve(
     if isinstance(problem, (list, tuple)):
         return _solve_many(problem, options, mesh, batch_axes, grid, stats)
     raise TypeError(
-        f"repro.solve expects LPProblem, LPBatch, or a list of LPProblem; "
-        f"got {type(problem).__name__}"
+        f"repro.solve expects LPProblem, LPBatch, SharedLPBatch, or a "
+        f"list of LPProblem; got {type(problem).__name__}"
     )
 
 

@@ -48,8 +48,9 @@ import numpy as np
 from . import engine as _engine
 from . import hyperbox as _hyperbox
 from . import pdhg as _pdhg
+from . import revised as _revised
 from . import simplex as _simplex
-from .lp import LPBatch, LPSolution, ResumeState
+from .lp import LPBatch, LPSolution, ResumeState, SharedLPBatch
 from .tableau import DEFAULT_LAYOUT, LAYOUTS, TableauSpec
 
 
@@ -58,6 +59,13 @@ COMPACTION_MODES = ("off", "chunked", "every_k")
 
 #: Valid values of :attr:`SolveOptions.resume`.
 RESUME_MODES = ("scratch", "basis")
+
+#: Backends that consume :class:`~repro.core.lp.SharedLPBatch` natively —
+#: one ``(m, n)`` constraint matrix read-shared by every LP in the batch,
+#: per-LP state limited to the revised-simplex basis record
+#: (``core/revised.py``).  The dispatch layer densifies a shared batch
+#: before handing it to any backend NOT in this tuple.
+SHARED_BACKENDS = ("xla-shared", "pallas-shared")
 
 #: Shape frontier for ``backend="auto"``: LPs with ``max(m, n)`` at or
 #: above it route to the first-order ``pdhg`` backend, smaller ones to a
@@ -76,11 +84,15 @@ class SolveOptions:
     ----------
     backend : str, default "xla"
         Registered backend name (``"xla"`` | ``"pallas"`` | ``"pdhg"`` |
-        ``"reference"`` | a name added via :func:`register_backend`), or
-        ``"auto"`` — not a registered backend but a routing directive:
-        the dispatch layer resolves it per shape through
-        :func:`route_shape` (simplex below :attr:`route_frontier`, the
-        first-order ``pdhg`` backend at or above it).
+        ``"xla-shared"`` | ``"pallas-shared"`` | ``"reference"`` | a name
+        added via :func:`register_backend`), or ``"auto"`` — not a
+        registered backend but a routing directive: the dispatch layer
+        resolves it per shape through :func:`route_shape` (simplex below
+        :attr:`route_frontier`, the first-order ``pdhg`` backend at or
+        above it).  On a :class:`~repro.core.lp.SharedLPBatch` the
+        simplex names promote to their shared counterparts
+        (:data:`SHARED_BACKENDS`) and ``"auto"`` routes shared; the
+        shared names on a plain :class:`LPBatch` are an error.
     rule : str, default "lpc"
         Pivot rule: ``"lpc"`` (largest positive coefficient, the paper
         default), ``"rpc"`` (randomized), or ``"bland"`` (anti-cycling).
@@ -550,6 +562,7 @@ def route_shape(
     dtype=jnp.float32,
     options: Optional[SolveOptions] = None,
     layout: Optional[str] = None,
+    shared: bool = False,
 ) -> str:
     """The shape-routing table: pick a backend name for an LP shape.
 
@@ -571,7 +584,20 @@ def route_shape(
     ``fits_vmem`` predicate with the conservative ``want_state=True``
     footprint so routing never flips between the start and resume rounds
     of one solve.
+
+    ``shared=True`` routes a :class:`~repro.core.lp.SharedLPBatch` —
+    one of :data:`SHARED_BACKENDS`, never ``pdhg``: the frontier exists
+    because the per-LP tableau is O(m (n + m)), but the shared batch's
+    per-LP state is the O(m^2) revised-simplex basis record and its
+    stored problem data is O(m) amortized, so densifying past the
+    frontier would forfeit exactly the memory win the caller asked for.
     """
+    if shared:
+        from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+        if kernel_ops._on_tpu() and kernel_ops.revised_fits_vmem(m, n, dtype):
+            return "pallas-shared"
+        return "xla-shared"
     frontier = DEFAULT_ROUTE_FRONTIER
     if options is not None and options.route_frontier > 0:
         frontier = options.route_frontier
@@ -640,7 +666,21 @@ def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
     return _hyperbox.solve_batched(lo, hi, directions)
 
 
-_VMEM_FALLBACK_WARNED: set = set()
+# One keyed warn-once table for every routing-fallback message in this
+# module (simplex pallas->xla/pdhg VMEM fallback, the pdhg kernel->XLA
+# driver fallback, the pallas-shared->xla-shared fallback).  Keys are
+# ``(path, m, n, dtype, ...)`` tuples; values keep the emitted message so
+# tests can assert on what was (or wasn't) reported.  Replaces the
+# per-path ad-hoc ``set`` registries that each fallback used to grow.
+_WARN_ONCE: Dict[Tuple, str] = {}
+
+
+def _warn_once(key: Tuple, message: str, stacklevel: int = 4) -> None:
+    """Emit ``message`` as a UserWarning once per ``key``."""
+    if key in _WARN_ONCE:
+        return
+    _WARN_ONCE[key] = message
+    warnings.warn(message, stacklevel=stacklevel)
 
 
 def _pallas_vmem_fallback(
@@ -674,21 +714,25 @@ def _pallas_vmem_fallback(
     target = route_shape(m, n, dtype, options, layout=layout)
     if target == "pallas":  # the table can't re-route here: it won't fit
         target = "xla"
-    key = (m, n, str(jnp.dtype(dtype)), layout)
-    if key not in _VMEM_FALLBACK_WARNED:
-        _VMEM_FALLBACK_WARNED.add(key)
-        fidelity = (
-            "bit-identical results"
-            if target == "xla"
-            else "first-order results at pdhg_tol accuracy"
-        )
-        warnings.warn(
-            f"pallas backend: single-LP tableau for shape (m={m}, n={n}, "
-            f"{key[2]}, layout={layout!r}) exceeds the VMEM budget "
-            f"({kernel_ops.VMEM_BUDGET_BYTES} bytes); routing to the "
-            f"{target} backend ({fidelity})",
-            stacklevel=3,
-        )
+    fidelity = (
+        "bit-identical results"
+        if target == "xla"
+        else "first-order results at pdhg_tol accuracy"
+    )
+    per_lp = kernel_ops.kernel_vmem_bytes_per_lp(
+        TableauSpec(m, n, layout), dtype, want_state=True
+    )
+    budget = int(kernel_ops.VMEM_BUDGET_BYTES * kernel_ops.VMEM_TILE_FRACTION)
+    dtype_str = str(jnp.dtype(dtype))
+    _warn_once(
+        ("pallas-vmem", m, n, dtype_str, layout),
+        f"pallas backend: single-LP tableau for shape (m={m}, n={n}, "
+        f"{dtype_str}, layout={layout!r}) needs {per_lp} VMEM bytes/LP "
+        f"against the {budget}-byte per-tile budget "
+        f"({kernel_ops.VMEM_BUDGET_BYTES} total x "
+        f"{kernel_ops.VMEM_TILE_FRACTION} tile fraction); routing to the "
+        f"{target} backend ({fidelity})",
+    )
     return target
 
 
@@ -810,7 +854,26 @@ def _pallas_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
 def _pdhg_use_kernel(m: int, n: int, dtype) -> bool:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
-    return kernel_ops._on_tpu() and kernel_ops.pdhg_fits_vmem(m, n, dtype)
+    if not kernel_ops._on_tpu():
+        return False
+    if kernel_ops.pdhg_fits_vmem(m, n, dtype):
+        return True
+    # On TPU but over budget: the XLA while_loop driver takes over.  Same
+    # step function, but matvec reduction order differs — worth one
+    # warning per shape (through the module-wide warn-once table) since
+    # the driver choice is observable in the last ulp of the results.
+    per_lp = kernel_ops.pdhg_vmem_bytes_per_lp(m, n, dtype)
+    budget = int(kernel_ops.VMEM_BUDGET_BYTES * kernel_ops.VMEM_TILE_FRACTION)
+    dtype_str = str(jnp.dtype(dtype))
+    _warn_once(
+        ("pdhg-kernel", m, n, dtype_str),
+        f"pdhg backend: per-LP kernel state for shape (m={m}, n={n}, "
+        f"{dtype_str}) needs {per_lp} VMEM bytes/LP against the "
+        f"{budget}-byte per-tile budget; running the XLA while_loop "
+        f"driver instead (same pdhg_step, different matvec reduction "
+        f"order)",
+    )
+    return False
 
 
 def _pdhg_solve(
@@ -866,6 +929,159 @@ def _pdhg_cache_size() -> int:
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
     return _pdhg.compile_cache_size() + kernel_ops.pdhg_compile_cache_size()
+
+
+# The shared backends consume SharedLPBatch: ONE (m, n) constraint
+# matrix read-shared by every LP, per-LP c/b, and the revised-simplex
+# engine (core/revised.py) that keeps only the O(m^2) basis-inverse
+# record per LP.  Same solve/start/resume/init protocol as the tableau
+# backends — RevisedResumeState rides the generic tree_map plumbing of
+# the dispatch layer — so compaction rounds, sessions, and the
+# continuous serve loop work unchanged.
+
+
+def _xla_shared_solve(
+    batch: SharedLPBatch, options: SolveOptions, want_state: bool = False
+):
+    return _revised.solve_batched(
+        batch.a,
+        batch.b,
+        batch.c,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        unroll=options.unroll,
+        tol=options.tolerance,
+        basis0=batch.basis0,
+        want_state=want_state,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _xla_shared_start(batch: SharedLPBatch, options: SolveOptions):
+    return _xla_shared_solve(batch, options, want_state=True)
+
+
+def _xla_shared_resume(
+    batch: SharedLPBatch, state: "_revised.RevisedResumeState",
+    options: SolveOptions,
+):
+    # Unlike the tableau resume (which re-reads A from the carried
+    # tableau), the revised engine prices against the shared A every
+    # step — the dispatch layer always passes the batch back whole.
+    return _revised.resume_batched(
+        batch.a,
+        batch.b,
+        batch.c,
+        state,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        unroll=options.unroll,
+        tol=options.tolerance,
+        want_state=True,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _xla_shared_init(
+    batch: SharedLPBatch, options: SolveOptions
+) -> "_revised.RevisedResumeState":
+    return _revised.init_batched(
+        batch.a, batch.b, batch.c, basis0=batch.basis0
+    )
+
+
+def _pallas_shared_fallback(m: int, n: int, dtype) -> bool:
+    """Whether the pallas-shared kernel must fall back to xla-shared.
+
+    The revised kernel holds the shared A tile plus each LP's basis
+    inverse in VMEM; a shape whose single-LP footprint exceeds the
+    budget runs the XLA driver instead (bit-identical — both drive the
+    same pricing/ratio/update formulas in the same order).
+    """
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    if kernel_ops.revised_fits_vmem(m, n, dtype):
+        return False
+    per_lp = kernel_ops.revised_vmem_bytes_per_lp(m, n, dtype)
+    budget = int(kernel_ops.VMEM_BUDGET_BYTES * kernel_ops.VMEM_TILE_FRACTION)
+    dtype_str = str(jnp.dtype(dtype))
+    _warn_once(
+        ("pallas-shared-vmem", m, n, dtype_str),
+        f"pallas-shared backend: shared-A block plus per-LP basis state "
+        f"for shape (m={m}, n={n}, {dtype_str}) needs {per_lp} VMEM "
+        f"bytes/LP against the {budget}-byte per-tile budget; routing "
+        f"to the xla-shared backend (bit-identical results)",
+    )
+    return True
+
+
+def _pallas_shared_solve(
+    batch: SharedLPBatch, options: SolveOptions, want_state: bool = False
+):
+    if _pallas_shared_fallback(batch.m, batch.n, batch.a.dtype):
+        return _xla_shared_solve(batch, options, want_state)
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops.revised_solve(
+        batch.a,
+        batch.b,
+        batch.c,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        tol=options.tolerance,
+        basis0=batch.basis0,
+        want_state=want_state,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _pallas_shared_start(batch: SharedLPBatch, options: SolveOptions):
+    return _pallas_shared_solve(batch, options, want_state=True)
+
+
+def _pallas_shared_resume(
+    batch: SharedLPBatch, state: "_revised.RevisedResumeState",
+    options: SolveOptions,
+):
+    if _pallas_shared_fallback(batch.m, batch.n, batch.a.dtype):
+        return _xla_shared_resume(batch, state, options)
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    return kernel_ops.revised_resume(
+        batch.a,
+        batch.b,
+        batch.c,
+        state,
+        rule=options.rule,
+        max_iters=options.max_iters,
+        seed=options.seed,
+        tol=options.tolerance,
+        want_state=True,
+        dynamic_cap=options.dynamic_caps,
+    )
+
+
+def _pallas_shared_init(
+    batch: SharedLPBatch, options: SolveOptions
+) -> "_revised.RevisedResumeState":
+    # Iteration-0 state is pure setup (no pivots): built by the XLA
+    # driver, continued by whichever driver the shape routes to — the
+    # same split the tableau pallas backend uses.
+    return _xla_shared_init(batch, options)
+
+
+def _pallas_shared_cache_size() -> int:
+    from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
+
+    # Include the XLA driver's cache: the VMEM fallback and the init
+    # hook both compile through it (see _pallas_cache_size).
+    return (
+        kernel_ops.revised_compile_cache_size()
+        + _revised.compile_cache_size()
+    )
 
 
 def _reference_solve(batch: LPBatch, options: SolveOptions) -> LPSolution:
@@ -939,6 +1155,31 @@ register_backend(
         init_canonical=_pdhg_init,
         cache_size=_pdhg_cache_size,
         auto_cap=_pdhg.auto_cap_pdhg,
+    )
+)
+# The shared pair consumes SharedLPBatch (one A, batched c/b) through
+# the revised-simplex engine; plain LPBatch traffic never routes here
+# (the dispatch layer raises instead of silently replicating A).
+register_backend(
+    Backend(
+        "xla-shared",
+        _xla_shared_solve,
+        _xla_hyperbox,
+        start_canonical=_xla_shared_start,
+        resume_canonical=_xla_shared_resume,
+        init_canonical=_xla_shared_init,
+        cache_size=_revised.compile_cache_size,
+    )
+)
+register_backend(
+    Backend(
+        "pallas-shared",
+        _pallas_shared_solve,
+        _pallas_hyperbox,
+        start_canonical=_pallas_shared_start,
+        resume_canonical=_pallas_shared_resume,
+        init_canonical=_pallas_shared_init,
+        cache_size=_pallas_shared_cache_size,
     )
 )
 # The float64 oracle neither tracks mid-solve state nor compiles anything:

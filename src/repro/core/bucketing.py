@@ -23,8 +23,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
+import numpy as np
 
-from .lp import LPSolution
+from .lp import LPSolution, SharedLPBatch
 from .problem import LPProblem, stack_problems
 
 ShapeGrid = Sequence[Tuple[int, int]]
@@ -94,6 +96,110 @@ def bucket_problems(
         )
         for key, (padded, idx, shapes) in groups.items()
     ]
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedBucket:
+    """One (m, n, dtype, A) class of shared batches, concatenated.
+
+    The shared-structure counterpart of :class:`Bucket`: the merged
+    batch still stores ONE ``A`` — only the per-LP ``b``/``c`` rows are
+    concatenated — so bucketing never reintroduces the O(B·m·n)
+    replication the ``SharedLPBatch`` exists to avoid.
+    """
+
+    key: Tuple
+    batch: SharedLPBatch  # b/c concatenated over the group, one shared A
+    indices: Tuple[int, ...]  # positions in the input list
+    sizes: Tuple[int, ...]  # batch rows each input contributed
+
+
+def bucket_shared_batches(
+    batches: Sequence[SharedLPBatch],
+) -> List[SharedBucket]:
+    """Group ``SharedLPBatch``es by (m, n, dtype) and identical ``A``.
+
+    Batches of one shape class whose constraint matrices compare equal
+    (same-object ``A`` short-circuits; otherwise one host comparison)
+    merge into a single megabatch per ``A`` — e.g. successive direction
+    waves over one polytope.  Batches that merely share the shape but
+    carry a DIFFERENT ``A`` stay in separate buckets: merging them would
+    force densification, which is exactly the memory cost the shared
+    container avoids.  Warm-start bases concatenate only when every
+    member of a bucket carries one (same rule as ``stack_problems``).
+    """
+    shape_groups: Dict[Tuple, List[Tuple[int, SharedLPBatch]]] = {}
+    for i, sb in enumerate(batches):
+        if not isinstance(sb, SharedLPBatch):
+            raise TypeError(
+                f"batches[{i}] is {type(sb).__name__}, expected SharedLPBatch"
+            )
+        key = (sb.m, sb.n, str(sb.a.dtype))
+        shape_groups.setdefault(key, []).append((i, sb))
+
+    out: List[SharedBucket] = []
+    for key, members in shape_groups.items():
+        # Partition the shape class by actual A: identity first, one
+        # host compare for distinct-but-equal arrays.
+        a_groups: List[Tuple[SharedLPBatch, List[Tuple[int, SharedLPBatch]]]] = []
+        for i, sb in members:
+            for rep, grp in a_groups:
+                if sb.a is rep.a or np.array_equal(
+                    np.asarray(sb.a), np.asarray(rep.a)
+                ):
+                    grp.append((i, sb))
+                    break
+            else:
+                a_groups.append((sb, [(i, sb)]))
+        for sub, (rep, grp) in enumerate(a_groups):
+            parts = [sb for _, sb in grp]
+            basis0 = None
+            if all(p.basis0 is not None for p in parts):
+                basis0 = jnp.concatenate([p.basis0 for p in parts], axis=0)
+            out.append(
+                SharedBucket(
+                    key=(*key, sub),
+                    batch=SharedLPBatch(
+                        rep.a,
+                        jnp.concatenate([p.b for p in parts], axis=0),
+                        jnp.concatenate([p.c for p in parts], axis=0),
+                        basis0=basis0,
+                    ),
+                    indices=tuple(i for i, _ in grp),
+                    sizes=tuple(p.batch for p in parts),
+                )
+            )
+    return out
+
+
+def scatter_shared_solutions(
+    buckets: Sequence[SharedBucket],
+    bucket_solutions: Sequence[LPSolution],
+    total: int,
+) -> List[LPSolution]:
+    """Un-bucket per-bucket solutions back to input order.
+
+    Returns one ``LPSolution`` per input ``SharedLPBatch``, sliced back
+    to that batch's rows (shared buckets never pad variables, so no
+    primal trimming is needed — only the batch-axis split).
+    """
+    out: List[Optional[LPSolution]] = [None] * total
+    for bucket, sol in zip(buckets, bucket_solutions):
+        row = 0
+        for idx, size in zip(bucket.indices, bucket.sizes):
+            sl = slice(row, row + size)
+            out[idx] = LPSolution(
+                objective=sol.objective[sl],
+                x=sol.x[sl],
+                status=sol.status[sl],
+                iterations=sol.iterations[sl],
+                basis=None if sol.basis is None else sol.basis[sl],
+            )
+            row += size
+    missing = [i for i, s in enumerate(out) if s is None]
+    if missing:
+        raise RuntimeError(f"scatter left unsolved batches at indices {missing}")
+    return out  # type: ignore[return-value]
 
 
 def scatter_solutions(

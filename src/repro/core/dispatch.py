@@ -71,10 +71,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import pdhg as _pdhg
-from .backends import Backend, SolveOptions, SolveStats, get_backend, route_shape
+from . import revised as _revised
+from .backends import (
+    SHARED_BACKENDS,
+    Backend,
+    SolveOptions,
+    SolveStats,
+    get_backend,
+    route_shape,
+)
 from .bucketing import next_pow2
 from .engine import LPC
-from .lp import ITER_LIMIT, LPBatch, LPSolution, ResumeState, auto_cap
+from .lp import (
+    ITER_LIMIT,
+    LPBatch,
+    LPSolution,
+    ResumeState,
+    SharedLPBatch,
+    auto_cap,
+)
 from .tableau import DEFAULT_LAYOUT, TableauSpec
 
 
@@ -154,7 +169,18 @@ def _stage(arr: jnp.ndarray, mesh, axes) -> jnp.ndarray:
     return jax.device_put(arr, sh)
 
 
-def _stage_batch(batch: LPBatch, lo: int, hi: int, mesh, axes) -> LPBatch:
+def _stage_batch(batch, lo: int, hi: int, mesh, axes):
+    if isinstance(batch, SharedLPBatch):
+        # The shared A has no batch dimension — staged whole (replicated,
+        # not sharded) while the per-LP c/b rows slice and shard as usual.
+        return SharedLPBatch(
+            jax.device_put(batch.a),
+            _stage(batch.b[lo:hi], mesh, axes),
+            _stage(batch.c[lo:hi], mesh, axes),
+            None
+            if batch.basis0 is None
+            else _stage(batch.basis0[lo:hi], mesh, axes),
+        )
     return LPBatch(
         _stage(batch.a[lo:hi], mesh, axes),
         _stage(batch.b[lo:hi], mesh, axes),
@@ -169,7 +195,9 @@ def _stage_state(state, lo: int, hi: int, mesh, axes):
     )
 
 
-def _gather_batch(batch: LPBatch, idx: jnp.ndarray) -> LPBatch:
+def _gather_batch(batch, idx: jnp.ndarray):
+    if isinstance(batch, SharedLPBatch):
+        return batch.take(idx)  # A is row-invariant: gather only c/b/basis0
     return LPBatch(
         batch.a[idx],
         batch.b[idx],
@@ -221,13 +249,20 @@ def _pad_rows(x: jnp.ndarray, pad: int) -> jnp.ndarray:
     return jnp.pad(x, widths, mode="edge")
 
 
-def _pad_batch_to(batch: LPBatch, size: int) -> Tuple[LPBatch, int]:
+def _pad_batch_to(batch, size: int) -> Tuple[object, int]:
     """Edge-pad the batch dimension up to ``size`` (replica rows, trimmed
     off every output)."""
     bsz = batch.batch
     if size <= bsz:
         return batch, bsz
     pad = size - bsz
+    if isinstance(batch, SharedLPBatch):
+        return SharedLPBatch(
+            batch.a,  # no batch dimension to pad
+            _pad_rows(batch.b, pad),
+            _pad_rows(batch.c, pad),
+            None if batch.basis0 is None else _pad_rows(batch.basis0, pad),
+        ), bsz
     return LPBatch(
         _pad_rows(batch.a, pad),
         _pad_rows(batch.b, pad),
@@ -315,7 +350,7 @@ def _round_plan(
 
 
 def resolve_backend(
-    m: int, n: int, dtype, options: SolveOptions
+    m: int, n: int, dtype, options: SolveOptions, shared: bool = False
 ) -> SolveOptions:
     """Resolve ``backend="auto"`` to a concrete backend for one shape.
 
@@ -328,8 +363,27 @@ def resolve_backend(
     to ``pdhg`` also resets ``rule``/``layout`` to their defaults:
     those knobs configure the simplex leg and are rejected by validation
     on the first-order side.
+
+    ``shared=True`` resolves for a :class:`~repro.core.lp.SharedLPBatch`:
+    ``"auto"`` routes through the shared leg of the table and the
+    tableau simplex names promote to their shared counterparts
+    (``"xla"`` -> ``"xla-shared"``, ``"pallas"`` -> ``"pallas-shared"``)
+    — the caller asked for a simplex driver and the revised engine IS
+    the simplex driver for this container.  ``pdhg``/``reference``
+    pass through (the caller densifies for them).
     """
-    if options.backend != "auto":
+    name = options.backend
+    if shared:
+        if name == "auto":
+            name = route_shape(m, n, dtype, options, shared=True)
+        elif name == "xla":
+            name = "xla-shared"
+        elif name == "pallas":
+            name = "pallas-shared"
+        if name == options.backend:
+            return options
+        return options.replace(backend=name)
+    if name != "auto":
         return options
     resolved = route_shape(m, n, dtype, options)
     if resolved == "pdhg":
@@ -404,9 +458,12 @@ def solve_canonical(
 
     Parameters
     ----------
-    batch : LPBatch
+    batch : LPBatch or SharedLPBatch
         Canonical problems (``max c.x, Ax <= b, x >= 0``), optionally
-        carrying a warm-start basis in ``batch.basis0``.
+        carrying a warm-start basis in ``batch.basis0``.  A
+        :class:`~repro.core.lp.SharedLPBatch` (one A, batched c/b) runs
+        on the shared revised-simplex backends; an explicit non-shared
+        backend densifies it first.
     options : SolveOptions, optional
         Pipeline + backend configuration; defaults to ``SolveOptions()``.
         ``options.compaction`` selects the convergence-compaction mode
@@ -436,7 +493,21 @@ def solve_canonical(
     options = options or SolveOptions()
     if batch.batch == 0:
         return empty_solution(batch.n, batch.a.dtype)
-    options = resolve_backend(batch.m, batch.n, batch.a.dtype, options)
+    shared = isinstance(batch, SharedLPBatch)
+    options = resolve_backend(
+        batch.m, batch.n, batch.a.dtype, options, shared=shared
+    )
+    if shared and options.backend not in SHARED_BACKENDS:
+        # An explicit non-shared backend (pdhg, reference, a plug-in) on a
+        # shared batch: honor the request by densifying — correctness
+        # over the memory win, and the caller said so by name.
+        batch = batch.densify()
+    elif not shared and options.backend in SHARED_BACKENDS:
+        raise ValueError(
+            f"backend {options.backend!r} consumes SharedLPBatch (one A, "
+            "batched c/b); this batch carries a per-LP constraint matrix "
+            "— solve it on a tableau backend, or build a SharedLPBatch"
+        )
     backend = get_backend(options.backend)
     # unroll > 1 groups loop steps in blocks of `unroll`; a mid-round
     # split would re-align the grouping and change the total step count,
@@ -568,6 +639,10 @@ def dispatch_round(
         # top of this number.
         if backend.name == "pdhg":
             per_lp = _pdhg.state_bytes_per_lp(batch.m, batch.n, batch.a.dtype)
+        elif backend.name in SHARED_BACKENDS:
+            per_lp = _revised.state_bytes_per_lp(
+                batch.m, batch.n, batch.a.dtype
+            )
         else:
             spec = TableauSpec(batch.m, batch.n, options.layout)
             per_lp = spec.bytes_per_lp(batch.a.dtype)

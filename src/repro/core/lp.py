@@ -99,6 +99,74 @@ class LPBatch:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class SharedLPBatch:
+    """B LPs over ONE constraint matrix: max c_k.x s.t. A x <= b_k, x >= 0.
+
+    The shared-structure counterpart of :class:`LPBatch` for the paper's
+    headline workloads (support sweeps, reachability, scenario analysis),
+    where thousands of LPs differ only in objective ``c`` and/or RHS
+    ``b`` over the SAME ``A``.  Storing ``A`` once drops the stored
+    problem data from O(m n) to O(m + n + m n / B) bytes per LP, and the
+    revised-simplex engine (``core/revised.py``) keeps only O(m^2) basis
+    state per LP — every pricing/ratio-test contraction reads ``A`` from
+    the single broadcast buffer.
+
+    ``basis0`` carries an optional warm-start basis with the same column
+    convention as :class:`LPBatch` (1..n originals, n+1..n+m slacks).
+
+    The container is a registered pytree and supports the dispatch
+    layer's gather/pad/stage protocol via :meth:`take` (``a`` is shared,
+    so only the per-LP arrays are gathered).  :meth:`densify` broadcasts
+    back to a plain :class:`LPBatch` for backends that need per-LP
+    tableaus (the reference oracle, pdhg).
+    """
+
+    a: jnp.ndarray  # (m, n) — ONE constraint matrix for the whole batch
+    b: jnp.ndarray  # (B, m)
+    c: jnp.ndarray  # (B, n)
+    basis0: Optional[jnp.ndarray] = None  # (B, m) int32 warm-start basis
+
+    @property
+    def batch(self) -> int:
+        return self.b.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[1]
+
+    def astype(self, dtype) -> "SharedLPBatch":
+        return SharedLPBatch(
+            self.a.astype(dtype),
+            self.b.astype(dtype),
+            self.c.astype(dtype),
+            self.basis0,
+        )
+
+    def take(self, idx) -> "SharedLPBatch":
+        """Gather per-LP rows; the shared ``A`` rides along untouched."""
+        return SharedLPBatch(
+            self.a,
+            self.b[idx],
+            self.c[idx],
+            None if self.basis0 is None else self.basis0[idx],
+        )
+
+    def densify(self) -> LPBatch:
+        """Materialize the per-LP-``A`` view for shared-blind backends."""
+        return LPBatch(
+            jnp.broadcast_to(self.a, (self.batch, self.m, self.n)),
+            self.b,
+            self.c,
+            self.basis0,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class ResumeState:
     """Mid-solve simplex state, carried between dispatch rounds.
 
@@ -242,6 +310,55 @@ def random_lp_batch(
         )
     c = rng.uniform(0.1, 1.0, size=(batch, n_eff))
     return LPBatch(jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype))
+
+
+def random_shared_lp_batch(
+    rng: np.random.Generator,
+    batch: int,
+    m: int,
+    n: int,
+    feasible_start: bool = True,
+    dtype=np.float32,
+) -> SharedLPBatch:
+    """Random LPs over ONE shared ``A`` — the scenario-analysis workload.
+
+    The shared-structure twin of :func:`random_lp_batch`: the same two
+    problem classes, but the constraint matrix is drawn once and only
+    ``b``/``c`` vary per LP.  ``densify()`` recovers the per-LP-``A``
+    batch the dense backends expect, so the two paths are directly
+    comparable on identical problems.
+    """
+    if feasible_start:
+        a = rng.uniform(-1.0, 1.0, size=(m, n))
+        for j in range(min(m, n)):
+            a[j, j] = np.abs(a[j, j]) + 1.0
+        b = rng.uniform(1.0, 10.0, size=(batch, m))
+        c = rng.uniform(0.1, 1.0, size=(batch, n))
+        return SharedLPBatch(
+            jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype)
+        )
+    # Infeasible start: the box  lo <= x <= hi  of random_lp_batch, with the
+    # STRUCTURE [I; -I; W] shared and only the bound values per-LP.
+    lo = rng.uniform(0.5, 1.0, size=(batch, n))
+    hi = lo + rng.uniform(0.5, 2.0, size=(batch, n))
+    extra = m - 2 * n
+    if extra < 0:
+        raise ValueError(f"need m >= 2n for infeasible-start generator, got m={m} n={n}")
+    a = np.zeros((m, n))
+    b = np.zeros((batch, m))
+    eye = np.eye(n)
+    a[:n, :] = eye
+    b[:, :n] = hi
+    a[n : 2 * n, :] = -eye
+    b[:, n : 2 * n] = -lo
+    if extra > 0:
+        w = np.abs(rng.uniform(0.1, 1.0, size=(extra, n)))
+        a[2 * n :, :] = w
+        b[:, 2 * n :] = hi @ w.T + rng.uniform(0.1, 1.0, size=(batch, extra))
+    c = rng.uniform(0.1, 1.0, size=(batch, n))
+    return SharedLPBatch(
+        jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype)
+    )
 
 
 def random_hyperbox_batch(

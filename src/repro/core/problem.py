@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .lp import INFEASIBLE, LPBatch, LPSolution, OPTIMAL
+from .lp import INFEASIBLE, LPBatch, LPSolution, OPTIMAL, SharedLPBatch
 
 
 def _static(default):
@@ -414,6 +414,56 @@ def canonicalize(problem: LPProblem) -> Canonicalized:
         sign=sign,
         split=p.split,
     )
+
+
+def canonicalize_shared(
+    problem: LPProblem, validate: bool = True
+) -> Canonicalized:
+    """Canonicalize a batch whose rows share ONE constraint system.
+
+    The shared-structure entry into the canonical pipeline: runs
+    :func:`canonicalize` and then collapses the batched constraint
+    matrix to a single stored copy
+    (:class:`~repro.core.lp.SharedLPBatch`), which the dispatch layer
+    routes to the revised-simplex backends (``xla-shared`` /
+    ``pallas-shared``) — O(m²) iteration state per LP instead of an
+    O(m·n) tableau.  :func:`uncanonicalize` works unchanged on the
+    result (it only reads the solution).
+
+    Note the input ``LPProblem`` already replicates ``A`` B times in
+    host/device memory — this helper removes the replication from the
+    SOLVE side only.  Callers that never had a per-LP ``A`` to begin
+    with should build the shared batch directly
+    (``Polytope.to_shared_batch``, ``repro.SharedLPBatch``) and skip the
+    broadcast entirely.
+
+    Parameters
+    ----------
+    problem : LPProblem
+        General-form batch whose per-LP constraint data (``a``, row
+        bounds, box) is identical across the batch.  Per-LP ``c`` is the
+        expected variation; per-LP ``lo`` shifts also canonicalize into
+        ``b``, which the shared form carries per-LP anyway.
+    validate : bool, default True
+        Host-side check that the canonical constraint rows really are
+        identical across the batch (one ``jnp.any`` sync).  With False
+        the first LP's matrix is trusted — the caller's assertion.
+
+    Raises
+    ------
+    ValueError
+        If ``validate`` finds rows with differing canonical ``A``.
+    """
+    canon = canonicalize(problem)
+    batch = canon.batch
+    a0 = batch.a[0]
+    if validate and bool(jnp.any(batch.a != a0[None])):
+        raise ValueError(
+            "canonicalize_shared: canonical constraint matrices differ "
+            "across the batch; solve as a plain LPBatch instead"
+        )
+    shared = SharedLPBatch(a0, batch.b, batch.c, basis0=batch.basis0)
+    return dataclasses.replace(canon, batch=shared)
 
 
 def uncanonicalize(canon: Canonicalized, sol: LPSolution) -> LPSolution:

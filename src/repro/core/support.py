@@ -24,9 +24,10 @@ import numpy as np
 
 from . import dispatch as _dispatch
 from . import hyperbox as _hyperbox
+from . import revised as _revised
 from . import session as _session
-from .backends import SolveOptions, SolveStats
-from .lp import LPBatch, LPSolution, OPTIMAL
+from .backends import SHARED_BACKENDS, SolveOptions, SolveStats
+from .lp import LPBatch, LPSolution, OPTIMAL, SharedLPBatch
 from .problem import LPProblem, canonicalize, uncanonicalize
 
 
@@ -99,6 +100,32 @@ class Polytope:
         standard-form API; equivalent to canonicalizing ``to_problem``)."""
         return canonicalize(self.to_problem(directions)).batch
 
+    def to_shared_batch(self, directions, basis0=None) -> SharedLPBatch:
+        """Canonical SHARED batch: one stored ``A`` for every direction.
+
+        The zero-replication twin of :meth:`to_lp_batch`.  The support
+        LP's canonical form (free ``x`` split as ``x+ - x-``) is
+        ``max [l, -l].x'`` s.t. ``[A | -A] x' <= b, x' >= 0`` — the
+        constraint system is direction-independent, so the whole batch
+        shares one (m, 2n) matrix.  Where :meth:`to_lp_batch` broadcasts
+        it K times into an ``LPBatch`` (and :meth:`to_problem` K times
+        before even canonicalizing), this builds the
+        :class:`~repro.core.lp.SharedLPBatch` directly: ``A`` is stored
+        ONCE, and the shared revised-simplex backends keep O(m²) basis
+        state per direction instead of an O(m·n) tableau.  Densifying
+        the result reproduces ``to_lp_batch``'s arrays exactly, so
+        statuses/objectives agree with the dense path to tolerance.
+        """
+        dirs = jnp.asarray(np.asarray(directions))
+        dtype = dirs.dtype
+        a = jnp.asarray(np.asarray(self.a)).astype(dtype)
+        b = jnp.asarray(np.asarray(self.b)).astype(dtype)
+        k = dirs.shape[0]
+        a2 = jnp.concatenate([a, -a], axis=1)  # (m, 2n): x = x+ - x-
+        c2 = jnp.concatenate([dirs, -dirs], axis=1)  # (K, 2n)
+        b2 = jnp.broadcast_to(b, (k, b.shape[0]))
+        return SharedLPBatch(a2, b2, c2, basis0=basis0)
+
     def support_solutions(
         self,
         directions,
@@ -126,6 +153,7 @@ class Polytope:
         options: Optional[SolveOptions] = None,
         warm_start: bool = True,
         stats: Optional[SolveStats] = None,
+        shared: Optional[bool] = None,
     ) -> jnp.ndarray:
         """Support values over a sequence of direction batches, warm-started.
 
@@ -151,6 +179,17 @@ class Polytope:
             Accumulates per-step iteration counts — the counter that
             shows the warm-start win (fewer ``simplex_iterations`` than a
             cold sweep, identical support values).
+        shared : bool, optional
+            Route the sweep through the shared-structure revised-simplex
+            engine: the canonical ``[A | -A]`` system is built ONCE
+            (:meth:`to_shared_batch`) and a compiled ``lax.scan``
+            (``core/revised.py:sweep_batched``) carries the basis across
+            steps with O(m²) state per direction — no per-step tableau
+            rebuild, no K-fold replication of ``A``.  Default ``None``
+            auto-enables it when ``options`` names a shared backend
+            (``xla-shared`` / ``pallas-shared``); pass ``True``/``False``
+            to force either path.  Support values agree with the tableau
+            path to solver tolerance, statuses exactly.
 
         Returns
         -------
@@ -172,6 +211,10 @@ class Polytope:
         """
         direction_stack = np.asarray(direction_stack)
         opts = options or SolveOptions()
+        if shared is None:
+            shared = opts.backend in SHARED_BACKENDS
+        if shared:
+            return self._shared_sweep(direction_stack, opts, warm_start, stats)
         if warm_start and _session.sweep_supported(opts):
             template = self.to_problem(direction_stack[0])
             return _session.sweep_problems(
@@ -189,6 +232,53 @@ class Polytope:
                 basis = jnp.where((sol.status == OPTIMAL)[:, None], sol.basis, 0)
             outs.append(sol.objective)
         return jnp.stack(outs)
+
+    def _shared_sweep(
+        self,
+        direction_stack: np.ndarray,
+        opts: SolveOptions,
+        warm_start: bool,
+        stats: Optional[SolveStats],
+    ) -> jnp.ndarray:
+        """Sweep through the shared revised-simplex scan (one stored A).
+
+        One compiled executable runs all S steps; each step warm-starts
+        from the previous direction's optimal basis (exact: ``b`` never
+        changes, so that basis stays primal feasible) where one exists.
+        Support values come back in user coordinates via the same
+        ``x = x+ - x-`` / re-evaluated ``l.x`` mapping ``uncanonicalize``
+        applies on the tableau path.
+        """
+        sb = self.to_shared_batch(direction_stack[0])
+        dirs = jnp.asarray(direction_stack).astype(sb.a.dtype)  # (S, K, n)
+        c_stack = jnp.concatenate([dirs, -dirs], axis=2)  # (S, K, 2n)
+        before = _revised.compile_cache_size()
+        obj, x, status, iters = _revised.sweep_batched(
+            sb.a, sb.b, c_stack,
+            rule=opts.rule, max_iters=opts.max_iters, seed=opts.seed,
+            tol=opts.tolerance, warm=warm_start,
+        )
+        n = self.dim
+        ok = status == OPTIMAL
+        xu = x[..., :n] - x[..., n : 2 * n]
+        support = jnp.where(ok, jnp.sum(dirs * xu, axis=-1), -jnp.inf)
+        if stats is not None:
+            stats.record_cache(before, _revised.compile_cache_size())
+            ok_np = np.asarray(ok)
+            for s in range(dirs.shape[0]):
+                stats.record(
+                    LPSolution(
+                        objective=obj[s], x=x[s],
+                        status=status[s], iterations=iters[s],
+                    )
+                )
+                if warm_start and s > 0:
+                    stats.warm_started += int(ok_np[s - 1].sum())
+            stats.record_tableau(
+                sb.batch
+                * _revised.state_bytes_per_lp(sb.m, sb.n, sb.a.dtype)
+            )
+        return support
 
 
 def box_to_polytope(box: Box) -> Polytope:

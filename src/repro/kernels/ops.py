@@ -30,13 +30,14 @@ import os
 import jax
 import jax.numpy as jnp
 
-from ..core import engine, pdhg
+from ..core import engine, pdhg, revised
 from ..core.bucketing import next_pow2
 from ..core.lp import LPSolution, ResumeState, build_tableau
 from ..core.tableau import DEFAULT_LAYOUT, TableauSpec
 from ..core.simplex import resolve_cap
 from .hyperbox_pallas import hyperbox_pallas
 from .pdhg_pallas import pdhg_pallas
+from .revised_pallas import revised_pallas
 from .simplex_pallas import simplex_pallas
 
 
@@ -552,6 +553,265 @@ def pdhg_resume(
         tol=pdhg.resolve_tol(tol), restart=pdhg.resolve_restart(restart),
         tile_b=tile_b, static_cap=static_cap, want_state=want_state,
         interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared-A revised-simplex kernel wrappers — one A block per tile, O(m²)/LP
+# ---------------------------------------------------------------------------
+
+
+def _revised_pad_shapes(bsz: int, m: int, n: int, tile_b: int):
+    return _round_up(m, 8), _round_up(n, 128), _round_up(bsz, tile_b)
+
+
+def revised_shared_vmem_bytes(m: int, n: int, dtype=jnp.float32) -> int:
+    """VMEM bytes the ONE shared ``A`` block claims per tile (not per LP).
+
+    Counted twice: the BlockSpec input plus Mosaic's working copy.  Paid
+    once per tile regardless of ``tile_b`` — the amortization that lets
+    :func:`revised_auto_tile_b` pack far more LPs per tile than the
+    tableau kernel at the same shape.
+    """
+    mp, np_pad, _ = _revised_pad_shapes(1, m, n, 1)
+    return 2 * mp * np_pad * jnp.dtype(dtype).itemsize
+
+
+def revised_vmem_bytes_per_lp(m: int, n: int, dtype=jnp.float32) -> int:
+    """Estimated VMEM bytes ONE LP occupies inside the revised kernel.
+
+    O(m²), not O(m·n): three copies of the (m, m) basis inverse (input
+    block, ``while_loop`` carry, output block), three of ``xb``, the
+    ``b``/``c``/``x`` rows, one re-priced objective row of q = 1+n+m
+    lanes, and the int32 basis/status vectors.  The shared ``A`` block
+    is NOT included — see :func:`revised_shared_vmem_bytes`.
+    """
+    mp, np_pad, _ = _revised_pad_shapes(1, m, n, 1)
+    item = jnp.dtype(dtype).itemsize
+    qp = _round_up(1 + n + m, 128)
+    f32_bytes = (3 * mp * mp + 3 * mp + mp + 2 * np_pad + qp) * item
+    i32_bytes = 4 * (2 * mp + 4)  # basis in/out + phase/status/iters/step
+    return f32_bytes + i32_bytes
+
+
+def revised_fits_vmem(m: int, n: int, dtype=jnp.float32) -> bool:
+    """Whether the shared block plus a single LP fits the kernel budget.
+
+    The routing predicate ``route_shape(shared=True)`` and the
+    ``pallas-shared`` backend consult: a shape that cannot fit the
+    shared ``A`` block and even one LP's basis state per tile runs the
+    XLA revised driver instead (bit-identical results).
+    """
+    per_tile = revised_shared_vmem_bytes(m, n, dtype)
+    per_lp = revised_vmem_bytes_per_lp(m, n, dtype)
+    return per_tile + per_lp <= int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+
+
+def revised_auto_tile_b(bsz: int, m: int, n: int, dtype=jnp.float32) -> int:
+    """VMEM-budget-aware batch tile for the revised kernel (pow-2, <= 128).
+
+    The shared ``A`` block is charged once off the top; the remainder is
+    packed with O(m²) per-LP state.  Same pow-2/128-cap/batch-clamp
+    conventions as :func:`auto_tile_b`.
+    """
+    budget = int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
+    budget -= revised_shared_vmem_bytes(m, n, dtype)
+    per_lp = revised_vmem_bytes_per_lp(m, n, dtype)
+    fit = max(1, budget // max(per_lp, 1))
+    tile = 1 << (fit.bit_length() - 1)  # largest power of two <= fit
+    return max(1, min(tile, 128, next_pow2(bsz)))
+
+
+def _revised_launch(a, b, c, state, cap, *, rule, seed, tol, tile_b,
+                    static_cap, want_state, interpret):
+    """Pad, run the revised kernel, strip padding off every output.
+
+    The kernel slices back to the logical (m, n) internally (basis IDs
+    encode the logical column layout), so padding here only has to be
+    inert at the batch level: padded batch rows are empty phase-II LPs
+    (b = 0, c = 0, binv = 0, basis = 0) whose first pricing pass finds
+    every reduced cost at zero and stops OPTIMAL with objective 0.
+    """
+    bsz, m = b.shape
+    n = a.shape[1]
+    dtype = a.dtype
+    feas = engine.phase1_feasibility_tol(b).astype(dtype)
+    mp, np_pad, bp = _revised_pad_shapes(bsz, m, n, tile_b)
+
+    a_p = jnp.zeros((mp, np_pad), dtype).at[:m, :n].set(a)
+    b_p = jnp.zeros((bp, mp), dtype).at[:bsz, :m].set(b)
+    c_p = jnp.zeros((bp, np_pad), dtype).at[:bsz, :n].set(c)
+    binv_p = jnp.zeros((bp, mp, mp), dtype).at[:bsz, :m, :m].set(state.binv)
+    basis_p = jnp.zeros((bp, mp), jnp.int32).at[:bsz, :m].set(state.basis)
+    xb_p = jnp.zeros((bp, mp), dtype).at[:bsz, :m].set(state.xb)
+    phase_p = jnp.full((bp,), 2, jnp.int32).at[:bsz].set(state.phase)
+    feas_p = jnp.ones((bp,), dtype).at[:bsz].set(feas)
+
+    outs = revised_pallas(
+        a_p, b_p, c_p, binv_p, basis_p, xb_p, phase_p, feas_p, cap,
+        m=m, n=n, rule=rule, seed=seed, tile_b=tile_b, tol=tol,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+    x, status, iters, basis_out, xb_out = outs[:5]
+    status, basis_l, xb_l = status[:bsz], basis_out[:bsz, :m], xb_out[:bsz, :m]
+    # Objective OUTSIDE the kernel from the exact terminal (basis, xb):
+    # a multi-term reduction lowered inside the kernel may reassociate
+    # differently from the XLA driver's — this way both backends return
+    # the same floats (see revised_pallas.py).
+    cb2 = revised._basic_costs(
+        basis_l, jnp.full((bsz,), 2, jnp.int32), c, m, n
+    )
+    objective = jnp.where(
+        status == 1,
+        jnp.sum(cb2 * xb_l, axis=-1),
+        jnp.asarray(-jnp.inf, dtype),
+    )
+    sol = LPSolution(
+        objective=objective,
+        x=x[:bsz, :n],
+        status=status,
+        iterations=iters[:bsz],
+        basis=basis_l,
+    )
+    if not want_state:
+        return sol
+    binv_out, phase_out = outs[5:]
+    out_state = revised.RevisedResumeState(
+        binv=binv_out[:bsz, :m, :m],
+        basis=basis_l,
+        xb=xb_l,
+        phase=phase_out[:bsz],
+    )
+    return sol, out_state
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rule", "seed", "tol", "tile_b", "static_cap", "want_state",
+        "interpret",
+    ),
+)
+def _revised_solve_jit(
+    a, b, c, basis0, cap, *,
+    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+):
+    state = revised.init_traced(a, b, basis0)
+    return _revised_launch(
+        a, b, c, state, cap,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rule", "seed", "tol", "tile_b", "static_cap", "want_state",
+        "interpret",
+    ),
+)
+def _revised_resume_jit(
+    a, b, c, state, cap, *,
+    rule, seed, tol, tile_b, static_cap, want_state, interpret,
+):
+    return _revised_launch(
+        a, b, c, state, cap,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+def revised_compile_cache_size() -> int:
+    """Revised-kernel executables compiled so far (cold + resume paths)."""
+    return (
+        int(_revised_solve_jit._cache_size())
+        + int(_revised_resume_jit._cache_size())
+    )
+
+
+def revised_solve(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    rule: str = engine.LPC,
+    max_iters: int = 0,
+    seed: int = 0,
+    tol: float = 0.0,
+    tile_b: int | None = None,
+    interpret: bool | None = None,
+    basis0: jnp.ndarray | None = None,
+    want_state: bool = False,
+    dynamic_cap: bool = True,
+):
+    """Solve a shared-A batch with the VMEM-resident revised kernel.
+
+    a: (m, n) stored ONCE, b: (B, m), c: (B, n); returns LPSolution like
+    ``core/revised.py:solve_batched`` (the XLA driver) — same knobs,
+    honored identically, since both drive ``revised.iteration_step``.
+    ``basis0`` warm-starts via the same ``init_traced`` overlay the XLA
+    path uses (factorization happens host-of-kernel; warm rows enter the
+    kernel already in phase II).  ``tile_b=None`` sizes the tile from
+    the VMEM budget net of the shared ``A`` block
+    (:func:`revised_auto_tile_b`); ``max_iters`` is a traced kernel
+    scalar under ``dynamic_cap`` so every cap over one shape shares one
+    executable.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape
+    bsz = b.shape[0]
+    if tile_b is None:
+        tile_b = revised_auto_tile_b(bsz, m, n, a.dtype)
+    cap = resolve_cap(max_iters, m, n)
+    if tol <= 0.0:
+        tol = engine.default_tolerance(a.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _revised_solve_jit(
+        a, b, c, basis0, cap_arr,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
+    )
+
+
+def revised_resume(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    state: revised.RevisedResumeState,
+    rule: str = engine.LPC,
+    max_iters: int = 0,
+    seed: int = 0,
+    tol: float = 0.0,
+    tile_b: int | None = None,
+    interpret: bool | None = None,
+    want_state: bool = True,
+    dynamic_cap: bool = True,
+):
+    """Continue a shared-A batch from a carried ``RevisedResumeState``.
+
+    Like the pdhg resume (and unlike the tableau one), ``a`` must be
+    passed back in — the state deliberately does not replicate it.  The
+    state round-trips through the same padding the cold launch uses, so
+    capped rounds summing to ``K`` replay one uninterrupted cap-``K``
+    kernel run bit-for-bit.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = a.shape
+    bsz = b.shape[0]
+    if tile_b is None:
+        tile_b = revised_auto_tile_b(bsz, m, n, a.dtype)
+    cap = resolve_cap(max_iters, m, n)
+    if tol <= 0.0:
+        tol = engine.default_tolerance(a.dtype)
+    static_cap = None if dynamic_cap else int(cap)
+    cap_arr = jnp.full((1,), cap if dynamic_cap else 0, jnp.int32)
+    return _revised_resume_jit(
+        a, b, c, state, cap_arr,
+        rule=rule, seed=seed, tol=tol, tile_b=tile_b,
+        static_cap=static_cap, want_state=want_state, interpret=interpret,
     )
 
 

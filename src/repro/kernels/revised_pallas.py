@@ -1,0 +1,249 @@
+"""Pallas TPU kernel: shared-A revised simplex, basis state in VMEM.
+
+The shared-structure twin of ``simplex_pallas.py``.  A ``SharedLPBatch``
+carries ONE constraint matrix for thousands of ``c``/``b`` variants, so
+the tableau kernel's per-LP O(m·(n+m)) VMEM block collapses to
+
+* one (m, n) block of ``A`` mapped into VMEM ONCE per tile — its
+  BlockSpec index map is ``lambda i: (0, 0)``, so every grid step reads
+  the SAME block and Mosaic keeps it resident across tiles, and
+* per-LP basis state only: ``binv`` (m, m), ``xb`` (m,), ``basis`` (m,)
+  int32, ``phase`` — O(m²) per LP.
+
+That is the whole point of the shared path (ISSUE 8): the auto-tiler
+(``kernels/ops.py:revised_auto_tile_b``) budgets the shared block once
+and then packs LPs by their O(m²) state, so a tile holds far more LPs
+than the tableau kernel could at the same shape.
+
+The iteration math is NOT implemented here: the kernel body drives
+``core/revised.py:iteration_step`` / ``finalize`` — the exact functions
+the XLA lockstep driver runs — with ``gather=False`` so every selection
+lowers to broadcasted-iota one-hot form (same floats: one nonzero term
+per reduction).  ``row0 = program_id * tile_b`` keys the RPC noise so
+the tiled kernel draws bitwise the same noise as the untiled XLA path.
+
+Compile-once dispatch as everywhere else: the iteration cap is a (1,)
+scalar INPUT shared by every tile, ``static_cap`` restores the
+cap-specialized lowering, and ``want_state`` adds (binv, xb, phase)
+outputs so a capped round resumes exactly
+(``core/revised.py:RevisedResumeState``).
+
+Padding contract (applied by ``kernels/ops.py:_revised_launch``): m to
+the 8-sublane boundary, n to the 128-lane boundary, batch to a tile
+multiple.  The kernel slices every block back to the LOGICAL (m, n)
+before doing math — basis IDs encode the logical column layout
+(1..n vars, n+1..n+m slacks, >n+m artificials), so padded shapes would
+silently renumber them.  Padded batch rows ride in as empty phase-II
+LPs (b = 0, c = 0, binv = 0, basis = 0) and go OPTIMAL on their first
+pricing pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import engine, revised
+from ..core.lp import RUNNING
+
+_BIG = engine.BIG
+
+
+def _kernel(
+    a_ref,  # (Mp, Np) f32 VMEM — the ONE shared constraint matrix
+    b_ref,  # (TB, Mp) f32 VMEM
+    c_ref,  # (TB, Np) f32 VMEM
+    binv_ref,  # (TB, Mp, Mp) f32 VMEM — basis inverse (signed system)
+    basis_ref,  # (TB, Mp) i32 VMEM
+    xb_ref,  # (TB, Mp) f32 VMEM
+    phase_ref,  # (TB,) i32 VMEM
+    feas_ref,  # (TB,) f32 VMEM — per-LP phase-I feasibility threshold
+    cap_ref,  # (1,) i32 — iteration cap (scalar input: compile-once caps)
+    x_ref,  # out (TB, Np) f32
+    status_ref,  # out (TB,) i32
+    iters_ref,  # out (TB,) i32
+    basis_out_ref,  # out (TB, Mp) i32 — final basis (warm-start reuse)
+    xb_out_ref,  # out (TB, Mp) f32 — terminal basic values (objective + resume)
+    *state_out_refs,  # want_state: out (TB, Mp, Mp) f32 binv, (TB,) i32 phase
+    m: int,
+    n: int,
+    rule: str,
+    seed: int,
+    tol: float,
+    static_cap: Optional[int],
+    want_state: bool,
+):
+    tb = b_ref.shape[0]
+
+    # Slice every block back to logical (m, n): basis IDs encode the
+    # logical column layout, so the math must not see padded lanes.
+    a = a_ref[...][:m, :n]
+    b = b_ref[...][:, :m]
+    c = c_ref[...][:, :n]
+    binv = binv_ref[...][:, :m, :m]
+    basis = basis_ref[...][:, :m]
+    xb = xb_ref[...][:, :m]
+    phase = phase_ref[...]
+    feas_tol = feas_ref[...]
+    dtype = a.dtype
+    limit = static_cap if static_cap is not None else cap_ref[0]
+
+    sgn = revised._signs(b, dtype)
+    elig = engine.eligible_mask(1 + n + m, m, n)
+    # Global row base of this tile: keys the RPC noise so the draw is
+    # independent of the tiling (and bitwise-equal to the XLA driver's).
+    row0 = pl.program_id(0) * tb
+
+    def body(s):
+        return revised.iteration_step(
+            a, b, c, sgn, feas_tol, elig, s,
+            rule=rule, tol=tol, seed=seed, row0=row0,
+            gather=False,  # Mosaic: one-hot reductions only
+        )
+
+    def cond(s):
+        return jnp.logical_and(s.step < limit, jnp.any(s.status == RUNNING))
+
+    init = revised._RState(
+        binv=binv,
+        basis=basis,
+        xb=xb,
+        phase=phase,
+        status=jnp.full((tb,), RUNNING, jnp.int32),
+        iters=jnp.zeros((tb,), jnp.int32),
+        step=jnp.int32(0),
+    )
+    final = jax.lax.while_loop(cond, body, init)
+
+    # The objective is NOT computed here: ``sum(c_B * x_B)`` is a real
+    # multi-term reduction, and a reduction lowered inside the kernel
+    # may reassociate differently from the XLA driver's — the wrapper
+    # (kernels/ops.py:_revised_launch) recomputes it outside the kernel
+    # from the exact (basis, xb) outputs instead, so the two backends
+    # return the same floats.  The x scatter below is order-safe (one
+    # nonzero term per reduction).
+    _, x, status = revised.finalize(final, c, m, n, gather=False, fill=-_BIG)
+
+    status_ref[...] = status
+    iters_ref[...] = final.iters
+    # Static-slice stores: .at[...].set on a value would materialize an
+    # index constant the Pallas tracer refuses to capture.
+    np_pad = x_ref.shape[1]
+    if np_pad > n:
+        x_ref[:, n:] = jnp.zeros((tb, np_pad - n), dtype)
+    x_ref[:, :n] = x
+    mp = basis_out_ref.shape[1]
+    if mp > m:
+        basis_out_ref[:, m:] = jnp.zeros((tb, mp - m), jnp.int32)
+        xb_out_ref[:, m:] = jnp.zeros((tb, mp - m), dtype)
+    basis_out_ref[:, :m] = final.basis
+    xb_out_ref[:, :m] = final.xb
+    if want_state:
+        binv_out_ref, phase_out_ref = state_out_refs
+        if mp > m:
+            binv_out_ref[:, m:, :] = jnp.zeros((tb, mp - m, mp), dtype)
+            binv_out_ref[:, :m, m:] = jnp.zeros((tb, m, mp - m), dtype)
+        binv_out_ref[:, :m, :m] = final.binv
+        phase_out_ref[...] = final.phase
+
+
+def revised_pallas(
+    a: jnp.ndarray,  # (Mp, Np) padded shared constraint matrix
+    b: jnp.ndarray,  # (B, Mp) padded RHS
+    c: jnp.ndarray,  # (B, Np) padded costs
+    binv: jnp.ndarray,  # (B, Mp, Mp) padded basis inverse
+    basis: jnp.ndarray,  # (B, Mp) int32 padded
+    xb: jnp.ndarray,  # (B, Mp) padded basic solution
+    phase: jnp.ndarray,  # (B,) int32
+    feas_tol: jnp.ndarray,  # (B,) phase-I feasibility threshold
+    cap: jnp.ndarray,  # (1,) int32 iteration cap (traced scalar input)
+    *,
+    m: int,
+    n: int,
+    rule: str = engine.LPC,
+    seed: int = 0,
+    tile_b: int = 8,
+    tol: float = 1e-5,
+    static_cap: Optional[int] = None,
+    want_state: bool = False,
+    interpret: bool = False,
+):
+    """Launch the shared-A revised-simplex kernel over batch tiles.
+
+    ``a`` is NOT batched: its BlockSpec maps block (0, 0) for every grid
+    step, so one VMEM-resident copy serves all tiles.  ``m``/``n`` are
+    the LOGICAL shape (static); the arrays arrive lane/sublane-padded.
+    ``cap`` rides in as a (1,) scalar input shared by every tile;
+    ``static_cap`` (a trace-time int) overrides it for the
+    cap-specialized baseline.  The terminal ``basis``/``xb`` are always
+    written (the wrapper derives the objective from them, outside the
+    kernel); ``want_state`` adds (binv, phase) so a capped round can be
+    resumed exactly.  Tile clamping mirrors ``simplex_pallas``: a
+    ``tile_b`` larger than the batch is clamped down, a batch that is
+    not a tile multiple is a caller bug and raises.
+    """
+    bsz, mp = b.shape
+    np_pad = c.shape[1]
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b != 0:
+        raise ValueError(
+            f"batch {bsz} is not a multiple of tile_b {tile_b}; "
+            "pad the batch to a tile multiple (see kernels/ops.py)"
+        )
+    grid = (bsz // tile_b,)
+
+    kernel = functools.partial(
+        _kernel,
+        m=m,
+        n=n,
+        rule=rule,
+        seed=seed,
+        tol=tol,
+        static_cap=static_cap,
+        want_state=want_state,
+    )
+    out_specs = [
+        pl.BlockSpec((tile_b, np_pad), lambda i: (i, 0)),
+        pl.BlockSpec((tile_b,), lambda i: (i,)),
+        pl.BlockSpec((tile_b,), lambda i: (i,)),
+        pl.BlockSpec((tile_b, mp), lambda i: (i, 0)),
+        pl.BlockSpec((tile_b, mp), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, np_pad), a.dtype),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, mp), jnp.int32),
+        jax.ShapeDtypeStruct((bsz, mp), a.dtype),
+    ]
+    if want_state:
+        out_specs += [
+            pl.BlockSpec((tile_b, mp, mp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((bsz, mp, mp), a.dtype),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mp, np_pad), lambda i: (0, 0)),  # shared A
+            pl.BlockSpec((tile_b, mp), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, np_pad), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, mp, mp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, mp), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, mp), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((tile_b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a, b, c, binv, basis, xb, phase, feas_tol, cap)

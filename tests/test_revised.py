@@ -1,0 +1,343 @@
+"""Shared-structure batches: revised-simplex engine, backends, dispatch.
+
+The ISSUE 8 coverage: tiny-batch parity with the dense path (B = 1..7),
+the serve loop's 2-row size-class floor, the start/resume/init protocol
+(compaction rounds and mid-flight splices bit-identical to one-shot),
+oracle parity, warm starts, the shared support sweep, the Pallas kernel
+in interpret mode, shared bucketing, and the unified warn-once table.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends, lp, oracle, revised
+from repro.core.backends import SolveOptions, SolveStats
+from repro.core.bucketing import bucket_shared_batches, scatter_shared_solutions
+from repro.core.dispatch import _concat_states, solve_canonical
+from repro.core.lp import OPTIMAL, SharedLPBatch, random_shared_lp_batch
+from repro.core.session import SolveSession
+from repro.core.support import Polytope
+
+SHARED = ["xla-shared", "pallas-shared"]
+
+
+def _dense_reference(sb: SharedLPBatch, **kw):
+    d = sb.densify()
+    return solve_canonical(d, SolveOptions(backend="xla", **kw))
+
+
+def _assert_same_answers(sol, ref, rtol=1e-5):
+    assert np.array_equal(np.asarray(sol.status), np.asarray(ref.status))
+    ok = np.asarray(ref.status) == OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(sol.objective)[ok], np.asarray(ref.objective)[ok],
+        rtol=rtol, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# tiny batches + the 2-row dispatch floor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", SHARED)
+@pytest.mark.parametrize("bsz", list(range(1, 8)))
+def test_tiny_shared_batches_match_dense(backend, bsz):
+    """B = 1..7: the shared engine agrees with the dense tableau path."""
+    rng = np.random.default_rng(100 + bsz)
+    m = 6 if bsz % 2 == 0 else 10
+    sb = random_shared_lp_batch(rng, bsz, m, 5, feasible_start=(bsz % 2 == 0))
+    sol = solve_canonical(sb, SolveOptions(backend=backend))
+    _assert_same_answers(sol, _dense_reference(sb))
+
+
+@pytest.mark.parametrize("backend", SHARED)
+def test_shared_honors_two_row_size_floor(backend):
+    """The serve loop floors dispatch size classes at 2 rows so a lone LP
+    never hits XLA's batch-1 contraction codepath; a floored solo row
+    must be bit-identical to the same row inside a pair."""
+    rng = np.random.default_rng(7)
+    sb = random_shared_lp_batch(rng, 2, 5, 5, feasible_start=True)
+    opts = SolveOptions(backend=backend)
+    sess = SolveSession(opts)
+    solo = SharedLPBatch(sb.a, sb.b[:1], sb.c[:1])
+
+    state_pair = sess.init_state(sb, opts)
+    state_solo = sess.init_state(solo, opts)
+    sol_pair, _ = sess.resume_round(sb, state_pair, cap=200, options=opts)
+    sol_solo, _ = sess.resume_round(
+        solo, state_solo, cap=200, options=opts, size_class=2
+    )
+    assert sol_solo.objective.shape == (1,)  # replica row trimmed off
+    for field in ("objective", "x", "status", "iterations"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sol_solo, field))[0],
+            np.asarray(getattr(sol_pair, field))[0],
+        )
+
+
+# ---------------------------------------------------------------------------
+# start/resume/init protocol: compaction rounds + serve-style splices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", SHARED)
+def test_shared_compaction_bit_identical(backend):
+    rng = np.random.default_rng(11)
+    sb = random_shared_lp_batch(rng, 24, 12, 6, feasible_start=False)
+    plain = solve_canonical(sb, SolveOptions(backend=backend))
+    compacted = solve_canonical(
+        sb,
+        SolveOptions(
+            backend=backend, compaction="every_k", compact_every=3,
+            resume="basis",
+        ),
+    )
+    for field in ("objective", "x", "status", "iterations"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain, field)),
+            np.asarray(getattr(compacted, field)),
+        )
+
+
+@pytest.mark.parametrize("backend", SHARED)
+def test_shared_serve_protocol_splice_bitwise(backend):
+    """The continuous serve loop's primitive sequence — init_state, capped
+    resume_round quanta, a mid-flight splice — lands bit-identical to the
+    one-shot solve on SharedLPBatch inputs."""
+    rng = np.random.default_rng(21)
+    first = random_shared_lp_batch(rng, 6, 10, 5, feasible_start=False)
+    extra_b = jnp.asarray(
+        rng.uniform(0.5, 2.0, size=(4, 10)).astype(np.float32)
+    )
+    extra_c = jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32))
+    second = SharedLPBatch(first.a, extra_b, extra_c)
+    merged = SharedLPBatch(
+        first.a,
+        jnp.concatenate([first.b, second.b]),
+        jnp.concatenate([first.c, second.c]),
+    )
+    opts = SolveOptions(backend=backend)
+    oneshot = solve_canonical(merged, opts)
+
+    sess = SolveSession(opts)
+    batch = first
+    state = sess.init_state(first, opts)
+    sol = None
+    for step in range(64):
+        if step == 2:  # splice the second wave into the in-flight round
+            batch = merged
+            state = _concat_states([state, sess.init_state(second, opts)])
+        sol, state = sess.resume_round(batch, state, cap=3, options=opts)
+        if not np.any(np.asarray(sol.status) == lp.ITER_LIMIT):
+            break
+    assert batch.batch == merged.batch
+    for field in ("objective", "x", "status"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sol, field)),
+            np.asarray(getattr(oneshot, field)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# oracle parity + warm starts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("feasible", [True, False])
+def test_shared_oracle_parity(feasible):
+    rng = np.random.default_rng(31 + feasible)
+    sb = random_shared_lp_batch(rng, 16, 16, 8, feasible_start=feasible)
+    sol = solve_canonical(sb, SolveOptions(backend="xla-shared"))
+    d = sb.densify()
+    obj, _, status, _ = oracle.solve_batch(
+        np.asarray(d.a, np.float64),
+        np.asarray(d.b, np.float64),
+        np.asarray(d.c, np.float64),
+    )
+    assert np.array_equal(np.asarray(sol.status), status)
+    ok = status == OPTIMAL
+    np.testing.assert_allclose(
+        np.asarray(sol.objective)[ok], obj[ok], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_shared_warm_start_resolves_in_zero_iterations():
+    rng = np.random.default_rng(41)
+    sb = random_shared_lp_batch(rng, 12, 6, 6, feasible_start=True)
+    cold = revised.solve(sb)
+    warm = revised.solve(
+        SharedLPBatch(sb.a, sb.b, sb.c, basis0=cold.basis)
+    )
+    ok = np.asarray(cold.status) == OPTIMAL
+    assert ok.any()
+    assert np.all(np.asarray(warm.iterations)[ok] == 0)
+    # the warm path refactorizes binv from the basis IDs, so xb (and the
+    # objective) are recomputed floats — agreement is to rounding, not bits
+    np.testing.assert_allclose(
+        np.asarray(warm.objective)[ok], np.asarray(cold.objective)[ok],
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# support sweep + shared containers
+# ---------------------------------------------------------------------------
+
+
+def _simplex_polytope(n: int) -> Polytope:
+    a = np.concatenate([-np.eye(n), np.ones((1, n))], axis=0).astype(np.float32)
+    b = np.concatenate([np.zeros(n), np.ones(1)]).astype(np.float32)
+    return Polytope(jnp.asarray(a), jnp.asarray(b))
+
+
+def test_shared_sweep_matches_dense_sweep():
+    rng = np.random.default_rng(51)
+    poly = _simplex_polytope(6)
+    stack = rng.normal(size=(4, 16, 6)).astype(np.float32)
+    dense = np.asarray(
+        poly.support_sweep(stack, SolveOptions(backend="xla"), warm_start=True)
+    )
+    stats = SolveStats()
+    shared = np.asarray(
+        poly.support_sweep(
+            stack, SolveOptions(backend="xla-shared"), warm_start=True,
+            stats=stats,
+        )
+    )
+    finite = np.isfinite(dense)
+    assert np.array_equal(finite, np.isfinite(shared))
+    np.testing.assert_allclose(shared[finite], dense[finite], atol=1e-5)
+    assert stats.lps == stack.shape[0] * stack.shape[1]
+    assert stats.warm_started > 0  # later waves reuse the previous basis
+
+
+def test_to_shared_batch_densify_matches_to_lp_batch():
+    rng = np.random.default_rng(61)
+    poly = _simplex_polytope(5)
+    dirs = rng.normal(size=(9, 5)).astype(np.float32)
+    dense = poly.to_lp_batch(dirs)
+    shared = poly.to_shared_batch(dirs).densify()
+    np.testing.assert_array_equal(np.asarray(shared.a), np.asarray(dense.a))
+    np.testing.assert_array_equal(np.asarray(shared.b), np.asarray(dense.b))
+    np.testing.assert_array_equal(np.asarray(shared.c), np.asarray(dense.c))
+
+
+def test_canonicalize_shared_accepts_and_rejects():
+    from repro.core.problem import LPProblem, canonicalize, canonicalize_shared
+
+    rng = np.random.default_rng(71)
+    a0 = rng.normal(size=(4, 5)).astype(np.float32)
+    bu = rng.uniform(0.5, 2.0, size=(6, 4)).astype(np.float32)
+    c = rng.normal(size=(6, 5)).astype(np.float32)
+    p = LPProblem.make(c=c, a=np.broadcast_to(a0, (6, 4, 5)), bu=bu)
+    canon = canonicalize_shared(p)
+    assert isinstance(canon.batch, SharedLPBatch)
+    ref = canonicalize(p)
+    np.testing.assert_array_equal(
+        np.asarray(canon.batch.densify().a), np.asarray(ref.batch.a)
+    )
+    a_bad = np.broadcast_to(a0, (6, 4, 5)).copy()
+    a_bad[2, 1, 1] += 1.0
+    with pytest.raises(ValueError, match="shared"):
+        canonicalize_shared(LPProblem.make(c=c, a=a_bad, bu=bu))
+
+
+def test_bucket_shared_batches_merges_only_equal_a():
+    rng = np.random.default_rng(81)
+    poly = _simplex_polytope(5)
+    dirs = rng.normal(size=(12, 5)).astype(np.float32)
+    sb1 = poly.to_shared_batch(dirs[:5])
+    sb2 = poly.to_shared_batch(dirs[5:])  # same A, recomputed
+    other = SharedLPBatch(sb1.a * 2.0, sb1.b, sb1.c)  # same shape, new A
+    small = _simplex_polytope(3).to_shared_batch(
+        rng.normal(size=(4, 3)).astype(np.float32)
+    )
+    buckets = bucket_shared_batches([sb1, sb2, other, small])
+    assert len(buckets) == 3
+    merged = next(bk for bk in buckets if 0 in bk.indices)
+    assert merged.indices == (0, 1)
+    assert merged.sizes == (5, 7)
+    assert merged.batch.batch == 12  # one A, concatenated b/c
+
+    opts = SolveOptions(backend="xla-shared")
+    sols = [solve_canonical(bk.batch, opts) for bk in buckets]
+    back = scatter_shared_solutions(buckets, sols, 4)
+    for i, inp in enumerate([sb1, sb2, other, small]):
+        ref = solve_canonical(inp, opts)
+        np.testing.assert_array_equal(
+            np.asarray(back[i].status), np.asarray(ref.status)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(back[i].objective), np.asarray(ref.objective)
+        )
+
+
+# ---------------------------------------------------------------------------
+# dispatch routing + warn-once table
+# ---------------------------------------------------------------------------
+
+
+def test_dense_batch_on_shared_backend_raises():
+    rng = np.random.default_rng(91)
+    batch = lp.random_lp_batch(rng, 4, 5, 5)
+    with pytest.raises(ValueError, match="[Ss]hared"):
+        solve_canonical(batch, SolveOptions(backend="xla-shared"))
+
+
+def test_shared_batch_densifies_on_dense_backend():
+    rng = np.random.default_rng(92)
+    sb = random_shared_lp_batch(rng, 6, 5, 5, feasible_start=True)
+    sol = solve_canonical(sb, SolveOptions(backend="xla"))
+    _assert_same_answers(sol, _dense_reference(sb))
+
+
+def test_shared_vmem_fallback_reports_bytes_and_warns_once():
+    from repro.kernels import ops
+
+    m = n = 1200  # far past any VMEM budget
+    backends._WARN_ONCE.pop(("pallas-shared-vmem", m, n, "float32"), None)
+    with pytest.warns(UserWarning, match="bytes/LP") as rec:
+        assert backends._pallas_shared_fallback(m, n, jnp.float32)
+    msg = str(rec[0].message)
+    assert str(ops.revised_vmem_bytes_per_lp(m, n, jnp.float32)) in msg
+    budget = int(ops.VMEM_BUDGET_BYTES * ops.VMEM_TILE_FRACTION)
+    assert str(budget) in msg
+    # the unified keyed table holds the emitted message...
+    assert backends._WARN_ONCE[("pallas-shared-vmem", m, n, "float32")] == msg
+    # ...and the second occurrence is silent.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert backends._pallas_shared_fallback(m, n, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode) vs the XLA lockstep driver
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("feasible", [True, False])
+def test_revised_kernel_bitwise_vs_xla_driver(feasible):
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(101 + feasible)
+    sb = random_shared_lp_batch(rng, 8, 10, 5, feasible_start=feasible)
+    sol_k, state_k = ops.revised_solve(
+        sb.a, sb.b, sb.c, interpret=True, want_state=True, tile_b=4
+    )
+    sol_x, state_x = revised.solve_batched(sb.a, sb.b, sb.c, want_state=True)
+    for field in ("objective", "x", "status", "iterations", "basis"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sol_k, field)),
+            np.asarray(getattr(sol_x, field)),
+            err_msg=field,
+        )
+    for field in ("binv", "basis", "xb", "phase"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state_k, field)),
+            np.asarray(getattr(state_x, field)),
+            err_msg=field,
+        )
