@@ -17,6 +17,7 @@ from . import (
     fig10_cpu_threads,
     fig_compaction,
     fig_dispatch,
+    fig_faults,
     fig_frontier,
     fig_memory,
     fig_rules,
@@ -37,6 +38,7 @@ BENCHES = {
     "table2": table2_reach.run,
     "compaction": fig_compaction.run,
     "dispatch": fig_dispatch.run,
+    "faults": fig_faults.run,
     "frontier": fig_frontier.run,
     "memory": fig_memory.run,
     "rules": fig_rules.run,

@@ -90,15 +90,51 @@ def save(directory: str, step: int, tree: Any) -> str:
     return final
 
 
+def _complete_steps(directory: str):
+    """Step numbers of every COMPLETE checkpoint dir (torn writes skipped).
+
+    A torn write is visible as either a lingering ``step_*.tmp`` dir (the
+    rename never happened) or a renamed dir missing its payload; both are
+    ignored — ``save``'s tmp-then-rename discipline guarantees a renamed
+    dir with both files is fully written.
+    """
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return []
+    steps = []
+    for d in names:
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        full = os.path.join(directory, d)
+        if not (
+            os.path.isfile(os.path.join(full, "manifest.json"))
+            and os.path.isfile(os.path.join(full, "arrays.npz"))
+        ):
+            continue
+        try:
+            steps.append(int(d.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return sorted(steps)
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest restorable step, robust to torn writes.
+
+    The ``LATEST`` pointer is the fast path; when it is missing or stale
+    (a job died between writing the step dir and updating the pointer, or
+    mid-write leaving only a ``.tmp`` dir), fall back to scanning for the
+    newest COMPLETE ``step_*`` directory.
+    """
     path = os.path.join(directory, "LATEST")
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(directory, name)):
-        return None
-    return int(name.split("_")[1])
+    if os.path.exists(path):
+        with open(path) as f:
+            name = f.read().strip()
+        if os.path.isdir(os.path.join(directory, name)):
+            return int(name.split("_")[1])
+    steps = _complete_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, like: Any, step: Optional[int] = None,
@@ -141,6 +177,7 @@ class AsyncCheckpointer:
         self.keep = keep
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
         self._err: Optional[BaseException] = None
+        self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -180,6 +217,12 @@ class AsyncCheckpointer:
             raise self._err
 
     def close(self):
+        """Stop the writer thread; idempotent (shutdown paths often race
+        an atexit hook against an explicit close — the second call is a
+        no-op instead of deadlocking on an already-drained queue)."""
+        if self._closed:
+            return
+        self._closed = True
         self._q.put(None)
         self._thread.join(timeout=10)
         if self._err:

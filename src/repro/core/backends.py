@@ -206,6 +206,41 @@ class SolveOptions:
         at or above it route to ``pdhg``, below it to a simplex backend
         (see :func:`route_shape`).  0 means
         :data:`DEFAULT_ROUTE_FRONTIER`.
+    guardrails : bool, default True
+        Per-round numerical health mask
+        (``core/dispatch.py:apply_guardrails``): rows whose solution or
+        carried resume state went non-finite retire with the
+        ``NUMERICAL`` status instead of spinning to ``ITER_LIMIT`` or
+        reporting a poisoned certificate.  Costs a handful of lazy
+        ``isfinite`` reductions folded into the existing per-round
+        status read-back (measured < 3% wall-clock,
+        ``benchmarks/fig_faults.py``).
+    quarantine : bool, default False
+        Opt-in recovery lane for guardrail-flagged rows: after the round
+        loop, ``NUMERICAL`` rows with finite INPUTS are re-solved on the
+        float64 reference oracle under a ``max(400, 2 (m + n))`` pivot
+        budget (the pdhg certificate-confirmation budget rule) and the
+        oracle's verdict replaces the flag when it reaches one.
+    retry_budget : int, default 2
+        Fault-recovery retries per dispatch round
+        (``core/dispatch.py:dispatch_round_safe``): a transient backend
+        failure re-dispatches the SAME round from its carried resume
+        state up to this many times — on the routed fallback backend
+        (:func:`fault_fallback`) with capped exponential backoff —
+        before the error propagates.  0 disables recovery.  In the
+        continuous serve loop the budget is per group round; a group
+        that exhausts it dead-letters its LPs
+        (``serve/engine.py``).
+    retry_backoff : float, default 0.05
+        Base of the recovery backoff: retry k sleeps
+        ``retry_backoff * 2**k`` seconds, capped at 1s.
+    speculation : bool, default False
+        Straggler mitigation for multi-chunk rounds
+        (``runtime/straggler.py:run_with_speculation``): chunks of a
+        round dispatch from worker threads, and a chunk exceeding
+        ``alpha * median(done chunk times)`` is speculatively re-executed
+        — first result wins (solves are deterministic, so twins agree).
+        Single-chunk and mesh-sharded rounds ignore the knob.
     """
 
     backend: str = "xla"
@@ -225,6 +260,11 @@ class SolveOptions:
     pdhg_restart: int = 0
     crossover: bool = False
     route_frontier: int = 0
+    guardrails: bool = True
+    quarantine: bool = False
+    retry_budget: int = 2
+    retry_backoff: float = 0.05
+    speculation: bool = False
 
     def __post_init__(self):
         # Validate here (not in the dispatch layer) so every route —
@@ -259,6 +299,14 @@ class SolveOptions:
         if self.route_frontier < 0:
             raise ValueError(
                 f"route_frontier must be >= 0, got {self.route_frontier!r}"
+            )
+        if self.retry_budget < 0:
+            raise ValueError(
+                f"retry_budget must be >= 0, got {self.retry_budget!r}"
+            )
+        if self.retry_backoff < 0.0:
+            raise ValueError(
+                f"retry_backoff must be >= 0, got {self.retry_backoff!r}"
             )
         if self.backend == "pdhg":
             # A first-order method has no pivot rule and no tableau: a
@@ -357,6 +405,24 @@ class SolveStats:
         iteration counters — sessions and benchmarks report it alongside
         iterations/compiles, and it is what the compact layout drives
         down (~33% on square LPs).
+    retries : int
+        Dispatch rounds re-executed from their carried resume state by
+        the fault-recovery wrapper
+        (``core/dispatch.py:dispatch_round_safe``) after a transient
+        backend failure.  Zero on the clean path.
+    quarantined : int
+        Guardrail-flagged (``NUMERICAL``) rows re-solved on the float64
+        oracle by the opt-in quarantine lane
+        (``SolveOptions.quarantine``).
+    dead_lettered : int
+        Serve-loop LPs retired without a solve because their group
+        exhausted its retry budget (``serve/engine.py``); their tickets
+        redeem ``NUMERICAL`` results and appear in
+        ``LPEngine.dead_letters``.
+    faults_injected : int
+        Injected chaos faults (``runtime/chaos.py``) observed by the
+        recovery path — raised faults that were caught plus state rows
+        poisoned.  Zero outside fault-injection runs.
     """
 
     lps: int = 0
@@ -369,6 +435,10 @@ class SolveStats:
     compiles: int = 0
     cache_hits: int = 0
     tableau_bytes: int = 0
+    retries: int = 0
+    quarantined: int = 0
+    dead_lettered: int = 0
+    faults_injected: int = 0
 
     def record_tableau(self, nbytes: int) -> None:
         """Fold one dispatch round's tableau footprint into the peak.
@@ -681,6 +751,34 @@ def _warn_once(key: Tuple, message: str, stacklevel: int = 4) -> None:
         return
     _WARN_ONCE[key] = message
     warnings.warn(message, stacklevel=stacklevel)
+
+
+#: Fault-recovery routing: the backend a faulted dispatch round retries
+#: on.  Only BIT-IDENTICAL twins appear — the pallas kernels and the xla
+#: drivers run the same ``core/engine.py`` / ``core/revised.py`` blocks
+#: and their resume states are interchangeable, so a retry on the twin
+#: continues the carried state exactly.  Backends with no twin (``xla``,
+#: ``pdhg``, ``reference``) retry in place: a different-tolerance
+#: substitute would silently change answers, which a fault must never do.
+FAULT_FALLBACKS = {"pallas": "xla", "pallas-shared": "xla-shared"}
+
+
+def fault_fallback(name: str) -> str:
+    """The backend name a faulted round of ``name`` should retry on.
+
+    Returns ``name`` itself when no bit-identical twin exists (see
+    :data:`FAULT_FALLBACKS`); warns once per rerouted backend through
+    the same warn-once table as the VMEM fallbacks.
+    """
+    target = FAULT_FALLBACKS.get(name, name)
+    if target != name:
+        _warn_once(
+            ("fault-fallback", name),
+            f"{name} backend: dispatch fault — retrying the round from "
+            f"its carried resume state on the {target} backend "
+            "(bit-identical twin)",
+        )
+    return target
 
 
 def _pallas_vmem_fallback(

@@ -59,17 +59,30 @@ per-round machinery:
 
 The actual per-chunk solve is delegated to the registered backend
 (core/backends.py); empty batches short-circuit to an empty solution.
+
+Robustness layer (PR 9): every scheduler round goes through
+:func:`dispatch_round_safe`, which retries a transiently-failed round
+from its carried ``ResumeState`` — on the routed fallback backend
+(:func:`repro.core.backends.fault_fallback`), with capped exponential
+backoff — so healthy LPs recover bit-identically with zero new compiles;
+:func:`apply_guardrails` retires rows whose solution or carried state
+went non-finite with the ``NUMERICAL`` status at the existing per-round
+status read-back, and the opt-in quarantine lane
+(``SolveOptions.quarantine``) re-solves flagged rows on the float64
+oracle.  Fault injection for all of it lives in ``runtime/chaos.py``.
 """
 
 from __future__ import annotations
 
 import math
+import time
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime import chaos as _chaos
 from . import pdhg as _pdhg
 from . import revised as _revised
 from .backends import (
@@ -77,6 +90,7 @@ from .backends import (
     Backend,
     SolveOptions,
     SolveStats,
+    fault_fallback,
     get_backend,
     route_shape,
 )
@@ -84,6 +98,8 @@ from .bucketing import next_pow2
 from .engine import LPC
 from .lp import (
     ITER_LIMIT,
+    NUMERICAL,
+    OPTIMAL,
     LPBatch,
     LPSolution,
     ResumeState,
@@ -91,6 +107,10 @@ from .lp import (
     auto_cap,
 )
 from .tableau import DEFAULT_LAYOUT, TableauSpec
+
+#: Ceiling on the fault-recovery backoff sleep (seconds): retry k of a
+#: round sleeps ``min(retry_backoff * 2**k, RETRY_BACKOFF_CAP)``.
+RETRY_BACKOFF_CAP = 1.0
 
 
 def empty_solution(n: int, dtype=jnp.float32) -> LPSolution:
@@ -433,6 +453,200 @@ def admission_order(
     return sorted(range(len(requests)), key=key)
 
 
+def _finite_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-row all-finite mask over the trailing axes: ``(B, ...) -> (B,)``."""
+    return jnp.all(jnp.isfinite(x.reshape(x.shape[0], -1)), axis=-1)
+
+
+def state_health(state) -> Optional[jnp.ndarray]:
+    """Per-row finite-ness of a carried resume state (device-side, lazy).
+
+    Reduces every floating leaf of the state pytree — the tableau rows of
+    a simplex :class:`~repro.core.lp.ResumeState`, ``x_B``/``B^-1`` of
+    the revised record, iterates/residual accumulators of the PDHG one —
+    to one ``(B,)`` bool mask.  Returns None for a state with no floating
+    leaves (nothing to check).
+    """
+    ok = None
+    for leaf in jax.tree_util.tree_leaves(state):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        f = _finite_rows(leaf)
+        ok = f if ok is None else ok & f
+    return ok
+
+
+def apply_guardrails(sol: LPSolution, state=None) -> LPSolution:
+    """Retire non-finite rows with the ``NUMERICAL`` status.
+
+    The per-round numerical health mask (``SolveOptions.guardrails``).
+    A row is flagged when
+
+    * it claims ``OPTIMAL`` but its objective or primal point is not
+      finite (a poisoned certificate — the one thing that must never
+      escape), or
+    * its carried resume state has any non-finite value (``state`` row-
+      aligned with ``sol``), so every later round would iterate on
+      garbage.
+
+    The scoping matters: non-``OPTIMAL`` rows legitimately carry ±inf
+    objectives (``extract_solution`` fills them), so the solution-side
+    check applies to ``OPTIMAL`` rows only — honest
+    UNBOUNDED/INFEASIBLE/ITER_LIMIT verdicts pass through untouched.
+    Flagged rows report status ``NUMERICAL``, objective NaN, and a zero
+    primal point.  On a healthy batch the ``where``-selects are row-wise
+    identities, so results are bit-identical with the guardrails on or
+    off.  The whole mask is one jitted call (cached per shape class like
+    the round executables themselves), so the clean-path cost is a
+    single fused kernel per round, not a chain of eager dispatches.
+    """
+    return _apply_guardrails_jit(sol, state)
+
+
+@jax.jit
+def _apply_guardrails_jit(sol: LPSolution, state) -> LPSolution:
+    bad = (sol.status == OPTIMAL) & ~(
+        jnp.isfinite(sol.objective) & _finite_rows(sol.x)
+    )
+    if state is not None:
+        healthy = state_health(state)
+        if healthy is not None:
+            bad = bad | ~healthy
+    status = jnp.where(bad, jnp.int32(NUMERICAL), sol.status)
+    objective = jnp.where(bad, jnp.nan, sol.objective)
+    x = jnp.where(bad[:, None], jnp.zeros_like(sol.x), sol.x)
+    return LPSolution(
+        objective=objective,
+        x=x,
+        status=status,
+        iterations=sol.iterations,
+        basis=sol.basis,
+        y=sol.y,
+    )
+
+
+def dispatch_round_safe(
+    batch: LPBatch,
+    options: SolveOptions,
+    mesh,
+    batch_axes: Sequence[str],
+    stats: Optional[SolveStats] = None,
+    state: Optional[ResumeState] = None,
+    want_state: bool = False,
+    size_class: Optional[int] = None,
+) -> Tuple[LPSolution, Optional[ResumeState]]:
+    """:func:`dispatch_round` with retry-from-``ResumeState`` recovery.
+
+    ``dispatch_round`` is functional — its ``batch``/``state`` arguments
+    are never mutated — so on a transient failure (an injected
+    :class:`~repro.runtime.chaos.ChaosError`, a device runtime error)
+    the SAME round simply re-dispatches from the same carried state: the
+    exact-resume protocol makes the retry bit-identical to an
+    uninterrupted round, and the pow-2 ``size_class`` means it lands on
+    an already-compiled executable.  Retries route through
+    :func:`repro.core.backends.fault_fallback` — ``pallas`` retries on
+    its bit-identical ``xla`` twin (warn-once), twin-less backends retry
+    in place — with capped exponential backoff
+    (``options.retry_backoff``, ceiling :data:`RETRY_BACKOFF_CAP`).
+    After ``options.retry_budget`` failed retries, or on a non-transient
+    error (:data:`repro.runtime.chaos.NON_TRANSIENT`), the exception
+    propagates.
+
+    The clean path is one ``try`` — no extra dispatches, no syncs.
+    Note ``SolveStats`` counters recorded by an aborted attempt's
+    completed chunks are not rolled back (stats are diagnostics; results
+    are unaffected).
+    """
+    budget = options.retry_budget
+    opts = options
+    for attempt in range(budget + 1):
+        try:
+            return dispatch_round(
+                batch,
+                opts,
+                mesh,
+                batch_axes,
+                stats,
+                state=state,
+                want_state=want_state,
+                size_class=size_class,
+            )
+        except Exception as exc:
+            if attempt >= budget or not _chaos.is_transient(exc):
+                raise
+            if stats is not None:
+                stats.retries += 1
+                if isinstance(exc, _chaos.ChaosError):
+                    stats.faults_injected += 1
+            target = fault_fallback(opts.backend)
+            if target != opts.backend:
+                opts = opts.replace(backend=target)
+            delay = min(
+                opts.retry_backoff * (2**attempt), RETRY_BACKOFF_CAP
+            )
+            if delay > 0:
+                time.sleep(delay)
+    raise AssertionError("unreachable")  # pragma: no cover
+
+
+def _quarantine_resolve(
+    batch,
+    sol: LPSolution,
+    options: SolveOptions,
+    stats: Optional[SolveStats] = None,
+) -> LPSolution:
+    """Re-solve guardrail-flagged rows on the float64 oracle (opt-in).
+
+    The recovery lane behind ``SolveOptions.quarantine``, reusing the
+    pdhg certificate-confirmation pattern
+    (``core/pdhg.py:confirm_certificates``): gather the ``NUMERICAL``
+    rows host-side, drop any whose INPUTS are non-finite (garbage in —
+    no verdict possible), and run the survivors through the sequential
+    float64 oracle under the same ``max(400, 2 (m + n))`` pivot budget.
+    Rows where the oracle reaches a certificate
+    (OPTIMAL/UNBOUNDED/INFEASIBLE) take the oracle's verdict; rows it
+    cannot finish stay ``NUMERICAL`` — a wrong certificate is never
+    fabricated.
+    """
+    status = np.asarray(sol.status)
+    flagged = np.nonzero(status == NUMERICAL)[0]
+    if flagged.size == 0:
+        return sol
+    from . import oracle as _oracle
+
+    sub = _gather_batch(batch, jnp.asarray(flagged))
+    if isinstance(sub, SharedLPBatch):
+        sub = sub.densify()
+    a = np.asarray(sub.a, np.float64)
+    b = np.asarray(sub.b, np.float64)
+    c = np.asarray(sub.c, np.float64)
+    finite = (
+        np.isfinite(a).all(axis=(1, 2))
+        & np.isfinite(b).all(axis=1)
+        & np.isfinite(c).all(axis=1)
+    )
+    keep = np.nonzero(finite)[0]
+    if keep.size == 0:
+        return sol
+    budget = max(400, 2 * (batch.m + batch.n))
+    obj, xs, ostatus, iters = _oracle.solve_batch(
+        a[keep], b[keep], c[keep], max_iters=budget
+    )
+    if stats is not None:
+        stats.quarantined += int(keep.size)
+    confirmed = np.nonzero(ostatus != ITER_LIMIT)[0]
+    if confirmed.size == 0:
+        return sol
+    rows = flagged[keep[confirmed]]
+    part = LPSolution(
+        objective=jnp.asarray(obj[confirmed], sol.objective.dtype),
+        x=jnp.asarray(xs[confirmed], sol.x.dtype),
+        status=jnp.asarray(ostatus[confirmed], jnp.int32),
+        iterations=jnp.asarray(iters[confirmed], jnp.int32),
+    )
+    return _scatter_solution(sol, jnp.asarray(rows), part)
+
+
 def solve_canonical(
     batch: LPBatch,
     options: Optional[SolveOptions] = None,
@@ -550,7 +764,7 @@ def solve_canonical(
             else:
                 sub_state = None
             size_class = next_pow2(int(active.size))
-        part, part_state = dispatch_round(
+        part, part_state = dispatch_round_safe(
             sub,
             base.replace(max_iters=cap),
             mesh,
@@ -560,6 +774,11 @@ def solve_canonical(
             want_state=want_state,
             size_class=size_class,
         )
+        if options.guardrails:
+            # Checked at the existing one-host-sync-per-round status
+            # read-back below: a poisoned row retires NUMERICAL here and
+            # leaves the active set instead of iterating on garbage.
+            part = apply_guardrails(part, part_state)
         if stats is not None and sub_state is not None:
             stats.resumed += sub.batch
         if idx is None:
@@ -582,6 +801,11 @@ def solve_canonical(
         sol = _pdhg.confirm_certificates(batch, sol, options)
         if options.crossover:
             sol = _pdhg.crossover(batch, sol, options)
+    if options.quarantine:
+        # Last: the lane only touches NUMERICAL rows, which neither pdhg
+        # post-pass reads (confirmation gathers divergence flags,
+        # crossover polishes OPTIMAL rows).
+        sol = _quarantine_resolve(batch, sol, options, stats)
     return sol
 
 
@@ -612,7 +836,21 @@ def dispatch_round(
     scheduler step over each shape class's spliced in-flight batch.
     ``options.max_iters`` must already be the round's concrete budget
     (``options.backend`` concrete, not ``"auto"``).
+
+    Fault injection (``runtime/chaos.py``): an active
+    :class:`~repro.runtime.chaos.ChaosMonkey` is consulted before the
+    round (delay / backend exception), before each chunk (shard crash),
+    and on the outgoing carried state (NaN poisoning) — the hooks the
+    recovery wrapper (:func:`dispatch_round_safe`) and the guardrails
+    are tested against.  With ``options.speculation`` a multi-chunk
+    unsharded round dispatches its chunks through
+    ``runtime/straggler.py:run_with_speculation`` instead of the serial
+    staging loop.
     """
+    monkey = _chaos.active()
+    chaos_round = (
+        monkey.on_round(options.backend) if monkey is not None else None
+    )
     axes = _resolve_axes(mesh, batch_axes)
     mesh_div = 1
     if mesh and axes:
@@ -647,31 +885,39 @@ def dispatch_round(
             spec = TableauSpec(batch.m, batch.n, options.layout)
             per_lp = spec.bytes_per_lp(batch.a.dtype)
         stats.record_tableau(min(chunk, bsz) * per_lp)
-    parts = []
-    state_parts = []
-    # Stage chunk 0, then for each chunk: kick off the solve (async under
-    # XLA) and immediately stage chunk k+1 so transfer overlaps compute —
-    # the CUDA-streams discipline from paper Sec. 4.4.
-    staged = None
-    for lo in range(0, bsz, chunk):
-        hi = min(lo + chunk, bsz)
-        cur = staged or _stage_round_inputs(batch, state, lo, hi, mesh, axes)
-        out, out_state = _solve_chunk(backend, cur, options, want_state, stats)
-        nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
-        staged = (
-            _stage_round_inputs(batch, state, nxt_lo, nxt_hi, mesh, axes)
-            if nxt_lo < bsz
-            else None
+    if options.speculation and not axes and bsz > chunk:
+        parts, state_parts = _speculative_chunks(
+            batch, state, options, backend, want_state, stats,
+            chunk, bsz, true_bsz, monkey, chaos_round,
         )
-        if stats is not None:
-            # Don't let padding replica rows (edge-mode duplicates in the
-            # trailing chunk) inflate the counters.
-            valid = min(hi, true_bsz) - lo
-            if valid > 0:
-                stats.record(out if valid == hi - lo else _trim_solution(out, valid))
-        parts.append(out)
-        if out_state is not None:
-            state_parts.append(out_state)
+    else:
+        parts = []
+        state_parts = []
+        # Stage chunk 0, then for each chunk: kick off the solve (async
+        # under XLA) and immediately stage chunk k+1 so transfer overlaps
+        # compute — the CUDA-streams discipline from paper Sec. 4.4.
+        staged = None
+        for k, lo in enumerate(range(0, bsz, chunk)):
+            if monkey is not None:
+                monkey.on_chunk(chaos_round, k)
+            hi = min(lo + chunk, bsz)
+            cur = staged or _stage_round_inputs(batch, state, lo, hi, mesh, axes)
+            out, out_state = _solve_chunk(backend, cur, options, want_state, stats)
+            nxt_lo, nxt_hi = hi, min(hi + chunk, bsz)
+            staged = (
+                _stage_round_inputs(batch, state, nxt_lo, nxt_hi, mesh, axes)
+                if nxt_lo < bsz
+                else None
+            )
+            if stats is not None:
+                # Don't let padding replica rows (edge-mode duplicates in
+                # the trailing chunk) inflate the counters.
+                valid = min(hi, true_bsz) - lo
+                if valid > 0:
+                    stats.record(out if valid == hi - lo else _trim_solution(out, valid))
+            parts.append(out)
+            if out_state is not None:
+                state_parts.append(out_state)
     sol = parts[0] if len(parts) == 1 else _concat_solutions(parts)
     if want_state:
         out_state = (
@@ -683,7 +929,76 @@ def dispatch_round(
         sol = _trim_solution(sol, true_bsz)
         if out_state is not None:
             out_state = out_state.take(slice(None, true_bsz))
+    if monkey is not None and out_state is not None:
+        # NaN-poison scheduled rows of the OUTGOING carried state — the
+        # corruption the next guardrail check must catch.
+        out_state, poisoned = monkey.poison_state(chaos_round, out_state)
+        if poisoned and stats is not None:
+            stats.faults_injected += poisoned
     return sol, out_state
+
+
+def _speculative_chunks(
+    batch,
+    state,
+    options: SolveOptions,
+    backend: Backend,
+    want_state: bool,
+    stats: Optional[SolveStats],
+    chunk: int,
+    bsz: int,
+    true_bsz: int,
+    monkey,
+    chaos_round,
+):
+    """Straggler-mitigated chunk dispatch (``SolveOptions.speculation``).
+
+    Each chunk of the round becomes a work unit of
+    ``runtime/straggler.py:run_with_speculation``: worker threads solve
+    the chunks, and a chunk exceeding the deadline ``alpha * median(done
+    chunk times)`` is speculatively re-executed on an idle worker — first
+    result wins, which is safe because solves are deterministic (the twin
+    computes bit-identical output).  Compile-cache deltas are attributed
+    once for the whole round (per-chunk attribution would race across
+    threads); results and counters match the serial staging loop.
+    """
+    from ..runtime.straggler import run_with_speculation
+
+    ranges = [(lo, min(lo + chunk, bsz)) for lo in range(0, bsz, chunk)]
+    before = (
+        backend.cache_size()
+        if stats is not None and backend.cache_size
+        else None
+    )
+
+    def solve_unit(payload, worker):
+        k, (lo, hi) = payload
+        if monkey is not None:
+            monkey.on_chunk(chaos_round, k)
+        cur = _stage_round_inputs(batch, state, lo, hi, None, ())
+        out, out_state = _solve_chunk(backend, cur, options, want_state, None)
+        # Block here so the scheduler's per-unit elapsed times measure
+        # the solve, not the async dispatch — the straggler deadline
+        # needs real durations.
+        jax.block_until_ready(out.status)
+        return out, out_state
+
+    report = run_with_speculation(
+        list(enumerate(ranges)), solve_unit, n_workers=min(4, len(ranges))
+    )
+    parts, state_parts = [], []
+    for (lo, hi), unit in zip(ranges, report.results):
+        out, out_state = unit.value
+        if stats is not None:
+            valid = min(hi, true_bsz) - lo
+            if valid > 0:
+                stats.record(out if valid == hi - lo else _trim_solution(out, valid))
+        parts.append(out)
+        if out_state is not None:
+            state_parts.append(out_state)
+    if before is not None:
+        stats.record_cache(before, backend.cache_size())
+    return parts, state_parts
 
 
 def _stage_round_inputs(batch, state, lo, hi, mesh, axes):

@@ -48,6 +48,12 @@ OPTIMAL = 1
 UNBOUNDED = 2
 INFEASIBLE = 3
 ITER_LIMIT = 4
+# Retired by the numerical guardrails (core/dispatch.py:apply_guardrails):
+# the row's solution or carried state went non-finite, so no
+# OPTIMAL/UNBOUNDED/INFEASIBLE certificate can be trusted for it.  The
+# opt-in quarantine lane (SolveOptions.quarantine) re-solves such rows on
+# the float64 oracle and overwrites the verdict when one is reached.
+NUMERICAL = 5
 
 STATUS_NAMES = {
     RUNNING: "running",
@@ -55,6 +61,7 @@ STATUS_NAMES = {
     UNBOUNDED: "unbounded",
     INFEASIBLE: "infeasible",
     ITER_LIMIT: "iter_limit",
+    NUMERICAL: "numerical",
 }
 
 

@@ -51,11 +51,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .lp import INFEASIBLE, LPBatch, LPSolution, OPTIMAL, SharedLPBatch
+from .lp import INFEASIBLE, LPBatch, LPSolution, NUMERICAL, OPTIMAL, SharedLPBatch
 
 
 def _static(default):
     return dataclasses.field(metadata=dict(static=True), default=default)
+
+
+#: Field -> whether ±inf is legitimate there.  Bounds use infinity to mean
+#: "unbounded"; the objective and constraint coefficients must be finite.
+_VALIDATE_FIELDS = (
+    ("c", False),
+    ("a", False),
+    ("bl", True),
+    ("bu", True),
+    ("lo", True),
+    ("hi", True),
+)
+
+
+def validate_problem(problem: "LPProblem", where: str = "LPProblem") -> None:
+    """Reject NaN/Inf garbage up front, naming the offending field.
+
+    NaN is rejected everywhere; Inf is rejected in ``c``/``a`` (where it
+    can only poison the arithmetic) but legitimate in the bounds (where
+    it means "unbounded").  Called by :meth:`LPProblem.make` (opt out
+    with ``validate=False``) and ``LPEngine.submit`` — garbage is
+    cheaper to reject at the host boundary than to burn a megabatch
+    dispatch round before the device-side guardrails catch it.
+
+    Raises
+    ------
+    ValueError
+        Naming the first offending field, e.g. ``"LPProblem.c contains
+        NaN"``.
+    """
+    for field, inf_ok in _VALIDATE_FIELDS:
+        v = np.asarray(getattr(problem, field))
+        if np.isnan(v).any():
+            raise ValueError(f"{where}.{field} contains NaN")
+        if not inf_ok and np.isinf(v).any():
+            raise ValueError(
+                f"{where}.{field} contains non-finite values (Inf)"
+            )
 
 
 @jax.tree_util.register_dataclass
@@ -119,6 +157,7 @@ class LPProblem:
         maximize: bool = True,
         dtype=None,
         basis0=None,
+        validate: bool = True,
     ) -> "LPProblem":
         """Normalize user inputs (host-side) into a batched ``LPProblem``.
 
@@ -144,6 +183,11 @@ class LPProblem:
             ``(B, m')`` int32 warm-start basis in canonical column space —
             feed a previous ``LPSolution.basis`` from a solve of a
             same-shaped problem (the support-function sweep pattern).
+        validate : bool, default True
+            Up-front NaN/Inf input validation (:func:`validate_problem`):
+            NaN anywhere, or Inf in ``c``/``a``, raises ``ValueError``
+            naming the field.  ``False`` skips the check — for callers
+            that construct provably-finite data in a hot loop.
 
         Returns
         -------
@@ -186,6 +230,19 @@ class LPProblem:
 
         split = bool(np.isneginf(lo).any())
         boxlike = m == 0 and bool(np.isfinite(lo).all() and np.isfinite(hi).all())
+        if validate:
+            # Arrays are already host-side numpy here — the check costs
+            # no device sync.
+            for field, arr, inf_ok in (
+                ("c", c, False), ("a", a, False), ("bl", bl, True),
+                ("bu", bu, True), ("lo", lo, True), ("hi", hi, True),
+            ):
+                if np.isnan(arr).any():
+                    raise ValueError(f"LPProblem.{field} contains NaN")
+                if not inf_ok and np.isinf(arr).any():
+                    raise ValueError(
+                        f"LPProblem.{field} contains non-finite values (Inf)"
+                    )
         return cls(
             c=jnp.asarray(c),
             a=jnp.asarray(a),
@@ -445,23 +502,38 @@ def canonicalize_shared(
         expected variation; per-LP ``lo`` shifts also canonicalize into
         ``b``, which the shared form carries per-LP anyway.
     validate : bool, default True
-        Host-side check that the canonical constraint rows really are
-        identical across the batch (one ``jnp.any`` sync).  With False
-        the first LP's matrix is trusted — the caller's assertion.
+        Host-side checks: that the canonical constraint rows really are
+        identical across the batch, and that the shared system is
+        numerically sane — no NaN anywhere, no Inf in the stored ``A``
+        (one poisoned coefficient in the SHARED matrix would corrupt
+        every LP of every dispatch round).  With False the first LP's
+        matrix is trusted — the caller's assertion.
 
     Raises
     ------
     ValueError
-        If ``validate`` finds rows with differing canonical ``A``.
+        If ``validate`` finds rows with differing canonical ``A``, or
+        NaN/Inf where none is legal.
     """
     canon = canonicalize(problem)
     batch = canon.batch
     a0 = batch.a[0]
-    if validate and bool(jnp.any(batch.a != a0[None])):
-        raise ValueError(
-            "canonicalize_shared: canonical constraint matrices differ "
-            "across the batch; solve as a plain LPBatch instead"
-        )
+    if validate:
+        if bool(jnp.any(batch.a != a0[None])):
+            raise ValueError(
+                "canonicalize_shared: canonical constraint matrices differ "
+                "across the batch; solve as a plain LPBatch instead"
+            )
+        if not bool(jnp.all(jnp.isfinite(a0))):
+            raise ValueError(
+                "canonicalize_shared: the shared constraint matrix "
+                "contains NaN/Inf — reject the input instead of "
+                "poisoning every batched variant"
+            )
+        if bool(jnp.any(jnp.isnan(batch.b))) or bool(jnp.any(jnp.isnan(batch.c))):
+            raise ValueError(
+                "canonicalize_shared: canonical b/c contain NaN"
+            )
     shared = SharedLPBatch(a0, batch.b, batch.c, basis0=batch.basis0)
     return dataclasses.replace(canon, batch=shared)
 
@@ -471,7 +543,9 @@ def uncanonicalize(canon: Canonicalized, sol: LPSolution) -> LPSolution:
 
     Primal: x = shift + x_pos - x_neg.  Objective is re-evaluated as
     ``c_user . x`` (exact in user space, no sign algebra); non-optimal LPs
-    report -inf when maximizing, +inf when minimizing.
+    report -inf when maximizing, +inf when minimizing — except
+    guardrail-retired ``NUMERICAL`` rows, which report NaN ("no trusted
+    answer", distinct from the honest infeasible/unbounded infinities).
 
     Parameters
     ----------
@@ -494,6 +568,7 @@ def uncanonicalize(canon: Canonicalized, sol: LPSolution) -> LPSolution:
     ok = sol.status == OPTIMAL
     bad = -jnp.inf if canon.sign > 0 else jnp.inf
     objective = jnp.where(ok, jnp.sum(canon.c_user * x, axis=-1), bad)
+    objective = jnp.where(sol.status == NUMERICAL, jnp.nan, objective)
     x = jnp.where(ok[:, None], x, 0.0)
     return LPSolution(
         objective=objective,

@@ -169,6 +169,18 @@ class SolveSession:
         pads the batch to the scheduler's power-of-two class so rounds of
         different in-flight sizes reuse one executable.
 
+        Runs through the fault-recovery wrapper
+        (:func:`repro.core.dispatch.dispatch_round_safe`): a transient
+        backend failure re-dispatches the same round from the same
+        carried state, up to ``options.retry_budget`` times, before the
+        error reaches the caller — the serve loop dead-letters a group
+        whose round exhausts the budget (``serve/engine.py``).  When
+        ``options.guardrails`` is on (the default), the round's solution
+        passes :func:`repro.core.dispatch.apply_guardrails` on the way
+        out: rows whose carried state or claimed-optimal answer went
+        non-finite return as ``NUMERICAL`` instead of carrying NaNs
+        forward.
+
         Parameters
         ----------
         batch : LPBatch
@@ -188,7 +200,7 @@ class SolveSession:
         base = (options or self.options).replace(
             max_iters=int(cap), compaction="off", first_cap=None, resume="scratch"
         )
-        sol, out_state = _dispatch.dispatch_round(
+        sol, out_state = _dispatch.dispatch_round_safe(
             batch,
             base,
             self.mesh,
@@ -198,6 +210,8 @@ class SolveSession:
             want_state=True,
             size_class=size_class,
         )
+        if base.guardrails:
+            sol = _dispatch.apply_guardrails(sol, out_state)
         self.stats.resumed += batch.batch
         return sol, out_state
 

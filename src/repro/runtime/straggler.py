@@ -65,7 +65,9 @@ def run_with_speculation(
     # NOTE: no context manager — a straggling original attempt must not
     # block completion once its speculative twin has delivered the result
     # (first write wins; LP solves are deterministic so both agree).
-    pool = ThreadPoolExecutor(max_workers=n_workers + 2)
+    pool = ThreadPoolExecutor(
+        max_workers=n_workers + 2, thread_name_prefix="lp-straggler"
+    )
     try:
         next_worker = 0
         for i, payload in enumerate(units):
@@ -100,7 +102,20 @@ def run_with_speculation(
                         next_worker += 1
                         respawned += 1
     finally:
-        pool.shutdown(wait=False)
+        # Return without blocking on a still-straggling loser attempt, but
+        # don't STRAND it either: `shutdown(wait=False)` alone leaks the
+        # worker threads (and whatever device buffers their closures pin)
+        # until interpreter exit — every call stacks another pool.  Cancel
+        # what never started, then hand the blocking join to a daemon
+        # reaper so the threads are actually collected once the last
+        # straggler finishes.
+        pool.shutdown(wait=False, cancel_futures=True)
+        threading.Thread(
+            target=pool.shutdown,
+            kwargs={"wait": True},
+            daemon=True,
+            name="lp-straggler-reaper",
+        ).start()
 
     ordered = [results[i] for i in range(len(units))]
     return ScheduleReport(ordered, respawned, time.perf_counter() - t_start)

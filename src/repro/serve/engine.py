@@ -39,16 +39,18 @@ from ..core import dispatch as _dispatch
 from ..core import pdhg as _pdhg
 from ..core.backends import SolveOptions, SolveStats, get_backend
 from ..core.bucketing import ShapeGrid, next_pow2, shape_class
-from ..core.lp import ITER_LIMIT, LPBatch, LPSolution
+from ..core.lp import ITER_LIMIT, NUMERICAL, LPBatch, LPSolution
 from ..core.problem import (
     Canonicalized,
     LPProblem,
     canonicalize,
     stack_problems,
     uncanonicalize,
+    validate_problem,
 )
 from ..core.session import SolveSession
 from ..models.model import Model
+from ..runtime import chaos as _chaos
 
 
 class Engine:
@@ -163,6 +165,17 @@ class LPEngine:
     ``crossover=True`` when callers need exact vertices from the
     first-order side).
 
+    **Degradation under faults**: every dispatch round runs through the
+    recovery wrapper (``core.dispatch.dispatch_round_safe``), so a
+    transient backend failure re-dispatches the same round from the same
+    carried state — on the routed twin backend where one exists — up to
+    ``options.retry_budget`` times.  A round that still fails retires
+    only ITS shape-class group through the dead-letter path (tickets
+    complete with ``NUMERICAL`` status, recorded in ``dead_letters`` and
+    ``stats.dead_lettered``); other groups keep advancing.  Rows whose
+    carried state goes non-finite are caught by the per-round guardrail
+    and retire individually as ``NUMERICAL``.
+
     Parameters
     ----------
     options : SolveOptions, optional
@@ -223,6 +236,11 @@ class LPEngine:
         self.starvation_rounds = int(starvation_rounds)
         self.clock = clock
         self.deadline_misses = 0
+        # Tickets retired through the dead-letter path: their group's
+        # dispatch round kept failing after every in-round retry
+        # (``options.retry_budget``) so the whole group was retired with
+        # NUMERICAL status rather than stalling the other shape classes.
+        self.dead_letters: List[int] = []
         self._pending: List[Tuple[int, LPProblem]] = []
         self._pending_ids: Set[int] = set()
         # ticket -> (deadline, priority, submitted_step); admission order
@@ -268,7 +286,27 @@ class LPEngine:
             cancels work.
         priority : int, default 0
             Tie-break among equal deadlines (larger wins).
+
+        Raises
+        ------
+        ValueError
+            Immediately — before a ticket is allocated — when the
+            problem payload contains NaN/Inf where finite data is
+            required (the message names the offending field) or when
+            ``deadline`` is NaN or negative.  Rejecting poisoned input
+            at the door is the cheap half of the numerical guardrails:
+            everything past this point may assume admission-time data
+            was finite.
         """
+        if isinstance(problem, LPProblem):
+            validate_problem(problem, where="submit: problem")
+        if deadline is not None:
+            deadline = float(deadline)
+            if np.isnan(deadline) or deadline < 0.0:
+                raise ValueError(
+                    "submit: deadline must be a non-negative clock time "
+                    f"(or None), got {deadline!r}"
+                )
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, problem))
@@ -468,13 +506,55 @@ class LPEngine:
             )
 
     def _advance(self, completed: List[int]) -> None:
-        """One capped dispatch round for every in-flight group."""
+        """One capped dispatch round for every in-flight group.
+
+        Faults are isolated per shape-class group: a round that still
+        fails after ``dispatch_round_safe``'s in-round retries (i.e. the
+        per-round ``retry_budget`` is exhausted) retires that ONE group
+        through the dead-letter path — its tickets complete with
+        ``NUMERICAL`` status and a NaN objective — while every other
+        group keeps advancing.  Non-transient errors (``ValueError`` and
+        friends: caller bugs, not infrastructure faults) propagate.
+        """
         for key in list(self._groups):
             g = self._groups[key]
             if g.tickets:
-                self._step_group(g, completed)
+                try:
+                    self._step_group(g, completed)
+                except Exception as exc:
+                    if not _chaos.is_transient(exc):
+                        raise
+                    self._dead_letter_group(key, g, completed)
+                    continue
             if not g.tickets:
                 del self._groups[key]
+
+    def _dead_letter_group(
+        self, key: Tuple, g: _Group, completed: List[int]
+    ) -> None:
+        """Retire a group whose round exhausted the retry budget.
+
+        ``_step_group`` is fault-atomic — it commits nothing until every
+        sub-dispatch of the round succeeds — so the group's bookkeeping
+        still reflects the last GOOD round here.  Each ticket finishes
+        with ``NUMERICAL`` status, a NaN objective, zero x and the
+        iteration count it had actually banked; the ticket numbers land
+        in ``engine.dead_letters`` and ``stats.dead_lettered`` so
+        callers can tell "solver gave up" from "solver answered".
+        """
+        dtype = g.batch.a.dtype
+        for i, t in enumerate(list(g.tickets)):
+            sol = LPSolution(
+                objective=jnp.full((1,), jnp.nan, dtype),
+                x=jnp.zeros((1, g.true_n[i]), dtype),
+                status=jnp.full((1,), NUMERICAL, jnp.int32),
+                iterations=jnp.asarray([g.done[i]], jnp.int32),
+            )
+            self.dead_letters.append(t)
+            self.stats.dead_lettered += 1
+            self._finish(t, sol, completed)
+        g.tickets = []
+        self._groups.pop(key, None)
 
     def _step_group(self, g: _Group, completed: List[int]) -> None:
         """Advance one group by one round; retire the rows that finished.
@@ -485,12 +565,21 @@ class LPEngine:
         quantum``) and each value is one pow-2-padded resume dispatch —
         budgets sum exactly to ``full_cap`` per LP, never overshooting,
         which is what keeps the replay bit-identical to one-shot.
+
+        The round is fault-atomic: per-row ``done``/``remaining`` deltas
+        accumulate in locals and commit only after every sub-dispatch of
+        the round succeeded.  If any dispatch escapes the retry wrapper,
+        the group is exactly as it was before the round — same carried
+        state, same budgets — which is what lets ``_advance`` either
+        retry the group next step or dead-letter it with honest
+        bookkeeping.
         """
         nrows = len(g.tickets)
         incs = np.minimum(g.quantum, np.asarray(g.remaining, np.int64))
         status = np.empty(nrows, np.int32)
         obj = jnp.zeros((nrows,), g.batch.a.dtype)
         x = jnp.zeros((nrows, g.batch.n), g.batch.a.dtype)
+        done_inc = np.zeros(nrows, np.int64)
         new_state = g.state
         for v in sorted(set(incs.tolist())):
             rows = np.nonzero(incs == v)[0]
@@ -509,10 +598,11 @@ class LPEngine:
             new_state = jax.tree_util.tree_map(
                 lambda full, part: full.at[ridx].set(part), new_state, part_state
             )
-            part_iters = np.asarray(sol.iterations)
-            for j, r in enumerate(rows):
-                g.done[r] += int(part_iters[j])
-                g.remaining[r] -= int(v)
+            done_inc[rows] = np.asarray(sol.iterations)
+        # Every sub-dispatch succeeded: commit the round's bookkeeping.
+        for i in range(nrows):
+            g.done[i] += int(done_inc[i])
+            g.remaining[i] -= int(incs[i])
         keep = [
             i for i in range(nrows)
             if status[i] == ITER_LIMIT and g.remaining[i] > 0

@@ -1,0 +1,108 @@
+"""Unit tests for the speculative straggler scheduler (runtime/straggler.py).
+
+The scheduler is pure host-side thread logic, so it is tested by
+injecting artificial per-unit delays: a unit whose FIRST attempt sleeps
+far past the deadline must be speculatively re-dispatched and the batch
+must complete at the fast attempt's pace, with correct results either
+way (first write wins; the work function is deterministic).
+"""
+
+import threading
+import time
+
+from repro.runtime.straggler import run_with_speculation
+
+
+def _wait_for_thread_cleanup(prefix="lp-straggler", timeout=10.0):
+    """Poll until no thread with the given name prefix remains."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if not [
+            t for t in threading.enumerate() if t.name.startswith(prefix)
+        ]:
+            return True
+        time.sleep(0.02)
+    return False
+
+
+def test_results_correct_without_stragglers():
+    report = run_with_speculation(
+        list(range(6)), lambda payload, worker: payload * 2, n_workers=3
+    )
+    assert [r.value for r in report.results] == [0, 2, 4, 6, 8, 10]
+    assert [r.unit for r in report.results] == list(range(6))
+    assert report.respawned == 0
+
+
+def test_straggler_is_respawned_and_result_correct():
+    calls = {}
+    lock = threading.Lock()
+
+    def solve(payload, worker):
+        with lock:
+            first = payload not in calls
+            calls[payload] = calls.get(payload, 0) + 1
+        # Unit 3's FIRST attempt stalls; its speculative twin is fast.
+        time.sleep(0.6 if (payload == 3 and first) else 0.02)
+        return payload * 10
+
+    report = run_with_speculation(
+        list(range(6)),
+        solve,
+        n_workers=6,
+        alpha=3.0,
+        min_done_for_deadline=2,
+        poll=0.005,
+    )
+    assert [r.value for r in report.results] == [i * 10 for i in range(6)]
+    assert report.respawned >= 1
+    assert calls[3] >= 2  # the straggler really was re-dispatched
+    # The batch finished at the twin's pace, not the straggler's... with
+    # generous slack for a loaded CI host.
+    assert report.wall_time < 0.6 + 0.5
+
+
+def test_max_speculative_zero_disables_respawn():
+    def solve(payload, worker):
+        time.sleep(0.15 if payload == 3 else 0.01)
+        return payload
+
+    report = run_with_speculation(
+        list(range(6)),
+        solve,
+        n_workers=6,
+        alpha=2.0,
+        min_done_for_deadline=2,
+        poll=0.005,
+        max_speculative=0,
+    )
+    assert report.respawned == 0
+    assert [r.value for r in report.results] == list(range(6))
+
+
+def test_no_thread_leak_after_return():
+    """The pool's threads must be collected, not stranded for the process
+    lifetime — ``shutdown(wait=False)`` alone leaks one pool per call."""
+    assert _wait_for_thread_cleanup(), "leftover pools from earlier tests"
+
+    def solve(payload, worker):
+        time.sleep(0.25 if payload == 0 else 0.01)
+        return payload
+
+    for _ in range(3):
+        run_with_speculation(
+            list(range(4)), solve, n_workers=4, poll=0.005
+        )
+    assert _wait_for_thread_cleanup(), (
+        "lp-straggler threads still alive after their stragglers finished"
+    )
+
+
+def test_delay_injected_report_fields():
+    report = run_with_speculation(
+        [0, 1], lambda p, w: p, n_workers=2
+    )
+    assert report.wall_time >= 0.0
+    for r in report.results:
+        assert r.elapsed >= 0.0
+        assert isinstance(r.speculative, bool)

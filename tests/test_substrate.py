@@ -83,6 +83,50 @@ def test_checkpoint_async_and_gc(tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 4
 
 
+def test_checkpoint_torn_write_is_ignored(tmp_path):
+    """A tmp dir whose rename never happened must not be restorable.
+
+    ``save`` writes to ``step_X.tmp`` then renames; a job killed between
+    the two leaves only the tmp dir, and ``latest_step`` must skip it —
+    both on the LATEST fast path and the fallback scan.
+    """
+    tree = {"x": jnp.arange(4, dtype=jnp.float32)}
+    # Torn write with NO complete checkpoint: nothing to restore.
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ckpt.latest_step(str(tmp_path)) is None
+    # A complete earlier step + a newer torn one: the complete step wins.
+    ckpt.save(str(tmp_path), 3, tree)
+    os.makedirs(tmp_path / "step_00000007.tmp", exist_ok=True)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_latest_pointer_stale_falls_back_to_scan(tmp_path):
+    """LATEST naming a missing/incomplete dir → newest COMPLETE step."""
+    tree = {"x": jnp.zeros((2,))}
+    ckpt.save(str(tmp_path), 1, tree)
+    ckpt.save(str(tmp_path), 2, tree)
+    # Crash after renaming step 5's dir but before its payload existed:
+    # a renamed-but-empty dir must not be trusted either.
+    os.makedirs(tmp_path / "step_00000005")
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("step_00000009")  # pointer to a dir that never landed
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    out = ckpt.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.zeros((2,)))
+    # No LATEST at all: same fallback.
+    os.remove(tmp_path / "LATEST")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+
+def test_checkpoint_close_is_idempotent(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    w.submit(1, {"x": jnp.zeros((2,))})
+    w.wait()
+    w.close()
+    w.close()  # second close: no deadlock, no error
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
 def test_checkpoint_elastic_restore_to_new_sharding(tmp_path):
     """Save unsharded, restore with an explicit (1-device) sharding."""
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
