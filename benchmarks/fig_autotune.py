@@ -1,0 +1,184 @@
+"""Autotuner end-to-end benchmark -> BENCH_autotune.json.
+
+The claim behind ``runtime/autotune.py`` (ISSUE 10): the cost-model
+autotuner's pick must track the hand-measured best config of each shape
+class — never a user's unlucky pin.  For every (m = n, batch) grid
+point, drawn from the BENCH_memory smoke sizes (below the routing
+frontier, where dense vs compact layout is the contest) and the
+BENCH_frontier sizes (at/above it, where the contest is pdhg vs a naive
+simplex pin), this benchmark:
+
+1. times every HAND-PICKED config through the public ``repro.solve``
+   entry point with the tuner off — the configs a user could pin,
+   including the wrong-side-of-the-frontier one (``pdhg`` below, the
+   simplex twins above);
+2. cold-tunes the shape class with ``autotune="trial"`` against a
+   private cache file (micro-trial batch = the grid batch class, so the
+   trial measures the class it certifies);
+3. scores the tuner's pick AT the hand-measured time of that config —
+   the pick and the hand measurements come from the same table, so
+   "autotuned within 5% of best" is a statement about WHICH config won,
+   not about timing jitter between two runs of the same config;
+4. re-resolves every grid point through a FRESH tuner on the now-warm
+   cache and records its micro-trial count, which must be zero — the
+   steady-state (warm process) cost of the tuner is a JSON read.
+
+Writes ``BENCH_autotune.json`` next to the repo root (or $BENCH_DIR);
+the tuning cache lands beside it as ``BENCH_autotune_cache.json`` and is
+recreated cold on every run.  ``BENCH_SMOKE=1`` trims the grid so the CI
+bench-smoke job can assert "autotuned >= 0.95x best, strictly beats
+worst, zero warm trials" in about a minute.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .common import emit, time_fn
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _hand_options(size: int, frontier: int) -> dict:
+    """The pinnable configs a user might hand-pick for this shape."""
+    from repro import SolveOptions
+
+    if size >= frontier:
+        # uncapped dense simplex at m = n = 500 is minutes of wall clock
+        # for the same verdict; one simplex twin is enough to lose to
+        return {
+            "xla/compact": SolveOptions(
+                backend="xla", layout="compact", autotune="off"
+            ),
+            "pdhg": SolveOptions(backend="pdhg", autotune="off"),
+        }
+    return {
+        "xla/dense": SolveOptions(backend="xla", layout="dense", autotune="off"),
+        "xla/compact": SolveOptions(
+            backend="xla", layout="compact", autotune="off"
+        ),
+        "pdhg": SolveOptions(backend="pdhg", autotune="off"),
+    }
+
+
+def _pick_label(resolved) -> str:
+    if resolved.backend in ("xla", "pallas"):
+        return f"{resolved.backend}/{resolved.effective_layout}"
+    return resolved.backend
+
+
+def run(full: bool = False) -> None:
+    import repro
+    from repro import SolveOptions
+    from repro.core import backends, dispatch, lp
+    from repro.runtime import autotune
+
+    rng = np.random.default_rng(515)
+    if _smoke():
+        grid = [(5, 64), (28, 32), (500, 2)]
+    elif full:
+        grid = [(5, 512), (28, 256), (100, 64), (200, 16), (500, 4)]
+    else:
+        grid = [(5, 512), (28, 256), (100, 64), (500, 4)]
+
+    out_dir = os.environ.get(
+        "BENCH_DIR", os.path.join(os.path.dirname(__file__), "..")
+    )
+    cache_path = os.path.abspath(
+        os.path.join(out_dir, "BENCH_autotune_cache.json")
+    )
+    if os.path.exists(cache_path):
+        os.remove(cache_path)  # every run starts from a cold cache
+
+    frontier = backends.DEFAULT_ROUTE_FRONTIER
+    rows = []
+    try:
+        for size, bsz in grid:
+            batch = lp.random_lp_batch(rng, bsz, size, size, feasible_start=True)
+
+            def solve_with(opts):
+                return repro.solve(batch, opts)
+
+            hand = {
+                name: time_fn(solve_with, opts)
+                for name, opts in _hand_options(size, frontier).items()
+            }
+            best_name = min(hand, key=hand.get)
+            worst_name = max(hand, key=hand.get)
+
+            # cold tune: private cache, micro-trials on this batch class
+            tuner = autotune.reset(cache_path=cache_path, trial_batch=bsz)
+            resolved = dispatch.resolve_backend(
+                size,
+                size,
+                batch.a.dtype,
+                SolveOptions(backend="auto", autotune="trial"),
+                batch=bsz,
+            )
+            picked = _pick_label(resolved)
+            autotuned_s = hand.get(picked)
+            if autotuned_s is None:  # pick outside the hand set (e.g. TPU)
+                autotuned_s = time_fn(
+                    solve_with, resolved.replace(autotune="off")
+                )
+            row = {
+                "m": size,
+                "n": size,
+                "batch": bsz,
+                "hand_s": hand,
+                "best": best_name,
+                "best_s": hand[best_name],
+                "worst": worst_name,
+                "worst_s": hand[worst_name],
+                "autotuned": picked,
+                "autotuned_s": autotuned_s,
+                "ratio_vs_best": autotuned_s / hand[best_name],
+                "beats_worst": autotuned_s < hand[worst_name],
+                "trials_cold": tuner.trials_run,
+            }
+            rows.append(row)
+            emit(
+                f"autotune_m{size}_b{bsz}",
+                autotuned_s,
+                f"picked {picked} ({row['ratio_vs_best']:.3f}x best "
+                f"{best_name}), worst {worst_name} "
+                f"{hand[worst_name] / autotuned_s:.1f}x slower, "
+                f"{tuner.trials_run} cold trials",
+            )
+
+        # a "second process": fresh tuner, warm cache, zero micro-trials
+        warm = autotune.reset(cache_path=cache_path)
+        warm_opts = SolveOptions(backend="auto", autotune="trial")
+        for row in rows:
+            resolved = dispatch.resolve_backend(
+                row["m"],
+                row["n"],
+                np.float32,
+                warm_opts,
+                batch=row["batch"],
+            )
+            row["warm_pick"] = _pick_label(resolved)
+        warm_trials = warm.trials_run
+        emit("autotune_warm", 0.0, f"{warm_trials} micro-trials on warm cache")
+    finally:
+        autotune._TUNER = None  # later benchmarks get the default tuner
+
+    results = {
+        "route_frontier": frontier,
+        "cache_path": cache_path,
+        "warm_trials": warm_trials,
+        "rows": rows,
+    }
+    path = os.path.abspath(os.path.join(out_dir, "BENCH_autotune.json"))
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

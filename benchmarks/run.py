@@ -15,6 +15,7 @@ from . import (
     fig8_feasible,
     fig9_infeasible,
     fig10_cpu_threads,
+    fig_autotune,
     fig_compaction,
     fig_dispatch,
     fig_faults,
@@ -36,6 +37,7 @@ BENCHES = {
     "fig10": fig10_cpu_threads.run,
     "table1": table1_hyperbox.run,
     "table2": table2_reach.run,
+    "autotune": fig_autotune.run,
     "compaction": fig_compaction.run,
     "dispatch": fig_dispatch.run,
     "faults": fig_faults.run,

@@ -26,8 +26,10 @@ from .core.lp import LPBatch, LPSolution, ResumeState, SharedLPBatch
 from .core.problem import LPProblem
 from .core.session import SolveSession
 from .core.tableau import TableauSpec
+from .runtime import autotune
 
 __all__ = [
+    "autotune",
     "solve",
     "solve_hyperbox",
     "LPProblem",

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -59,6 +59,9 @@ COMPACTION_MODES = ("off", "chunked", "every_k")
 
 #: Valid values of :attr:`SolveOptions.resume`.
 RESUME_MODES = ("scratch", "basis")
+
+#: Valid ``SolveOptions.autotune`` modes (see ``runtime/autotune.py``).
+AUTOTUNE_MODES = ("off", "predict", "trial")
 
 #: Backends that consume :class:`~repro.core.lp.SharedLPBatch` natively —
 #: one ``(m, n)`` constraint matrix read-shared by every LP in the batch,
@@ -165,9 +168,13 @@ class SolveOptions:
         compiled executable.  False re-specializes the executable on each
         concrete cap — the pre-compile-once behavior, kept as a benchmark
         baseline (``benchmarks/fig_dispatch.py``).
-    layout : str, default "compact"
+    layout : str, optional
         Tableau storage layout (``core/tableau.py``):
 
+        * ``None`` (default) — let the resolution path pick: the
+          autotuner (``runtime/autotune.py``) when ``autotune`` is
+          active, else :data:`DEFAULT_LAYOUT`.  Consumers read the
+          concrete value via :attr:`effective_layout`.
         * ``"compact"`` — the artificial block is implicit (basis IDs
           only); ``q = 1 + n + m`` columns.  ~25–33% less tableau
           memory and pivot-update work on square LPs, larger Pallas
@@ -241,6 +248,32 @@ class SolveOptions:
         ``alpha * median(done chunk times)`` is speculatively re-executed
         — first result wins (solves are deterministic, so twins agree).
         Single-chunk and mesh-sharded rounds ignore the knob.
+    tile_b : int, optional
+        Pallas batch tile override for the kernel backends.  None
+        (default) defers to the tuned/heuristic tile
+        (``kernels/ops.py:auto_tile_b``); the XLA drivers ignore the
+        knob.  The tile never changes per-LP results — only how many
+        LPs share one kernel grid step.
+    autotune : str, default "predict"
+        How ``backend="auto"`` / ``layout=None`` / ``tile_b=None`` gaps
+        are filled (``runtime/autotune.py``):
+
+        * ``"predict"`` — rank feasible candidate configs by the
+          analytic roofline cost model and take the cheapest.  Pure:
+          no disk IO, no extra compiles; reproduces the static routing
+          table exactly.
+        * ``"trial"`` — additionally confirm the predicted top-k by
+          timed micro-solves and persist the measured winner in the
+          on-disk tuning cache (``$REPRO_AUTOTUNE_CACHE``), so warm
+          processes resolve with zero micro-trials.
+        * ``"off"`` — the static routing table alone
+          (:func:`route_shape` + :data:`DEFAULT_LAYOUT` + the VMEM tile
+          heuristic); the tuner is never consulted.
+
+        Whatever the mode, explicit pins (a concrete ``backend``, a
+        non-None ``layout``/``tile_b``) always win, and the tuner only
+        ever changes WHICH config runs — never the per-LP results a
+        given config produces.
     """
 
     backend: str = "xla"
@@ -254,7 +287,7 @@ class SolveOptions:
     compact_every: int = 0
     resume: str = "scratch"
     dynamic_caps: bool = True
-    layout: str = DEFAULT_LAYOUT
+    layout: Optional[str] = None
     seed: int = 0
     pdhg_tol: float = 0.0
     pdhg_restart: int = 0
@@ -265,6 +298,8 @@ class SolveOptions:
     retry_budget: int = 2
     retry_backoff: float = 0.05
     speculation: bool = False
+    tile_b: Optional[int] = None
+    autotune: str = "predict"
 
     def __post_init__(self):
         # Validate here (not in the dispatch layer) so every route —
@@ -285,11 +320,18 @@ class SolveOptions:
                 f"unknown pivot rule {self.rule!r}; "
                 f"expected one of {_engine.RULES}"
             )
-        if self.layout not in LAYOUTS:
+        if self.layout is not None and self.layout not in LAYOUTS:
             raise ValueError(
                 f"unknown tableau layout {self.layout!r}; "
-                f"expected one of {LAYOUTS}"
+                f"expected one of {LAYOUTS} (or None to auto-resolve)"
             )
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"unknown autotune mode {self.autotune!r}; "
+                f"expected one of {AUTOTUNE_MODES}"
+            )
+        if self.tile_b is not None and self.tile_b < 1:
+            raise ValueError(f"tile_b must be >= 1, got {self.tile_b!r}")
         if self.pdhg_tol < 0.0:
             raise ValueError(f"pdhg_tol must be >= 0, got {self.pdhg_tol!r}")
         if self.pdhg_restart < 0:
@@ -318,11 +360,11 @@ class SolveOptions:
                     "(a first-order method performs no pivots); leave rule "
                     "at its default 'lpc'"
                 )
-            if self.layout != DEFAULT_LAYOUT:
+            if self.layout not in (None, DEFAULT_LAYOUT):
                 raise ValueError(
                     f"layout={self.layout!r} is meaningless for "
                     "backend='pdhg' (a first-order method stores no "
-                    f"tableau); leave layout at its default "
+                    f"tableau); leave layout unset or at its default "
                     f"{DEFAULT_LAYOUT!r}"
                 )
         if self.crossover and self.backend not in ("pdhg", "auto"):
@@ -331,6 +373,18 @@ class SolveOptions:
                 "exact vertex and requires backend='pdhg' or 'auto'; "
                 f"backend={self.backend!r} already returns vertices"
             )
+
+    @property
+    def effective_layout(self) -> str:
+        """The concrete tableau layout consumers should build with.
+
+        ``layout`` when pinned, else :data:`DEFAULT_LAYOUT` — the value
+        an unresolved ``layout=None`` means everywhere a tableau is
+        actually constructed (the autotuner fills the field with its
+        choice during resolution, so a resolved options record only
+        falls back here when tuning is off).
+        """
+        return self.layout if self.layout is not None else DEFAULT_LAYOUT
 
     def replace(self, **kw) -> "SolveOptions":
         """Return a copy with the given fields replaced.
@@ -423,6 +477,16 @@ class SolveStats:
         Injected chaos faults (``runtime/chaos.py``) observed by the
         recovery path — raised faults that were caught plus state rows
         poisoned.  Zero outside fault-injection runs.
+    autotuned : int
+        Options resolutions the cost-model autotuner performed
+        (``runtime/autotune.py``) — one per ``resolve_backend`` call
+        with ``autotune`` active, whatever knobs it ended up filling.
+    autotune_log : list of dict
+        One record per autotuned resolution: the shape class, the chosen
+        ``backend``/``layout``/``tile_b``, ``predicted_s`` vs
+        ``measured_s`` cost, and the decision ``source``
+        (``"predicted"``/``"measured"``/``"cache"``) — the
+        predicted-versus-measured audit trail.
     """
 
     lps: int = 0
@@ -439,6 +503,8 @@ class SolveStats:
     quarantined: int = 0
     dead_lettered: int = 0
     faults_injected: int = 0
+    autotuned: int = 0
+    autotune_log: List[dict] = dataclasses.field(default_factory=list)
 
     def record_tableau(self, nbytes: int) -> None:
         """Fold one dispatch round's tableau footprint into the peak.
@@ -662,6 +728,18 @@ def route_shape(
     stored problem data is O(m) amortized, so densifying past the
     frontier would forfeit exactly the memory win the caller asked for.
     """
+    if options is not None and options.autotune != "off":
+        # Tuner-backed routing (the default): same candidate space, same
+        # frontier/VMEM constraints, but ranked by the cost model — and a
+        # measured micro-trial winner (autotune="trial") can overrule the
+        # static table.  The caller's pinned backend is deliberately NOT
+        # forwarded: route_shape asks where a shape SHOULD go (e.g. the
+        # VMEM fallback rerouting an over-budget pallas pin).
+        from ..runtime import autotune as _autotune
+
+        return _autotune.choose_backend(
+            m, n, dtype, options, shared=shared, layout=layout
+        )
     if shared:
         from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
@@ -675,7 +753,9 @@ def route_shape(
         return "pdhg"
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
-    layout = layout or (options.layout if options is not None else DEFAULT_LAYOUT)
+    layout = layout or (
+        options.effective_layout if options is not None else DEFAULT_LAYOUT
+    )
     if kernel_ops._on_tpu() and kernel_ops.fits_vmem(
         m, n, dtype, layout, want_state=True
     ):
@@ -703,7 +783,7 @@ def _xla_solve(
         basis0=batch.basis0,
         want_state=want_state,
         dynamic_cap=options.dynamic_caps,
-        layout=options.layout,
+        layout=options.effective_layout,
     )
 
 
@@ -728,7 +808,8 @@ def _xla_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
 
 def _xla_init(batch: LPBatch, options: SolveOptions) -> ResumeState:
     return _simplex.init_batched(
-        batch.a, batch.b, batch.c, basis0=batch.basis0, layout=options.layout
+        batch.a, batch.b, batch.c, basis0=batch.basis0,
+        layout=options.effective_layout,
     )
 
 
@@ -742,15 +823,36 @@ def _xla_hyperbox(lo, hi, directions, options: SolveOptions) -> LPSolution:
 # ``(path, m, n, dtype, ...)`` tuples; values keep the emitted message so
 # tests can assert on what was (or wasn't) reported.  Replaces the
 # per-path ad-hoc ``set`` registries that each fallback used to grow.
+# BOUNDED at :data:`_WARN_ONCE_MAX` entries (FIFO eviction): a process
+# solving an unbounded stream of distinct shapes — the serve loop, a
+# long sweep — must not grow a per-shape table forever.  Evicting an old
+# key merely re-arms its warning, which is harmless.
 _WARN_ONCE: Dict[Tuple, str] = {}
+
+#: Capacity of the warn-once table; far above any test or benchmark's
+#: distinct-shape count, far below anything that could matter for RSS.
+_WARN_ONCE_MAX = 256
 
 
 def _warn_once(key: Tuple, message: str, stacklevel: int = 4) -> None:
     """Emit ``message`` as a UserWarning once per ``key``."""
     if key in _WARN_ONCE:
         return
+    while len(_WARN_ONCE) >= _WARN_ONCE_MAX:
+        _WARN_ONCE.pop(next(iter(_WARN_ONCE)))  # FIFO: dicts keep order
     _WARN_ONCE[key] = message
     warnings.warn(message, stacklevel=stacklevel)
+
+
+def reset_warnings() -> None:
+    """Clear the warn-once table so every fallback warning re-arms.
+
+    The supported test/REPL hook for re-observing a routing-fallback
+    warning (``pytest.warns`` blocks around a shape that already warned
+    earlier in the process) — clears only warning dedup state, never
+    routing or compile caches.
+    """
+    _WARN_ONCE.clear()
 
 
 #: Fault-recovery routing: the backend a faulted dispatch round retries
@@ -804,7 +906,7 @@ def _pallas_vmem_fallback(
     """
     from ..kernels import ops as kernel_ops  # lazy: pulls in Pallas
 
-    layout = layout or options.layout
+    layout = layout or options.effective_layout
     # want_state=True is the conservative (largest-footprint) estimate, so
     # the start/resume rounds of a basis-resumed solve route consistently.
     if kernel_ops.fits_vmem(m, n, dtype, layout, want_state=True):
@@ -855,7 +957,8 @@ def _pallas_solve(
         basis0=batch.basis0,
         want_state=want_state,
         dynamic_cap=options.dynamic_caps,
-        layout=options.layout,
+        layout=options.effective_layout,
+        tile_b=options.tile_b,
     )
 
 
@@ -892,6 +995,7 @@ def _pallas_resume(batch: LPBatch, state: ResumeState, options: SolveOptions):
         max_iters=options.max_iters,
         seed=options.seed,
         tol=options.tolerance,
+        tile_b=options.tile_b,
         want_state=True,
         dynamic_cap=options.dynamic_caps,
     )
@@ -989,7 +1093,9 @@ def _pdhg_solve(
     if _pdhg_use_kernel(batch.m, batch.n, batch.a.dtype):
         from ..kernels import ops as kernel_ops
 
-        return kernel_ops.pdhg_solve(batch.a, batch.b, batch.c, **kw)
+        return kernel_ops.pdhg_solve(
+            batch.a, batch.b, batch.c, tile_b=options.tile_b, **kw
+        )
     return _pdhg.solve_batched(batch.a, batch.b, batch.c, **kw)
 
 
@@ -1012,7 +1118,9 @@ def _pdhg_resume(
     if _pdhg_use_kernel(batch.m, batch.n, batch.a.dtype):
         from ..kernels import ops as kernel_ops
 
-        return kernel_ops.pdhg_resume(batch.a, batch.b, batch.c, state, **kw)
+        return kernel_ops.pdhg_resume(
+            batch.a, batch.b, batch.c, state, tile_b=options.tile_b, **kw
+        )
     return _pdhg.resume_batched(batch.a, batch.b, batch.c, state, **kw)
 
 
@@ -1130,6 +1238,7 @@ def _pallas_shared_solve(
         max_iters=options.max_iters,
         seed=options.seed,
         tol=options.tolerance,
+        tile_b=options.tile_b,
         basis0=batch.basis0,
         want_state=want_state,
         dynamic_cap=options.dynamic_caps,
@@ -1157,6 +1266,7 @@ def _pallas_shared_resume(
         max_iters=options.max_iters,
         seed=options.seed,
         tol=options.tolerance,
+        tile_b=options.tile_b,
         want_state=True,
         dynamic_cap=options.dynamic_caps,
     )

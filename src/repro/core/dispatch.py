@@ -106,7 +106,7 @@ from .lp import (
     SharedLPBatch,
     auto_cap,
 )
-from .tableau import DEFAULT_LAYOUT, TableauSpec
+from .tableau import TableauSpec
 
 #: Ceiling on the fault-recovery backoff sleep (seconds): retry k of a
 #: round sleeps ``min(retry_backoff * 2**k, RETRY_BACKOFF_CAP)``.
@@ -370,19 +370,33 @@ def _round_plan(
 
 
 def resolve_backend(
-    m: int, n: int, dtype, options: SolveOptions, shared: bool = False
+    m: int,
+    n: int,
+    dtype,
+    options: SolveOptions,
+    shared: bool = False,
+    batch: Optional[int] = None,
+    stats: Optional[SolveStats] = None,
 ) -> SolveOptions:
-    """Resolve ``backend="auto"`` to a concrete backend for one shape.
+    """Resolve the open config knobs to concrete values for one shape.
 
     The single implementation shared by :func:`solve_canonical` (which
     resolves ONCE up front, so every round, chunk, and resume of a solve
     runs the same backend — mixing drivers mid-solve would break the
     resume-state contract) and the continuous-batching serve loop (which
     resolves once per shape class at admission, for the same reason).
-    Concrete backends pass through unchanged.  A shape the table routes
-    to ``pdhg`` also resets ``rule``/``layout`` to their defaults:
-    those knobs configure the simplex leg and are rejected by validation
-    on the first-order side.
+
+    With ``options.autotune`` active (the default ``"predict"``), the
+    cost-model autotuner (``runtime/autotune.py``) fills EVERY open knob
+    — ``backend="auto"``, ``layout=None``, ``tile_b=None`` — and records
+    the decision into ``stats`` (``SolveStats.autotuned`` /
+    ``autotune_log``); ``batch`` keys the decision's shape class.  With
+    ``autotune="off"`` only ``backend="auto"`` is resolved, through the
+    static routing table, and concrete backends pass through unchanged.
+    Either way explicit pins always survive, and a shape routed to
+    ``pdhg`` resets ``rule``/``layout`` to their defaults: those knobs
+    configure the simplex leg and are rejected by validation on the
+    first-order side.
 
     ``shared=True`` resolves for a :class:`~repro.core.lp.SharedLPBatch`:
     ``"auto"`` routes through the shared leg of the table and the
@@ -394,20 +408,27 @@ def resolve_backend(
     """
     name = options.backend
     if shared:
-        if name == "auto":
-            name = route_shape(m, n, dtype, options, shared=True)
-        elif name == "xla":
-            name = "xla-shared"
+        if name == "xla":
+            options = options.replace(backend="xla-shared")
         elif name == "pallas":
-            name = "pallas-shared"
-        if name == options.backend:
-            return options
-        return options.replace(backend=name)
-    if name != "auto":
+            options = options.replace(backend="pallas-shared")
+    if options.autotune != "off":
+        from ..runtime import autotune as _autotune
+
+        return _autotune.resolve(
+            m, n, dtype, options, shared=shared, batch=batch, stats=stats
+        )
+    if shared:
+        if options.backend == "auto":
+            return options.replace(
+                backend=route_shape(m, n, dtype, options, shared=True)
+            )
+        return options
+    if options.backend != "auto":
         return options
     resolved = route_shape(m, n, dtype, options)
     if resolved == "pdhg":
-        return options.replace(backend=resolved, rule=LPC, layout=DEFAULT_LAYOUT)
+        return options.replace(backend=resolved, rule=LPC, layout=None)
     return options.replace(backend=resolved)
 
 
@@ -709,7 +730,8 @@ def solve_canonical(
         return empty_solution(batch.n, batch.a.dtype)
     shared = isinstance(batch, SharedLPBatch)
     options = resolve_backend(
-        batch.m, batch.n, batch.a.dtype, options, shared=shared
+        batch.m, batch.n, batch.a.dtype, options, shared=shared,
+        batch=batch.batch, stats=stats,
     )
     if shared and options.backend not in SHARED_BACKENDS:
         # An explicit non-shared backend (pdhg, reference, a plug-in) on a
@@ -882,7 +904,7 @@ def dispatch_round(
                 batch.m, batch.n, batch.a.dtype
             )
         else:
-            spec = TableauSpec(batch.m, batch.n, options.layout)
+            spec = TableauSpec(batch.m, batch.n, options.effective_layout)
             per_lp = spec.bytes_per_lp(batch.a.dtype)
         stats.record_tableau(min(chunk, bsz) * per_lp)
     if options.speculation and not axes and bsz > chunk:

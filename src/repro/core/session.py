@@ -28,7 +28,7 @@ shape class by construction.
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +78,11 @@ class SolveSession:
         self.mesh = mesh
         self.grid = grid
         self.stats = stats if stats is not None else SolveStats()
+        # Tuned-config pins: shape class -> resolved options.  A session
+        # pays the autotuner (cost-model ranking, and under
+        # autotune="trial" the micro-trials) ONCE per shape class; every
+        # later round/admission of that class reuses the pinned record.
+        self._pinned: Dict[tuple, SolveOptions] = {}
 
     def solve(
         self, problem: Union[LPProblem, LPBatch, Sequence[LPProblem]]
@@ -110,16 +115,31 @@ class SolveSession:
     # session's options/mesh/stats so its steady state stays observable
     # through the same compiles/cache_hits counters as flush-mode serving.
 
-    def resolve_options(self, m: int, n: int, dtype) -> SolveOptions:
-        """The pinned options with ``backend="auto"`` resolved for a shape.
+    def resolve_options(
+        self, m: int, n: int, dtype, batch: Optional[int] = None
+    ) -> SolveOptions:
+        """The pinned options with the open config knobs resolved for a shape.
 
         One resolution per canonical shape class, at admission — every
         subsequent round of that class runs the same concrete backend
         (mixing drivers mid-solve would break the resume-state contract).
+        The resolved record is memoized per shape class for the session's
+        lifetime, so the autotuner (``runtime/autotune.py``) prices —
+        and, in trial mode, micro-benchmarks — each class at most once
+        per session.
         """
         from . import dispatch as _dispatch
+        from .bucketing import next_pow2
 
-        return _dispatch.resolve_backend(m, n, dtype, self.options)
+        key = (m, n, np.dtype(dtype).name, next_pow2(batch) if batch else 0)
+        hit = self._pinned.get(key)
+        if hit is not None:
+            return hit
+        resolved = _dispatch.resolve_backend(
+            m, n, dtype, self.options, batch=batch, stats=self.stats
+        )
+        self._pinned[key] = resolved
+        return resolved
 
     def init_state(self, batch: LPBatch, options: Optional[SolveOptions] = None):
         """Iteration-0 resume state for a canonical batch (the splice input).
@@ -390,7 +410,7 @@ def sweep_problems(
         rule=options.rule,
         unroll=options.unroll,
         tol=tol,
-        layout=options.layout,
+        layout=options.effective_layout,
         maximize=template.maximize,
         split=template.split,
         row_lower=template.row_lower,

@@ -117,7 +117,19 @@ def auto_tile_b(
     run as one small tile rather than padding up to a full-size tile.
     Never returns less than 1 — un-fittable shapes are the backend
     router's problem (:func:`fits_vmem`), not the tiler's.
+
+    A MEASURED winning tile from the autotuner's cache
+    (``runtime/autotune.py:cached_tile_b``) overrides the heuristic when
+    one exists for this shape class — the tuner's lookup itself enforces
+    the same VMEM budget, so the override can never launch a tile the
+    heuristic would have rejected.  Predicted-only entries never pin a
+    tile (prediction reproduces this heuristic anyway).
     """
+    from ..runtime import autotune as _autotune  # lazy: avoid import cycle
+
+    tuned = _autotune.cached_tile_b(bsz, spec.m, spec.n, dtype, spec.layout)
+    if tuned is not None:
+        return tuned
     per_lp = kernel_vmem_bytes_per_lp(spec, dtype, want_state)
     budget = int(VMEM_BUDGET_BYTES * VMEM_TILE_FRACTION)
     fit = max(1, budget // max(per_lp, 1))

@@ -6,7 +6,12 @@ chunks are all scans — so flops and bytes are undercounted by the trip
 count (verified experimentally: a 10-iteration scanned matmul reports 1
 matmul of flops).  This module parses the post-SPMD HLO text, builds the
 computation call graph (while/call/fusion/conditional edges), recovers
-trip counts from loop-condition comparison constants, and accumulates:
+trip counts — from XLA's own ``known_trip_count`` annotation, from
+loop-condition comparison constants, from constants inside fusions the
+condition calls (optimized dumps fold ``iter < cap`` into a fusion
+body), or (when the bound itself rides the carry) by resolving the
+condition's ``get-tuple-element`` reads through the while init tuple
+back to scalar integer constants — and accumulates:
 
 * ``dot_flops``      — 2*M*N*K for every dot (+ convolutions), x trips.
 * ``traffic_bytes``  — an HBM-traffic model: for every top-level
@@ -19,8 +24,12 @@ trip counts from loop-condition comparison constants, and accumulates:
     all-to-all ~ out, collective-permute ~ out.
 
 All numbers are per-device (the partitioned module).  This is a static
-model — it is the dry-run "profile" that stands in for a real trace, per
-the roofline methodology in EXPERIMENTS.md.
+model — a dry-run "profile" that stands in for a real trace, in the same
+spirit as the analytic roofline (``repro/runtime/roofline.py``, printed
+by ``benchmarks/roofline.py``).  The cost-model autotuner
+(``repro/runtime/autotune.py:hlo_profile``) uses it to extract measured
+per-iteration ``dot_flops``/``traffic_bytes`` from a compiled solver by
+differencing two static iteration caps.
 """
 
 from __future__ import annotations
@@ -51,6 +60,9 @@ _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
 _TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GTE_INDEX_RE = re.compile(r"index=(\d+)")
+#: Scalar integer constants only — a loop bound is never a float/array.
+_INT_CONST_RE = re.compile(r"\s[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
 
 _SKIP_TRAFFIC_OPS = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
@@ -206,17 +218,111 @@ def _line_stats(line: str, symtab: Dict[str, str]) -> Tuple[float, float, Dict[s
     return flops, traffic, coll
 
 
+def _cond_tree_consts(cond_name: str, comps: Dict[str, List[str]]) -> List[int]:
+    """Integer constants in computations the loop condition calls.
+
+    Optimized dumps fold the ``iter < cap`` compare into a fusion: the
+    condition's root is ``fusion(...) calls=%fused_computation.N`` and
+    the cap constant lives in that body, not inline in the condition.
+    Walk the condition's callees (bounded depth) collecting scalar
+    integer constants; counters start at 0 so genuine caps self-select
+    via the positive filter at the call site.
+    """
+    out: List[int] = []
+    seen = {cond_name}
+    frontier = [cond_name]
+    for _ in range(3):
+        nxt: List[str] = []
+        for name in frontier:
+            for line in comps.get(name, []):
+                for callee in _CALL_ATTR_RE.findall(line):
+                    if callee in comps and callee not in seen:
+                        seen.add(callee)
+                        nxt.append(callee)
+                        out.extend(
+                            int(x)
+                            for body_line in comps[callee]
+                            for x in _INT_CONST_RE.findall(body_line)
+                        )
+        frontier = nxt
+    return out
+
+
+def _carried_bound_consts(
+    while_line: str, cond_lines: List[str], oplines: Dict[str, str]
+) -> List[int]:
+    """Loop bounds the optimizer hoisted into the while carry tuple.
+
+    jax's lowered ``while_loop`` caps end up as loop-invariant tuple
+    elements: the condition reads them back via ``get-tuple-element``
+    instead of comparing against an inline constant.  Resolve every
+    tuple index the condition reads through the while's init ``tuple``
+    op; the ones that land on scalar integer constants are bound
+    candidates (the iteration counter itself lands on carried state, so
+    it self-filters).
+    """
+    # take the LAST index= on each line: tuple-shape dumps embed
+    # /*index=N*/ element comments before the real trailing attribute
+    idxs = [
+        int(hits[-1])
+        for l in cond_lines
+        if " get-tuple-element(" in l
+        for hits in [_GTE_INDEX_RE.findall(l)]
+        if hits
+    ]
+    if not idxs:
+        return []
+    # the while's single operand is its init value (drop control attrs
+    # first: condition=/body= also match the operand-name pattern)
+    init_names = _OPERAND_RE.findall(while_line.split("condition=")[0])
+    init_line = oplines.get(init_names[-1], "") if init_names else ""
+    pos = init_line.find(" tuple(")
+    if pos < 0:
+        return []
+    args = init_line[pos + len(" tuple("):].split(", metadata=")[0]
+    elems = _OPERAND_RE.findall(args)
+    out = []
+    for k in idxs:
+        if k >= len(elems):
+            continue
+        # hop through value-preserving ops (copy/broadcast/convert): the
+        # optimizer wraps hoisted constants before tupling them in
+        line = oplines.get(elems[k], "")
+        for _ in range(4):
+            cm = _INT_CONST_RE.search(line)
+            if cm:
+                out.append(int(cm.group(1)))
+                break
+            op = re.search(r"\s(?:copy|broadcast|convert)\(", line)
+            if not op:
+                break
+            src = _OPERAND_RE.findall(line[op.end():])
+            if not src:
+                break
+            line = oplines.get(src[0], "")
+    return out
+
+
 def analyze(hlo: str) -> Dict[str, object]:
     comps, entry, fusion_bodies = _split_computations(hlo)
 
-    # symbol tables: instruction name -> output shape text (per computation,
-    # flattened globally — HLO names are unique within a module dump)
+    # symbol tables: instruction name -> output shape text, and -> the
+    # full defining line (per computation, flattened globally — HLO
+    # names are unique within a module dump)
     symtab: Dict[str, str] = {}
+    oplines: Dict[str, str] = {}
+    name_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
     for lines in comps.values():
         for line in lines:
             m = _OPLINE_RE.match(line)
             if m:
                 symtab[m.group(1)] = m.group(2)
+            nm = name_re.match(line)
+            if nm:
+                # permissive table (shape-comment tuples defeat the full
+                # op-line regex): every instruction by name, for the
+                # carried-bound trip resolver
+                oplines[nm.group(1)] = line
 
     # per-computation direct stats
     direct: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
@@ -251,11 +357,29 @@ def analyze(hlo: str) -> Dict[str, object]:
                         trip[mb.group(1)] = float(tc.group(1))
                     else:
                         cond_lines = comps.get(mc.group(1), [])
+                        # loop counters init at 0, so only positive
+                        # constants can be caps (trip 0 would wrongly
+                        # erase the whole body)
                         consts = [
                             int(x)
                             for l in cond_lines
                             for x in _COMPARE_CONST_RE.findall(l)
+                            if int(x) > 0
                         ]
+                        if not consts:
+                            consts = [
+                                x
+                                for x in _cond_tree_consts(mc.group(1), comps)
+                                if x > 0
+                            ]
+                        if not consts:
+                            consts = [
+                                x
+                                for x in _carried_bound_consts(
+                                    line, cond_lines, oplines
+                                )
+                                if x > 0
+                            ]
                         trip[mb.group(1)] = float(max(consts)) if consts else 1.0
             for n in names:
                 if n in comps and n != name:

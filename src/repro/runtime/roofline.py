@@ -1,0 +1,90 @@
+"""Analytic per-iteration roofline for the batched LP backends.
+
+Every backend in this repo is a lockstep iteration over per-LP state, so
+its steady-state speed is set by one number: the arithmetic intensity
+(FLOPs per HBM byte) of a single iteration.  This module writes down the
+iteration cost model for each storage layout —
+
+* **dense / compact tableau** (``core/tableau.py``): the pivot update
+  rewrites the whole (m+1, q) tableau every iteration.  FLOPs and bytes
+  are both O(m·q), so intensity is a small constant (~0.4 flop/byte):
+  firmly memory-bound, which is why the compact layout's 0.67x bytes is
+  a wall-clock win, not just a capacity win.
+* **pdhg** (``core/pdhg.py``): two matvecs against a per-LP ``A`` that
+  must stream from HBM each iteration — same constant-intensity regime.
+* **shared revised simplex** (``core/revised.py``): pricing reads the
+  ONE shared ``A`` per *tile* of LPs, so its O(m·n) bytes amortize over
+  ``tile_b`` LPs and the per-LP traffic collapses to the O(m²) basis
+  state.  Intensity grows with ``tile_b`` — the only backend whose
+  roofline position the batch size can move.
+
+Reference machine balance uses TPU v5e-class constants (197 TF/s peak,
+819 GB/s HBM => ~241 flop/byte); every layout sits far below it, so the
+roofline fraction column is ``intensity / balance`` — the ceiling on
+attainable peak-FLOP utilization.
+
+This model lives in the library (not under ``benchmarks/``) because it
+is the static feature source of the cost-model autotuner
+(``runtime/autotune.py``): candidate configs are ranked by the
+per-iteration FLOPs/bytes written down here before anything is timed.
+``benchmarks/roofline.py`` re-exports it for the printed table, and
+``benchmarks/fig_memory.py`` imports :func:`arithmetic_intensity` for
+the intensity column of ``BENCH_memory.json``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+#: Reference accelerator for the machine-balance line (per chip, f32-ish).
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+MACHINE_BALANCE = PEAK_FLOPS / HBM_BW
+
+SIZES = (5, 28, 100, 200, 500)
+
+KINDS = ("dense", "compact", "pdhg", "shared")
+
+
+def iteration_profile(
+    kind: str, m: int, n: int, tile_b: int = 1, dtype_bytes: int = 4
+) -> Dict[str, float]:
+    """FLOPs / HBM bytes / intensity for ONE lockstep iteration of one LP.
+
+    ``tile_b`` only matters for ``kind="shared"``: the shared ``A`` block
+    is fetched once per tile, so its bytes are divided by the tile size.
+    Byte counts are steady-state HBM traffic (state read + written each
+    iteration); FLOPs count multiply-adds as 2.
+    """
+    if kind in ("dense", "compact"):
+        q = 1 + n + (2 * m if kind == "dense" else m)
+        rows = m + 1
+        # pricing scan (1 pass), ratio column, rank-1 pivot update (2 ops/elem)
+        flops = 3.0 * rows * q
+        byts = 2.0 * rows * q * dtype_bytes  # tableau in + out
+    elif kind == "pdhg":
+        # x/y proximal steps: A x and A^T y matvecs + O(m + n) vector ops
+        flops = 4.0 * m * n + 8.0 * (m + n)
+        byts = (2.0 * m * n + 6.0 * (m + n)) * dtype_bytes  # A twice + vectors
+    elif kind == "shared":
+        # pricing w = c_B B^-1 (2m^2) + d = w.A (2mn) + ftran B^-1 a_e (2m^2)
+        # + rank-1 binv/xb update (2m^2)
+        flops = 2.0 * m * n + 6.0 * m * m
+        # A once per TILE (amortized), binv read + written, O(m+n) vectors
+        byts = (m * n / max(tile_b, 1) + 2.0 * m * m + 4.0 * (m + n)) * dtype_bytes
+    else:
+        raise ValueError(f"unknown kind {kind!r}; expected one of {KINDS}")
+    ai = flops / byts
+    return {
+        "flops": flops,
+        "bytes": byts,
+        "intensity": ai,
+        "roofline_fraction": ai / MACHINE_BALANCE,
+    }
+
+
+def arithmetic_intensity(
+    kind: str, m: int, n: int, tile_b: int = 1, dtype_bytes: int = 4
+) -> float:
+    """Just the flop/byte number (the BENCH_memory.json column)."""
+    return iteration_profile(kind, m, n, tile_b, dtype_bytes)["intensity"]

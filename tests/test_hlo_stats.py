@@ -1,0 +1,261 @@
+"""Direct unit tests for launch/hlo_stats.py loop-trip accounting.
+
+The module's whole reason to exist is that XLA's own cost analysis
+counts a ``while`` body once; these tests pin the trip-recovery rules on
+a handcrafted scanned-matmul HLO fixture — the exact pattern
+``runtime/autotune.py:hlo_profile`` differences to get per-iteration
+features — instead of relying on whatever a live compiler emits.
+"""
+
+import pytest
+
+from repro.launch import hlo_stats
+
+# One dot of (8,16) @ (16,4): 2 * 8*4 * 16 flops.
+DOT_FLOPS = 2.0 * 8 * 4 * 16
+
+TUP = "(s32[], f32[8,16], f32[16,4], f32[8,4])"
+
+
+def scanned_matmul(trips: int, known_trip_count: int = 0) -> str:
+    """A scanned-matmul module: while loop accumulating lhs @ rhs.
+
+    ``trips`` is the loop-condition comparison constant;
+    ``known_trip_count`` > 0 additionally stamps XLA's own annotation on
+    the while line (which must win over the condition constant).
+    """
+    backend_config = (
+        ', backend_config={"known_trip_count":{"n":"%d"}}' % known_trip_count
+        if known_trip_count
+        else ""
+    )
+    return f"""HloModule scanned_matmul
+
+%body ({TUP}) -> {TUP} {{
+  %p0 = {TUP} parameter(0)
+  %iter = s32[] get-tuple-element({TUP} %p0), index=0
+  %lhs = f32[8,16] get-tuple-element({TUP} %p0), index=1
+  %rhs = f32[16,4] get-tuple-element({TUP} %p0), index=2
+  %acc = f32[8,4] get-tuple-element({TUP} %p0), index=3
+  %prod = f32[8,4] dot(f32[8,16] %lhs, f32[16,4] %rhs), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %sum = f32[8,4] add(f32[8,4] %acc, f32[8,4] %prod)
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %iter, s32[] %one)
+  ROOT %out = {TUP} tuple(s32[] %next, f32[8,16] %lhs, f32[16,4] %rhs, f32[8,4] %sum)
+}}
+
+%cond ({TUP}) -> pred[] {{
+  %cp0 = {TUP} parameter(0)
+  %citer = s32[] get-tuple-element({TUP} %cp0), index=0
+  %limit = s32[] constant({trips})
+  ROOT %lt = pred[] compare(s32[] %citer, s32[] %limit), direction=LT
+}}
+
+ENTRY %main (f32[8,16], f32[16,4]) -> f32[8,4] {{
+  %a = f32[8,16] parameter(0)
+  %w = f32[16,4] parameter(1)
+  %zero = s32[] constant(0)
+  %zacc = f32[8,4] constant(0)
+  %init = {TUP} tuple(s32[] %zero, f32[8,16] %a, f32[16,4] %w, f32[8,4] %zacc)
+  %loop = {TUP} while({TUP} %init), condition=%cond, body=%body{backend_config}
+  ROOT %result = f32[8,4] get-tuple-element({TUP} %loop), index=3
+}}
+"""
+
+
+def test_trip_count_from_condition_constant():
+    out = hlo_stats.analyze(scanned_matmul(trips=10))
+    assert out["dot_flops"] == 10 * DOT_FLOPS
+    assert out["n_computations"] == 3
+
+
+def test_single_trip_without_loop_constant_is_not_multiplied():
+    assert hlo_stats.analyze(scanned_matmul(trips=1))["dot_flops"] == DOT_FLOPS
+
+
+def test_known_trip_count_annotation_wins_over_condition():
+    out = hlo_stats.analyze(scanned_matmul(trips=10, known_trip_count=7))
+    assert out["dot_flops"] == 7 * DOT_FLOPS
+
+
+def test_traffic_scales_with_trip_count():
+    t1 = hlo_stats.analyze(scanned_matmul(trips=1))["traffic_bytes"]
+    t10 = hlo_stats.analyze(scanned_matmul(trips=10))["traffic_bytes"]
+    # entry-computation traffic is trip-independent; the body's is x10.
+    # body per trip: dot (out 128B + operands 512+256) + f32 add (3x128B)
+    # + s32 add (3x4B) = 1292.
+    assert t10 - t1 == 9 * 1292.0
+
+
+def test_cap_differencing_isolates_per_iteration_cost():
+    # The autotuner's hlo_profile recipe: compile at two caps, difference.
+    lo = hlo_stats.analyze(scanned_matmul(trips=8))
+    hi = hlo_stats.analyze(scanned_matmul(trips=24))
+    per_iter = (hi["dot_flops"] - lo["dot_flops"]) / 16.0
+    assert per_iter == DOT_FLOPS
+
+
+def test_nested_loop_trip_counts_multiply():
+    hlo = f"""HloModule nested
+
+%inner_body ({TUP}) -> {TUP} {{
+  %ip0 = {TUP} parameter(0)
+  %ii = s32[] get-tuple-element({TUP} %ip0), index=0
+  %il = f32[8,16] get-tuple-element({TUP} %ip0), index=1
+  %ir = f32[16,4] get-tuple-element({TUP} %ip0), index=2
+  %ia = f32[8,4] get-tuple-element({TUP} %ip0), index=3
+  %iprod = f32[8,4] dot(f32[8,16] %il, f32[16,4] %ir), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %ione = s32[] constant(1)
+  %inext = s32[] add(s32[] %ii, s32[] %ione)
+  ROOT %iout = {TUP} tuple(s32[] %inext, f32[8,16] %il, f32[16,4] %ir, f32[8,4] %iprod)
+}}
+
+%inner_cond ({TUP}) -> pred[] {{
+  %icp = {TUP} parameter(0)
+  %ici = s32[] get-tuple-element({TUP} %icp), index=0
+  %icl = s32[] constant(5)
+  ROOT %iclt = pred[] compare(s32[] %ici, s32[] %icl), direction=LT
+}}
+
+%outer_body ({TUP}) -> {TUP} {{
+  %op0 = {TUP} parameter(0)
+  %oloop = {TUP} while({TUP} %op0), condition=%inner_cond, body=%inner_body
+  ROOT %oout = {TUP} tuple({TUP} %oloop)
+}}
+
+%outer_cond ({TUP}) -> pred[] {{
+  %ocp = {TUP} parameter(0)
+  %oci = s32[] get-tuple-element({TUP} %ocp), index=0
+  %ocl = s32[] constant(3)
+  ROOT %oclt = pred[] compare(s32[] %oci, s32[] %ocl), direction=LT
+}}
+
+ENTRY %main (f32[8,16], f32[16,4]) -> f32[8,4] {{
+  %a = f32[8,16] parameter(0)
+  %w = f32[16,4] parameter(1)
+  %zero = s32[] constant(0)
+  %zacc = f32[8,4] constant(0)
+  %init = {TUP} tuple(s32[] %zero, f32[8,16] %a, f32[16,4] %w, f32[8,4] %zacc)
+  %loop = {TUP} while({TUP} %init), condition=%outer_cond, body=%outer_body
+  ROOT %result = f32[8,4] get-tuple-element({TUP} %loop), index=3
+}}
+"""
+    assert hlo_stats.analyze(hlo)["dot_flops"] == 3 * 5 * DOT_FLOPS
+
+
+def test_fusion_body_traffic_skipped_but_dot_flops_kept():
+    hlo = """HloModule fused
+
+%fcomp (f32[8,16], f32[16,4]) -> f32[8,4] {
+  %fa = f32[8,16] parameter(0)
+  %fw = f32[16,4] parameter(1)
+  %fdot = f32[8,4] dot(f32[8,16] %fa, f32[16,4] %fw), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %fneg = f32[8,4] negate(f32[8,4] %fdot)
+}
+
+ENTRY %main (f32[8,16], f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16] parameter(0)
+  %w = f32[16,4] parameter(1)
+  ROOT %fused = f32[8,4] fusion(f32[8,16] %a, f32[16,4] %w), kind=kLoop, calls=%fcomp
+}
+"""
+    out = hlo_stats.analyze(hlo)
+    assert out["dot_flops"] == DOT_FLOPS  # dots count inside fusion bodies
+    # ...but internal traffic does not: only the fusion boundary counts
+    # (out 8*4*4 + operands 8*16*4 + 16*4*4 = 896 bytes).
+    assert out["traffic_bytes"] == 896.0
+
+
+def test_all_reduce_wire_bytes_are_twice_output():
+    hlo = """HloModule coll
+
+%adder (f32[], f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %x, f32[] %y)
+}
+
+ENTRY %main (f32[128]) -> f32[128] {
+  %p = f32[128] parameter(0)
+  ROOT %ar = f32[128] all-reduce(f32[128] %p), to_apply=%adder
+}
+"""
+    out = hlo_stats.analyze(hlo)
+    assert out["collectives"]["all-reduce"] == 2.0 * 128 * 4
+    assert out["collective_total"] == 2.0 * 128 * 4
+
+
+def test_trip_count_from_fused_condition_constant():
+    # Optimized dumps fold ``iter < cap`` into a fusion the condition
+    # calls; the cap constant lives in the fusion body, not inline.
+    # constant(0) also appears there (counter compare) and must not
+    # zero the trip count.
+    hlo = f"""HloModule fused_cond
+
+%body ({TUP}) -> {TUP} {{
+  %p0 = {TUP} parameter(0)
+  %iter = s32[] get-tuple-element({TUP} %p0), index=0
+  %lhs = f32[8,16] get-tuple-element({TUP} %p0), index=1
+  %rhs = f32[16,4] get-tuple-element({TUP} %p0), index=2
+  %acc = f32[8,4] get-tuple-element({TUP} %p0), index=3
+  %prod = f32[8,4] dot(f32[8,16] %lhs, f32[16,4] %rhs), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %iter, s32[] %one)
+  ROOT %out = {TUP} tuple(s32[] %next, f32[8,16] %lhs, f32[16,4] %rhs, f32[8,4] %prod)
+}}
+
+%ccmp (s32[]) -> pred[] {{
+  %cparam = s32[] parameter(0)
+  %czero = s32[] constant(0)
+  %climit = s32[] constant(9)
+  %cge = pred[] compare(s32[] %cparam, s32[] %czero), direction=GE
+  ROOT %clt = pred[] compare(s32[] %cparam, s32[] %climit), direction=LT
+}}
+
+%cond ({TUP}) -> pred[] {{
+  %cp0 = {TUP} parameter(0)
+  %citer = s32[] get-tuple-element({TUP} %cp0), index=0
+  ROOT %cfused = pred[] fusion(s32[] %citer), kind=kLoop, calls=%ccmp
+}}
+
+ENTRY %main (f32[8,16], f32[16,4]) -> f32[8,4] {{
+  %a = f32[8,16] parameter(0)
+  %w = f32[16,4] parameter(1)
+  %zero = s32[] constant(0)
+  %zacc = f32[8,4] constant(0)
+  %init = {TUP} tuple(s32[] %zero, f32[8,16] %a, f32[16,4] %w, f32[8,4] %zacc)
+  %loop = {TUP} while({TUP} %init), condition=%cond, body=%body
+  ROOT %result = f32[8,4] get-tuple-element({TUP} %loop), index=3
+}}
+"""
+    assert hlo_stats.analyze(hlo)["dot_flops"] == 9 * DOT_FLOPS
+
+
+def test_compiled_solver_per_iteration_features():
+    # End to end against a live compiler: the autotuner's cap-differencing
+    # recipe must recover nonzero per-iteration features from the real
+    # (optimized) simplex driver, whose loop bound XLA folds into a
+    # condition-side fusion.
+    pytest.importorskip("jax")
+    from repro.runtime import autotune
+
+    prof = autotune.hlo_profile(6, 5, batch=2, caps=(6, 12))
+    assert prof["dot_flops_per_iter"] > 0
+    assert prof["traffic_bytes_per_iter"] > 0
+    # whole-solve totals at the higher cap dominate the lower cap's
+    assert prof["dot_flops"] > 0
+
+
+def test_empty_and_loopless_modules_are_safe():
+    assert hlo_stats.analyze("")["dot_flops"] == 0.0
+    out = hlo_stats.analyze(scanned_matmul(trips=10).split("%cond")[0])
+    assert out["dot_flops"] >= 0.0  # dangling body: no crash
+
+
+@pytest.mark.parametrize("trips", [2, 16])
+def test_summarize_matches_analyze(trips):
+    hlo = scanned_matmul(trips=trips)
+    assert (
+        hlo_stats.summarize(hlo)["total"]
+        == hlo_stats.analyze(hlo)["collective_total"]
+    )

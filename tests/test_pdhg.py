@@ -352,7 +352,7 @@ def test_vmem_fallback_routes_through_table_and_names_backend():
 
     old = ops.VMEM_BUDGET_BYTES
     ops.VMEM_BUDGET_BYTES = 1  # force every shape over budget
-    backends._WARN_ONCE.clear()
+    backends.reset_warnings()
     try:
         with warnings.catch_warnings(record=True) as caught:
             warnings.simplefilter("always")
@@ -369,7 +369,7 @@ def test_vmem_fallback_routes_through_table_and_names_backend():
         assert any("routing to the xla backend" in m for m in messages)
     finally:
         ops.VMEM_BUDGET_BYTES = old
-        backends._WARN_ONCE.clear()
+        backends.reset_warnings()
 
 
 def test_vmem_fallback_fitting_shape_runs_kernel():

@@ -65,7 +65,8 @@ def test_spec_column_map():
 def test_spec_default_is_compact():
     assert DEFAULT_LAYOUT == "compact"
     assert TableauSpec(4, 4).layout == "compact"
-    assert SolveOptions().layout == "compact"
+    assert SolveOptions().layout is None  # open knob: tuner/DEFAULT fills it
+    assert SolveOptions().effective_layout == "compact"
 
 
 def test_spec_from_tableau_recovers_layout():
